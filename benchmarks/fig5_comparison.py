@@ -1,0 +1,104 @@
+"""Figure 5: Storm vs eRPC vs Lock-free_FaRM vs Async_LITE on key-value
+lookups.
+
+Every system runs on the SAME simulated protocol core; what differs is
+exactly what differed in the paper:
+  * Storm(oversub)  — one-two-sided, fine-grained 128B reads
+  * eRPC            — two-sided only (send/recv semantics): every lookup is
+                      an RPC + per-message receive posting + app-level
+                      congestion control; a no-CC variant drops the CC term
+  * Lock-free_FaRM  — one-sided only with 8x larger reads (width-8 buckets,
+                      hopscotch-style: item guaranteed in the neighborhood)
+  * Async_LITE      — RPC-only through the kernel: adds the syscall/locking
+                      serialization term
+
+Modeled per-op costs use the calibrated ModelFabric (EXPERIMENTS.md §Fig5);
+protocol metrics (bytes, fractions) come from the simulator run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import (ModelFabric, csv_line, modeled_throughput_per_node,
+                    populate, time_jit)
+from repro.core import hybrid as hy
+from repro.core import slots as sl
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport
+
+LANES = 32
+KEYS_PER_NODE = 192
+FAB = ModelFabric()
+
+
+def run_system(name, n_nodes, *, width: int, use_onesided: bool,
+               extra_cpu: float, oversub: bool = True, lanes=LANES):
+    n_buckets = 1024 if oversub else 128
+    cfg = ht.HashTableConfig(n_nodes=n_nodes, n_buckets=n_buckets,
+                             bucket_width=width, n_overflow=KEYS_PER_NODE,
+                             max_chain=12)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(n_nodes)
+    state = ht.init_cluster_state(cfg)
+    state, (klo, khi) = populate(cfg, layout, t, state, KEYS_PER_NODE)
+
+    rng = np.random.RandomState(11)
+    src = rng.randint(0, n_nodes, (n_nodes, lanes))
+    idx = rng.randint(0, KEYS_PER_NODE, (n_nodes, lanes))
+    kl = jnp.asarray(np.asarray(klo)[src, idx])
+    kh = jnp.asarray(np.asarray(khi)[src, idx])
+
+    @jax.jit
+    def round_fn(state):
+        st, _, found, val, ver, node, sidx, m = hy.hybrid_lookup(
+            t, state, kl, kh, cfg, layout, use_onesided=use_onesided)
+        return st, found, m
+
+    (state, found, m), dt = time_jit(round_fn, state)
+    assert bool(found.all())
+    ops = n_nodes * lanes
+    rpc_frac = float(m.rpc_fallback) / float(m.total)
+    wire_b = float(m.wire.total_bytes) / ops
+    reads_per_op = 1.0 if use_onesided else 0.0
+    dma = (width * sl.SLOT_BYTES / 1024.0) * FAB.dma_seg_us_per_kb \
+        if (use_onesided and width > 1) else 0.0
+    mops = modeled_throughput_per_node(
+        reads_per_op=reads_per_op, rpcs_per_op=rpc_frac,
+        wire_bytes_per_op=wire_b, lanes=lanes,
+        extra_cpu_us_per_op=extra_cpu + dma)
+    csv_line(f"fig5/{name}/n{n_nodes}", dt / ops * 1e6,
+             f"modeled_Mops_node={mops:.2f};rpc_frac={rpc_frac:.2f};"
+             f"bytes_op={wire_b:.0f}")
+    return mops
+
+
+def main(node_counts=(4, 8, 16)):
+    res = {}
+    for n in node_counts:
+        storm = run_system("storm_oversub", n, width=1, use_onesided=True,
+                           extra_cpu=0.0)
+        erpc = run_system("erpc", n, width=1, use_onesided=False,
+                          extra_cpu=2 * FAB.recv_post_us + FAB.app_cc_us)
+        erpc_nocc = run_system("erpc_nocc", n, width=1, use_onesided=False,
+                               extra_cpu=2 * FAB.recv_post_us)
+        farm = run_system("lockfree_farm", n, width=8, use_onesided=True,
+                          extra_cpu=0.0)
+        lite = run_system("async_lite", n, width=1, use_onesided=False,
+                          extra_cpu=FAB.lite_serial_us)
+        res[n] = dict(storm=storm, erpc=erpc, erpc_nocc=erpc_nocc,
+                      farm=farm, lite=lite)
+    for n, r in res.items():
+        print(f"# n={n}: storm/erpc={r['storm']/r['erpc']:.2f}x "
+              f"(paper 3.3x), storm/farm={r['storm']/r['farm']:.2f}x "
+              f"(paper 3.6x), storm/lite={r['storm']/r['lite']:.2f}x "
+              f"(paper 17.1x), erpc_nocc/erpc={r['erpc_nocc']/r['erpc']:.2f}x "
+              f"(paper 1.53x)")
+        assert r["storm"] > r["erpc"] > r["lite"]
+        assert r["storm"] > r["farm"] > r["lite"]
+    return res
+
+
+if __name__ == "__main__":
+    main()

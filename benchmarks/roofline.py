@@ -1,0 +1,216 @@
+"""Roofline analysis over the dry-run artifacts (deliverable g).
+
+Terms per (arch x shape x mesh), all in SECONDS per step per chip, against
+TPU v5e-class constants (197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI):
+
+  compute    = FLOPs_exec / peak — executed FLOPs from the ANALYTIC model
+               (6·N_active·tokens style + attention terms + remat recompute);
+               the XLA CPU cost analysis counts while bodies ONCE (trip
+               counts ignored), so the compiled counter is reported only as
+               a diagnostic column (xla_flops).
+  memory     = HBM bytes from a documented analytic traffic model
+               (optimizer update + gathered-weight passes + activation
+               save/restore + KV-cache streaming).
+  collective = per-device wire bytes parsed from the optimized HLO with
+               while-loop trip counts APPLIED (dryrun.parse_collectives),
+               with ring/bidirectional factors per op.
+
+MODEL/EXEC ratio = useful FLOPs / executed FLOPs (<1 under remat recompute &
+masked-block waste).  roofline_frac = useful compute time / step bound —
+the number §Perf hillclimbs.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def wire_bytes(op: str, size: int, g: int) -> float:
+    g = max(g, 2)
+    if op == "all-reduce":
+        return 2 * (g - 1) / g * size
+    if op == "all-gather":
+        return (g - 1) / g * size
+    if op == "reduce-scatter":
+        return (g - 1) * size
+    if op == "all-to-all":
+        return (g - 1) / g * size
+    return float(size)  # collective-permute
+
+
+def _attn_flops(cfg, B, S, mult):
+    """Attention matmul FLOPs (4·B·S^2·H·hd per layer, x0.5 causal)."""
+    if not cfg.has_attention:
+        return 0.0
+    Hhd = cfg.n_heads * cfg.head_dim
+    if cfg.family == "hybrid":
+        napps = cfg.n_layers // max(cfg.shared_attn_every, 1)
+        return mult * 4 * B * S * S * Hhd * napps * 0.5
+    if cfg.local_global_pattern == 2 and cfg.sliding_window:
+        Lg = cfg.n_layers // 2
+        return mult * 4 * B * S * Hhd * (
+            Lg * S * 0.5 + Lg * min(cfg.sliding_window, S))
+    a = mult * 4 * B * S * S * Hhd * cfg.n_layers * 0.5
+    if cfg.is_encdec:
+        a += mult * 4 * B * (cfg.encoder_seq ** 2 * Hhd * cfg.encoder_layers * 0.5
+                             + S * cfg.encoder_seq * Hhd * cfg.n_layers)
+    return a
+
+
+def flops_model(cfg, shape, chips):
+    """(useful_flops, executed_flops) per device.
+
+    Executed adds: remat re-forward (train: fwd 2 + bwd 4 + refwd 2 = 8 vs
+    useful 6) and the seq-CP causal waste (2x attention for archs whose
+    heads don't shard — qwen2.5/qwen1.5; DESIGN §5)."""
+    N = cfg.n_active_params()
+    B, S = shape.global_batch, shape.seq_len
+    seq_cp_waste = 2.0 if (cfg.has_attention and cfg.n_heads % 16 != 0) else 1.0
+    if shape.kind == "train":
+        useful = 6.0 * N * B * S + 3 * _attn_flops(cfg, B, S, 1.0)
+        executed = 8.0 * N * B * S + 4 * _attn_flops(cfg, B, S, seq_cp_waste)
+    elif shape.kind == "prefill":
+        useful = 2.0 * N * B * S + _attn_flops(cfg, B, S, 1.0)
+        executed = 2.0 * N * B * S + _attn_flops(cfg, B, S, seq_cp_waste)
+    else:  # decode
+        Hhd = cfg.n_heads * cfg.head_dim if cfg.has_attention else 0
+        napps = (cfg.n_layers // max(cfg.shared_attn_every, 1)
+                 if cfg.family == "hybrid" else cfg.n_layers)
+        attn = 4.0 * B * S * Hhd * napps
+        useful = 2.0 * N * B + attn
+        executed = useful
+    return useful / chips, executed / chips
+
+
+def hbm_model(cfg, shape, chips, multi):
+    """Analytic per-device HBM traffic (bytes/step) — documented coarse
+    model: optimizer state r/w, gathered-weight passes, activation
+    save+reload, cache streaming."""
+    N = cfg.n_params()
+    Na = cfg.n_active_params()
+    B, S = shape.global_batch, shape.seq_len
+    tp = 16
+    dp = chips // tp
+    b_loc = max(B // dp, 1)
+    d = cfg.d_model
+    L = cfg.n_layers + cfg.encoder_layers
+    if shape.kind == "train":
+        opt = 36.0 * N / chips            # master/m/v r+w (24) + grad r/w (12)
+        weights = 3 * 2.0 * N / tp        # fwd + re-fwd + bwd passes, bf16/tp
+        acts = 4.0 * b_loc * S * d * 2 * L  # save + reload + recompute traffic
+        return opt + weights + acts
+    params_serve = 2.0 * N / tp
+    if shape.kind == "prefill":
+        acts = 2.0 * b_loc * S * d * 2 * L
+        cache = _cache_bytes(cfg, b_loc, S)
+        return params_serve + acts + cache
+    # decode: read weights (active only for MoE) + stream the cache
+    cache = _cache_bytes(cfg, b_loc, S)
+    return 2.0 * Na / tp + cache + 2.0 * b_loc * d * 2 * L
+
+
+def _cache_bytes(cfg, b_loc, S):
+    tp = 16
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        kv = (cfg.n_layers * b_loc * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2)
+        if cfg.is_encdec:
+            kv += (cfg.n_layers * b_loc * cfg.encoder_seq
+                   * cfg.n_kv_heads * cfg.head_dim * 2 * 2)
+        return kv / tp
+    ssm = (cfg.n_layers * b_loc * cfg.ssm_heads * cfg.ssm_state
+           * cfg.ssm_head_dim * 4 * 2) / tp
+    if cfg.family == "hybrid":
+        napps = cfg.n_layers // max(cfg.shared_attn_every, 1)
+        ssm += (napps * b_loc * S * cfg.n_kv_heads * cfg.head_dim * 2 * 2) / tp
+    return ssm
+
+
+def analyze(path: pathlib.Path):
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+    from repro.configs import SHAPES
+    from repro.configs.registry import get
+
+    rows = []
+    for f in sorted(path.glob("*.json")):
+        if "__" not in f.stem:
+            continue
+        d = json.loads(f.read_text())
+        if d.get("status") != "ok":
+            if d.get("status") == "skipped":
+                rows.append({"cell": f.stem, "status": "skipped",
+                             "why": d.get("skipped", d.get("error", ""))})
+            continue
+        cfg = get(d["arch"])
+        shape = SHAPES[d["shape"]]
+        multi = d["mesh"] == "multi"
+        chips = 512 if multi else 256
+        useful, executed = flops_model(cfg, shape, chips)
+        t_comp = executed / PEAK_FLOPS
+        hbm = hbm_model(cfg, shape, chips, multi)
+        t_mem = hbm / HBM_BW
+        coll_wire = 0.0
+        for op, info in d.get("collectives", {}).items():
+            for gk, b in info.get("by_group", {}).items():
+                coll_wire += wire_bytes(op, b, int(gk))
+        t_coll = coll_wire / LINK_BW
+        bound, dom = max((t_comp, "compute"), (t_mem, "memory"),
+                         (t_coll, "collective"))
+        rows.append({
+            "cell": f.stem, "status": "ok", "arch": d["arch"],
+            "shape": d["shape"], "mesh": d["mesh"], "kind": d.get("kind"),
+            "t_compute_ms": t_comp * 1e3, "t_memory_ms": t_mem * 1e3,
+            "t_collective_ms": t_coll * 1e3, "dominant": dom,
+            "useful_flops": useful, "executed_flops": executed,
+            "useful_ratio": useful / max(executed, 1),
+            "roofline_frac": (useful / PEAK_FLOPS) / bound,
+            "collective_bytes_wire": coll_wire,
+            "hbm_bytes": hbm,
+            "xla_flops": d["cost"].get("flops", 0.0),
+            "xla_bytes": d["cost"].get("bytes accessed", 0.0),
+        })
+    return rows
+
+
+def to_markdown(rows):
+    out = ["| cell | kind | compute ms | memory ms | collective ms | "
+           "dominant | useful/exec | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['cell']} | skipped | — | — | — | — | — | "
+                       f"{r['why'][:60]} |")
+            continue
+        out.append(
+            f"| {r['cell']} | {r['kind']} | {r['t_compute_ms']:.3f} | "
+            f"{r['t_memory_ms']:.3f} | {r['t_collective_ms']:.3f} | "
+            f"**{r['dominant']}** | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = analyze(RESULTS)
+    print(to_markdown(rows))
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"\n# {len(ok)} cells analyzed")
+    for crit, keyf in [
+        ("worst roofline fraction", lambda r: r["roofline_frac"]),
+        ("most collective-bound",
+         lambda r: -r["t_collective_ms"] / max(r["t_compute_ms"], 1e-9)),
+    ]:
+        pick = sorted(ok, key=keyf)[:4]
+        print(f"# {crit}: " + ", ".join(
+            f"{p['cell']} ({keyf(p):.3f})" for p in pick))
+    (RESULTS / "roofline.md").write_text(to_markdown(rows))
+    (RESULTS / "roofline.json").write_text(json.dumps(rows, indent=2))
+
+
+if __name__ == "__main__":
+    main()

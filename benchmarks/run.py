@@ -1,0 +1,66 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig4 fig6  # a subset
+
+CSV lines: name,us_per_call,derived.  The roofline section reads the
+dry-run artifacts under benchmarks/results/ (produced by
+``python -m repro.launch.dryrun --all --mesh both``).
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+ALL = ["fig4", "fig5", "fig6", "table5", "fig7", "physseg", "hybrid",
+       "roofline"]
+
+
+def main() -> None:
+    want = sys.argv[1:] or ALL
+    print("name,us_per_call,derived")
+    if "fig4" in want:
+        import fig4_lookups
+        fig4_lookups.main(node_counts=(4, 8, 16))
+    if "fig5" in want:
+        import fig5_comparison
+        fig5_comparison.main(node_counts=(4, 8, 16))
+    if "fig6" in want:
+        import fig6_tatp
+        fig6_tatp.main(node_counts=(4, 8))
+    if "table5" in want:
+        import table5_latency
+        table5_latency.main()
+    if "fig7" in want:
+        import fig7_emulation
+        fig7_emulation.main()
+    if "physseg" in want:
+        import physseg
+        physseg.main()
+    if "hybrid" in want:
+        import hybrid_ablation
+        hybrid_ablation.main()
+    if "roofline" in want:
+        results = pathlib.Path(__file__).resolve().parent / "results"
+        if any(results.glob("*__*.json")):
+            import roofline
+            rows = roofline.analyze(results)
+            ok = [r for r in rows if r["status"] == "ok"]
+            for r in ok:
+                bound = max(r["t_compute_ms"], r["t_memory_ms"],
+                            r["t_collective_ms"])
+                print(f"roofline/{r['cell']},{bound*1e3:.1f},"
+                      f"dominant={r['dominant']};useful={r['useful_ratio']:.2f};"
+                      f"comp_ms={r['t_compute_ms']:.3f};"
+                      f"mem_ms={r['t_memory_ms']:.3f};"
+                      f"coll_ms={r['t_collective_ms']:.3f}")
+            (results / "roofline.md").write_text(roofline.to_markdown(rows))
+        else:
+            print("roofline/SKIPPED,0,run repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape_applicable  # noqa: F401

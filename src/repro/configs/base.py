@@ -1,0 +1,190 @@
+"""Architecture + shape configuration schema.
+
+Every assigned architecture is a frozen ModelConfig; every assigned input
+shape a ShapeConfig.  ``smoke()`` derives the reduced same-family config used
+by CPU smoke tests; full configs are only ever lowered abstractly
+(ShapeDtypeStruct) by the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                       # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    # attention flavour
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    attn_softcap: Optional[float] = None
+    logit_softcap: Optional[float] = None
+    sliding_window: Optional[int] = None
+    local_global_pattern: int = 0     # 0: all-global; 2: alternate local/global
+    post_norms: bool = False          # gemma2 post-attn/post-mlp norms
+    embed_scale: bool = False         # gemma multiplies embeddings by sqrt(d)
+    tie_embeddings: bool = True
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    router_renorm: bool = False       # deepseek: softmax-all -> select -> renorm
+    capacity_factor: float = 1.25
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    conv_width: int = 4
+    ssm_chunk: int = 256
+    # hybrid (zamba2): shared transformer block applied every k mamba layers
+    shared_attn_every: int = 0
+    shared_d_ff: int = 0
+    # enc-dec (whisper)
+    encoder_layers: int = 0
+    encoder_seq: int = 0              # precomputed frame embeddings (stub)
+    # vlm (llava): precomputed patch embeddings (stub)
+    n_patches: int = 0
+    # source provenance (assignment table)
+    source: str = ""
+
+    @property
+    def vocab_padded(self) -> int:
+        """Embedding/LM-head rows padded so the vocab dim always shards over
+        the model axis (granite 49155, whisper 51865, mamba 50280 do not
+        divide 16).  Pad logits are masked to -inf everywhere."""
+        return -(-self.vocab_size // 512) * 512
+
+    @property
+    def is_ssm(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def is_hybrid(self) -> bool:
+        return self.family == "hybrid"
+
+    @property
+    def has_attention(self) -> bool:
+        return not self.is_ssm
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def subquadratic(self) -> bool:
+        """May `long_500k` be lowered?  Only SSM/hybrid archs (DESIGN §6)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    def n_params(self) -> int:
+        """Total parameter count (approx, for roofline MODEL_FLOPS)."""
+        d, L = self.d_model, self.n_layers
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        per = 0
+        if self.family in ("ssm", "hybrid"):
+            di, H, G, N = self.d_inner, self.ssm_heads, self.ssm_groups, self.ssm_state
+            per += 2 * d * di + 2 * d * G * N + d * H     # in projections
+            per += self.conv_width * (di + 2 * G * N)     # conv
+            per += di * d + di                            # out proj + norm
+            per += 3 * H
+        if self.has_attention and self.family != "hybrid":
+            hd = self.head_dim
+            per += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+            per += self.n_heads * hd * d
+        if self.family == "hybrid" and self.shared_attn_every:
+            hd = self.head_dim
+            shared = (d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+                      + self.n_heads * hd * d + 3 * d * self.shared_d_ff)
+        else:
+            shared = 0
+        if self.is_moe:
+            per += d * self.n_experts                      # router
+            per += self.n_experts * 3 * d * self.d_ff      # experts
+            per += self.n_shared_experts * 3 * d * self.d_ff
+        elif self.family not in ("ssm", "hybrid"):
+            per += 3 * d * self.d_ff
+        total = emb + L * per + shared
+        if self.is_encdec:
+            enc_per = (d * self.n_heads * self.head_dim * 2
+                       + 2 * d * self.n_kv_heads * self.head_dim
+                       + 2 * d * self.d_ff)
+            dec_cross = (d * self.n_heads * self.head_dim * 2
+                         + 2 * d * self.n_kv_heads * self.head_dim)
+            total += self.encoder_layers * enc_per + L * dec_cross
+        return int(total)
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: only top-k experts count)."""
+        if not self.is_moe:
+            return self.n_params()
+        d, L = self.d_model, self.n_layers
+        inactive = L * (self.n_experts - self.top_k) * 3 * d * self.d_ff
+        return self.n_params() - int(inactive)
+
+    def smoke(self) -> "ModelConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            n_layers=max(2, self.local_global_pattern or 0,
+                         (self.shared_attn_every + 1) if self.shared_attn_every else 0),
+            d_model=64,
+            n_heads=4, n_kv_heads=(2 if self.n_kv_heads < self.n_heads else 4),
+            head_dim=16,
+            d_ff=128 if not self.is_moe else 32,
+            shared_d_ff=128 if self.shared_d_ff else 0,
+            vocab_size=503,
+            n_experts=min(self.n_experts, 4),
+            top_k=min(self.top_k, 2),
+            n_shared_experts=min(self.n_shared_experts, 1),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_head_dim=16 if self.ssm_state else 64,
+            ssm_chunk=32,
+            sliding_window=64 if self.sliding_window else None,
+            encoder_layers=2 if self.encoder_layers else 0,
+            encoder_seq=24 if self.encoder_seq else 0,
+            n_patches=8 if self.n_patches else 0,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                         # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped). long_500k only for sub-quadratic archs."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 500k decode KV cache is "
+                       "quadratic-history; skipped per assignment rule")
+    return True, ""

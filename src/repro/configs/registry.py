@@ -1,0 +1,22 @@
+"""Registry of the 10 assigned architectures (one module per arch)."""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import ModelConfig
+from repro.configs import (deepseek_moe_16b, gemma2_27b, glm4_9b,
+                           granite_moe_1b_a400m, llava_next_mistral_7b,
+                           mamba2_780m, qwen15_4b, qwen25_32b, whisper_medium,
+                           zamba2_1p2b)
+
+_MODULES = [granite_moe_1b_a400m, deepseek_moe_16b, gemma2_27b, qwen25_32b,
+            qwen15_4b, glm4_9b, llava_next_mistral_7b, mamba2_780m,
+            zamba2_1p2b, whisper_medium]
+
+ARCHS: Dict[str, ModelConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(ARCHS)}")
+    return ARCHS[name]

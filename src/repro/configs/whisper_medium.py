@@ -1,0 +1,10 @@
+"""whisper-medium [audio] — enc-dec 24L d_model=1024 16H (kv=16) d_ff=4096
+vocab=51865, conv frontend STUB: ``input_specs()`` provides precomputed frame
+embeddings (1500, d) per the assignment.  [arXiv:2212.04356; unverified]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096,
+    vocab_size=51865, head_dim=64, encoder_layers=24, encoder_seq=1500,
+    source="arXiv:2212.04356")

@@ -1,0 +1,11 @@
+# Storm's primary contribution as a composable JAX module: a transactional
+# dataplane for remote (sharded) data structures.
+#   slots      — MICA-style 128B inline slot codec (key|version|lock|value)
+#   regions    — contiguous arenas + flat/paged addressing (physical segments)
+#   transport  — RC-fabric analogue: dest-major exchange on sim or mesh
+#   onesided   — one-sided READ/WRITE (owner does address translation only)
+#   rpc        — write-based RPC: inbox + single completion mask + handlers
+#   hybrid     — one-two-sided operations (Algorithm 1)
+#   tx         — OCC transactions (execute/lock/validate/commit, Fig. 3)
+#   cost_model — the bytes/round-trip napkin math behind every hybrid choice
+from repro.core import cost_model, hybrid, onesided, regions, rpc, slots, transport, tx  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.core.datastructs import hashtable  # noqa: F401

@@ -1,0 +1,430 @@
+"""Distributed MICA-style hash table (Storm §5.5) speaking the Storm
+data-structure interface (Table 3): ``lookup_start`` / ``lookup_end`` /
+``rpc_handler``.
+
+Layout per node (one contiguous arena — §5.1):
+
+  [ slots region : (n_buckets * bucket_width + n_overflow) slots of 128 B ]
+  [ alloc        : 1 word — bump allocator for overflow slots              ]
+  [ scratch      : 1 word — write sink for masked lanes                    ]
+
+A bucket is `bucket_width` consecutive slots.  When a bucket fills up,
+colliding items go to overflow slots linked from the LAST bucket slot's
+next_ptr (the paper: "Colliding items are kept in a linked list when the
+bucket capacity is exceeded") — the pointer chase that motivates the
+one-two-sided hybrid.
+
+Knobs reproduce the paper's configurations:
+  * bucket_width=1 + low occupancy  -> Storm(oversub): 128 B one-sided reads
+  * bucket_width=8                  -> FaRM emulation: 8x larger reads,
+                                       no chase in the common case
+  * client address cache            -> Storm(perfect) / DrTM+H-style caching
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import regions as rg
+from repro.core import rpc as R
+from repro.core import slots as sl
+
+
+@dataclasses.dataclass(frozen=True)
+class HashTableConfig:
+    n_nodes: int
+    n_buckets: int                 # per node, power of two
+    bucket_width: int = 1
+    n_overflow: int = 256          # per node
+    max_chain: int = 8             # bounded chain walk in the handler
+    cache_slots: int = 0           # client-side address cache (0 = off)
+
+    @property
+    def n_bucket_slots(self) -> int:
+        return self.n_buckets * self.bucket_width
+
+    @property
+    def n_slots(self) -> int:
+        return self.n_bucket_slots + self.n_overflow
+
+    @property
+    def max_probe(self) -> int:
+        return self.bucket_width + self.max_chain
+
+    # record: [op, key_lo, key_hi, aux, value...]
+    @property
+    def record_words(self) -> int:
+        return 4 + sl.VALUE_WORDS
+
+    # reply: [status, aux (slot idx), version, value...]
+    @property
+    def reply_words(self) -> int:
+        return 3 + sl.VALUE_WORDS
+
+
+def build_layout(cfg: HashTableConfig) -> rg.RegionTable:
+    tbl = rg.RegionTable()
+    tbl.register("slots", cfg.n_slots * sl.SLOT_WORDS)
+    tbl.register("alloc", 1)
+    tbl.register("scratch", 1)     # must stay LAST (write sink)
+    return tbl
+
+
+def init_node_state(cfg: HashTableConfig, layout: rg.RegionTable):
+    """Arena with every slot formatted empty."""
+    arena = rg.make_arena(layout)
+    slots_r = layout["slots"]
+    empty = jnp.tile(sl.make_empty_slot(), (cfg.n_slots,))
+    arena = lax.dynamic_update_slice(arena, empty, (slots_r.base,))
+    return {"arena": arena}
+
+
+def init_cluster_state(cfg: HashTableConfig):
+    layout = build_layout(cfg)
+    one = init_node_state(cfg, layout)
+    return jax.tree.map(lambda x: jnp.tile(x[None], (cfg.n_nodes,) + (1,) * x.ndim), one)
+
+
+# ---------------------------------------------------------------------------
+# Addressing helpers
+# ---------------------------------------------------------------------------
+def home_of(cfg: HashTableConfig, key_lo, key_hi):
+    """(node, bucket) for a key."""
+    h1, h2 = sl.hash_key(key_lo, key_hi)
+    node = (h1 % jnp.uint32(cfg.n_nodes)).astype(jnp.int32)
+    bucket = h2 % jnp.uint32(cfg.n_buckets)
+    return node, bucket
+
+
+def bucket_offset(cfg: HashTableConfig, layout: rg.RegionTable, bucket):
+    base = layout["slots"].base
+    return jnp.uint32(base) + bucket.astype(jnp.uint32) * jnp.uint32(
+        cfg.bucket_width * sl.SLOT_WORDS)
+
+
+def slot_idx_offset(layout: rg.RegionTable, slot_idx):
+    return rg.slot_offset(layout["slots"], slot_idx)
+
+
+# ---------------------------------------------------------------------------
+# Client side: lookup_start / lookup_end (Storm Table 3)
+# ---------------------------------------------------------------------------
+def lookup_start(cfg: HashTableConfig, layout: rg.RegionTable, key_lo, key_hi,
+                 cache=None):
+    """Client-side metadata lookup: where *might* the item live?
+
+    Returns (node, offset, read_slots, cache_hit).  With an address cache
+    (Storm(perfect) / DrTM+H), a hit yields the EXACT slot (1-slot read);
+    otherwise the home bucket (bucket_width-slot read).
+    """
+    node, bucket = home_of(cfg, key_lo, key_hi)
+    off = bucket_offset(cfg, layout, bucket)
+    hit = jnp.zeros(jnp.shape(key_lo), bool)
+    if cache is not None and cfg.cache_slots > 0:
+        cidx = (sl._mix32(key_lo) ^ key_hi) % jnp.uint32(cfg.cache_slots)
+        tag_ok = ((cache["key_lo"][cidx] == key_lo)
+                  & (cache["key_hi"][cidx] == key_hi))
+        cnode = cache["node"][cidx].astype(jnp.int32)
+        coff = slot_idx_offset(layout, cache["slot"][cidx])
+        hit = tag_ok
+        node = jnp.where(hit, cnode, node)
+        off = jnp.where(hit, coff, off)
+    return node, off, hit
+
+
+def lookup_end(cfg: HashTableConfig, buf, key_lo, key_hi, cache_hit=None):
+    """Validate a one-sided read result (Storm Algorithm 1 line 7).
+
+    buf: (..., read_slots * SLOT_WORDS).  Returns (success, value, local_idx)
+    where local_idx is the matching slot's index within the read (for address
+    caching).  On a cache-hit read only one slot is present.
+    """
+    shp = buf.shape[:-1]
+    width = buf.shape[-1] // sl.SLOT_WORDS
+    slots_ = buf.reshape(shp + (width, sl.SLOT_WORDS))
+    m = sl.slot_matches(slots_, key_lo[..., None], key_hi[..., None])
+    success = jnp.any(m, axis=-1)
+    local_idx = jnp.argmax(m, axis=-1)
+    value = jnp.take_along_axis(
+        sl.slot_value(slots_), local_idx[..., None, None], axis=-2
+    )[..., 0, :]
+    return success, value, local_idx.astype(jnp.uint32)
+
+
+def cache_update(cfg: HashTableConfig, cache, key_lo, key_hi, node, slot_idx,
+                 valid):
+    """lookup_end's caching duty: remember exact addresses learned from RPC
+    replies (or validated reads) for future one-sided reads."""
+    if cache is None or cfg.cache_slots == 0:
+        return cache
+    cidx = (sl._mix32(key_lo) ^ key_hi) % jnp.uint32(cfg.cache_slots)
+    def upd(arr, val):
+        cur = arr[cidx]
+        return arr.at[cidx].set(jnp.where(valid, val.astype(arr.dtype), cur))
+    return {
+        "key_lo": upd(cache["key_lo"], key_lo),
+        "key_hi": upd(cache["key_hi"], key_hi),
+        "node": upd(cache["node"], node.astype(jnp.uint32)),
+        "slot": upd(cache["slot"], slot_idx),
+    }
+
+
+def init_cache(cfg: HashTableConfig):
+    if cfg.cache_slots == 0:
+        return None
+    n = cfg.cache_slots
+    return {
+        "key_lo": jnp.full((n,), sl.EMPTY_KEY, jnp.uint32),
+        "key_hi": jnp.zeros((n,), jnp.uint32),
+        "node": jnp.zeros((n,), jnp.uint32),
+        "slot": jnp.zeros((n,), jnp.uint32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Owner side: the walk + rpc_handler
+# ---------------------------------------------------------------------------
+def _read_slot(cfg, layout, arena, slot_idx):
+    off = slot_idx_offset(layout, slot_idx)
+    return lax.dynamic_slice(arena, (off.astype(jnp.int32),), (sl.SLOT_WORDS,))
+
+
+def _write_slot(cfg, layout, arena, slot_idx, slot, enabled):
+    off = slot_idx_offset(layout, slot_idx).astype(jnp.int32)
+    cur = lax.dynamic_slice(arena, (off,), (sl.SLOT_WORDS,))
+    new = jnp.where(enabled, slot, cur)
+    return lax.dynamic_update_slice(arena, new, (off,))
+
+
+def find(cfg: HashTableConfig, layout: rg.RegionTable, arena, key_lo, key_hi):
+    """Bounded bucket + chain walk.  Returns a dict with:
+    found, slot_idx, slot, tail_idx (last probed chain slot),
+    free_idx (first empty in-bucket slot), has_free.
+    """
+    _, bucket = home_of(cfg, key_lo, key_hi)
+    first = (bucket * jnp.uint32(cfg.bucket_width)).astype(jnp.uint32)
+
+    def body(step, st):
+        (cur, found, fidx, fslot, tail, free_idx, has_free, alive) = st
+        slot = _read_slot(cfg, layout, arena, cur)
+        is_match = sl.slot_key_lo(slot) == key_lo
+        is_match &= sl.slot_key_hi(slot) == key_hi
+        is_empty = sl.slot_is_empty(slot)
+        new_found = found | (is_match & alive)
+        fidx = jnp.where(is_match & alive & ~found, cur, fidx)
+        fslot = jnp.where(is_match & alive & ~found, slot, fslot)
+        in_bucket = step < cfg.bucket_width
+        has_free_new = has_free | (is_empty & in_bucket & alive)
+        free_idx = jnp.where(is_empty & in_bucket & alive & ~has_free, cur, free_idx)
+        tail = jnp.where(alive, cur, tail)
+        nxt = jnp.where(step < cfg.bucket_width - 1, cur + 1, sl.slot_next(slot))
+        alive_next = alive & (nxt != sl.NULL_PTR)
+        return (jnp.where(alive_next, nxt, cur), new_found, fidx, fslot,
+                tail, free_idx, has_free_new, alive_next)
+
+    init = (first, jnp.asarray(False), jnp.uint32(0), jnp.zeros((sl.SLOT_WORDS,), jnp.uint32),
+            first, jnp.uint32(0), jnp.asarray(False), jnp.asarray(True))
+    cur, found, fidx, fslot, tail, free_idx, has_free, _ = lax.fori_loop(
+        0, cfg.max_probe, body, init)
+    return dict(found=found, slot_idx=fidx, slot=fslot, tail_idx=tail,
+                free_idx=free_idx, has_free=has_free)
+
+
+def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
+    """The serial (mutating-capable) rpc_handler.  Record layout:
+    [op, key_lo, key_hi, aux, value...]; reply [status, aux, value...]."""
+    alloc_off = layout["alloc"].base
+    ovf_base = cfg.n_bucket_slots
+
+    def fn(state, rec, valid):
+        arena = state["arena"]
+        op = rec[0]
+        key_lo, key_hi, aux = rec[1], rec[2], rec[3]
+        val = rec[4:4 + sl.VALUE_WORDS]
+        f = find(cfg, layout, arena, key_lo, key_hi)
+        slot = f["slot"]
+        alloc = arena[alloc_off]
+
+        status = jnp.uint32(R.ST_BAD_OP)
+        out_aux = jnp.uint32(0)
+        out_ver = jnp.uint32(0)
+        out_val = jnp.zeros((sl.VALUE_WORDS,), jnp.uint32)
+        write_idx = jnp.uint32(0)
+        write_slot = jnp.zeros((sl.SLOT_WORDS,), jnp.uint32)
+        do_write = jnp.asarray(False)
+        link_tail = jnp.asarray(False)       # also update tail slot's next_ptr
+        bump_alloc = jnp.asarray(False)
+
+        is_nop = op == R.OP_NOP
+        # ---- LOOKUP ------------------------------------------------------
+        is_lookup = op == R.OP_LOOKUP
+        lk_ok = f["found"] & (sl.slot_version(slot) % 2 == 0)
+        status = jnp.where(is_lookup,
+                           jnp.where(lk_ok, R.ST_OK, R.ST_NOT_FOUND).astype(jnp.uint32),
+                           status)
+        out_aux = jnp.where(is_lookup, f["slot_idx"], out_aux)
+        out_ver = jnp.where(is_lookup, sl.slot_version(slot), out_ver)
+        out_val = jnp.where(is_lookup & lk_ok, sl.slot_value(slot), out_val)
+
+        # ---- INSERT / UPDATE (unconditional write API, outside tx) --------
+        is_ins = op == R.OP_INSERT
+        is_upd = op == R.OP_UPDATE
+        locked_other = sl.slot_lock(slot) != 0
+        # update in place when found & unlocked
+        upd_ok = f["found"] & ~locked_other
+        new_ver = sl.slot_version(slot) + 2
+        upd_slot = sl.pack_slot(key_lo, key_hi, new_ver, 0, sl.slot_next(slot), val)
+        # fresh insert: in-bucket free slot, else overflow alloc + link
+        can_ovf = alloc < jnp.uint32(cfg.n_overflow)
+        ins_idx = jnp.where(f["has_free"], f["free_idx"], ovf_base + alloc)
+        ins_possible = f["has_free"] | can_ovf
+        ins_slot = sl.pack_slot(key_lo, key_hi, 0, 0, sl.NULL_PTR, val)
+
+        ins_found = is_ins & f["found"]
+        ins_fresh = is_ins & ~f["found"]
+        status = jnp.where(is_ins, jnp.where(
+            f["found"], jnp.where(upd_ok, R.ST_OK, R.ST_LOCK_FAIL),
+            jnp.where(ins_possible, R.ST_OK, R.ST_NO_SPACE)).astype(jnp.uint32), status)
+        status = jnp.where(is_upd, jnp.where(
+            f["found"], jnp.where(upd_ok, R.ST_OK, R.ST_LOCK_FAIL),
+            R.ST_NOT_FOUND).astype(jnp.uint32), status)
+
+        wr_upd = (ins_found | (is_upd & f["found"])) & upd_ok
+        wr_ins = ins_fresh & ins_possible
+        do_write = do_write | wr_upd | wr_ins
+        write_idx = jnp.where(wr_upd, f["slot_idx"], write_idx)
+        write_slot = jnp.where(wr_upd, upd_slot, write_slot)
+        write_idx = jnp.where(wr_ins, ins_idx, write_idx)
+        write_slot = jnp.where(wr_ins, ins_slot, write_slot)
+        link_tail = link_tail | (wr_ins & ~f["has_free"])
+        bump_alloc = bump_alloc | (wr_ins & ~f["has_free"])
+        out_aux = jnp.where(wr_upd | wr_ins, write_idx, out_aux)
+
+        # ---- DELETE --------------------------------------------------------
+        is_del = op == R.OP_DELETE
+        del_ok = f["found"] & ~locked_other
+        del_slot = slot.at[sl.KEY_LO].set(sl.EMPTY_KEY)
+        del_slot = del_slot.at[sl.VERSION].set(sl.slot_version(slot) + 2)
+        status = jnp.where(is_del, jnp.where(
+            f["found"], jnp.where(del_ok, R.ST_OK, R.ST_LOCK_FAIL),
+            R.ST_NOT_FOUND).astype(jnp.uint32), status)
+        do_write = do_write | (is_del & del_ok)
+        write_idx = jnp.where(is_del & del_ok, f["slot_idx"], write_idx)
+        write_slot = jnp.where(is_del & del_ok, del_slot, write_slot)
+
+        # ---- LOCK (tx execution phase) ------------------------------------
+        is_lock = op == R.OP_LOCK
+        tag = aux  # caller-unique nonzero tag
+        lock_free = sl.slot_lock(slot) == 0
+        lock_ok = f["found"] & lock_free
+        lk_slot = slot.at[sl.LOCK].set(tag)
+        # lock-insert for new keys: a locked, odd-version placeholder
+        ph_slot = sl.pack_slot(key_lo, key_hi, 1, tag, sl.NULL_PTR,
+                               jnp.zeros((sl.VALUE_WORDS,), jnp.uint32))
+        lock_ins = is_lock & ~f["found"] & ins_possible
+        status = jnp.where(is_lock, jnp.where(
+            f["found"], jnp.where(lock_free, R.ST_OK, R.ST_LOCK_FAIL),
+            jnp.where(ins_possible, R.ST_OK, R.ST_NO_SPACE)).astype(jnp.uint32), status)
+        do_write = do_write | (is_lock & lock_ok) | lock_ins
+        write_idx = jnp.where(is_lock & lock_ok, f["slot_idx"], write_idx)
+        write_slot = jnp.where(is_lock & lock_ok, lk_slot, write_slot)
+        write_idx = jnp.where(lock_ins, ins_idx, write_idx)
+        write_slot = jnp.where(lock_ins, ph_slot, write_slot)
+        link_tail = link_tail | (lock_ins & ~f["has_free"])
+        bump_alloc = bump_alloc | (lock_ins & ~f["has_free"])
+        out_aux = jnp.where(is_lock & (lock_ok | lock_ins),
+                            jnp.where(lock_ok, f["slot_idx"], ins_idx), out_aux)
+        # version + current value at lock time (read-for-update, Fig. 3)
+        out_ver = jnp.where(is_lock, sl.slot_version(slot), out_ver)
+        out_val = jnp.where(is_lock & lock_ok, sl.slot_value(slot), out_val)
+
+        # ---- COMMIT_UNLOCK / ABORT_UNLOCK (direct slot addressing) ---------
+        is_commit = op == R.OP_COMMIT_UNLOCK
+        is_abort = op == R.OP_ABORT_UNLOCK
+        tgt = aux  # slot idx from the LOCK reply
+        tslot = _read_slot(cfg, layout, arena, tgt)
+        own = sl.slot_lock(tslot) != 0  # trust protocol: tag check relaxed to nonzero
+        cm_ver = (sl.slot_version(tslot) | jnp.uint32(1)) + jnp.uint32(1)  # -> even, bumped
+        cm_slot = sl.pack_slot(sl.slot_key_lo(tslot), sl.slot_key_hi(tslot),
+                               cm_ver, 0, sl.slot_next(tslot), val)
+        was_placeholder = sl.slot_version(tslot) % 2 == 1
+        ab_slot = jnp.where(was_placeholder,
+                            tslot.at[sl.KEY_LO].set(sl.EMPTY_KEY).at[sl.LOCK].set(0)
+                                 .at[sl.VERSION].set(cm_ver),
+                            tslot.at[sl.LOCK].set(0))
+        status = jnp.where(is_commit | is_abort,
+                           jnp.where(own, R.ST_OK, R.ST_LOCK_FAIL).astype(jnp.uint32),
+                           status)
+        do_write = do_write | ((is_commit | is_abort) & own)
+        write_idx = jnp.where((is_commit | is_abort) & own, tgt, write_idx)
+        write_slot = jnp.where(is_commit & own, cm_slot, write_slot)
+        write_slot = jnp.where(is_abort & own, ab_slot, write_slot)
+
+        # ---- READ_VERSION ---------------------------------------------------
+        is_rdv = op == R.OP_READ_VERSION
+        vslot = _read_slot(cfg, layout, arena, aux)
+        status = jnp.where(is_rdv, jnp.uint32(R.ST_OK), status)
+        out_aux = jnp.where(is_rdv, aux, out_aux)
+        out_ver = jnp.where(is_rdv, sl.slot_version(vslot), out_ver)
+
+        # ---- apply ----------------------------------------------------------
+        do_write = do_write & valid & ~is_nop
+        arena = _write_slot(cfg, layout, arena, write_idx, write_slot, do_write)
+        # link tail -> new overflow slot
+        tail_slot = _read_slot(cfg, layout, arena, f["tail_idx"])
+        linked = tail_slot.at[sl.NEXT_PTR].set(write_idx)
+        arena = _write_slot(cfg, layout, arena, f["tail_idx"], linked,
+                            link_tail & do_write)
+        new_alloc = jnp.where(bump_alloc & do_write, alloc + 1, alloc)
+        arena = arena.at[alloc_off].set(new_alloc)
+
+        status = jnp.where(is_nop | ~valid, jnp.uint32(R.ST_BAD_OP), status)
+        reply = jnp.concatenate(
+            [jnp.stack([status, out_aux, out_ver]), out_val]).astype(jnp.uint32)
+        return {"arena": arena}, reply
+
+    return R.Handler(fn=fn, reply_words=cfg.reply_words, serial=True)
+
+
+def make_lookup_handler_vector(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
+    """Read-only vectorized LOOKUP handler (used by lookup-dominated
+    workloads where the inbox is known to be non-mutating)."""
+
+    def fn(state, recs, mask):
+        arena = state["arena"]
+        S, C, W = recs.shape
+        flat = recs.reshape(S * C, W)
+
+        def one(rec):
+            key_lo, key_hi = rec[1], rec[2]
+            f = find(cfg, layout, arena, key_lo, key_hi)
+            ok = f["found"] & (sl.slot_version(f["slot"]) % 2 == 0)
+            status = jnp.where(rec[0] == R.OP_LOOKUP,
+                               jnp.where(ok, R.ST_OK, R.ST_NOT_FOUND),
+                               R.ST_BAD_OP).astype(jnp.uint32)
+            return jnp.concatenate([
+                jnp.stack([status, f["slot_idx"], sl.slot_version(f["slot"])]),
+                jnp.where(ok, sl.slot_value(f["slot"]),
+                          jnp.zeros((sl.VALUE_WORDS,), jnp.uint32))]).astype(jnp.uint32)
+
+        rep = jax.vmap(one)(flat).reshape(S, C, cfg.reply_words)
+        return rep
+
+    return R.Handler(fn=fn, reply_words=cfg.reply_words, serial=False)
+
+
+def make_record(op, key_lo, key_hi, aux=None, value=None):
+    """Assemble (..., record_words) request records."""
+    key_lo = jnp.asarray(key_lo, jnp.uint32)
+    shp = key_lo.shape
+    aux = jnp.zeros(shp, jnp.uint32) if aux is None else jnp.asarray(aux, jnp.uint32)
+    if value is None:
+        value = jnp.zeros(shp + (sl.VALUE_WORDS,), jnp.uint32)
+    op = jnp.broadcast_to(jnp.asarray(op, jnp.uint32), shp)
+    head = jnp.stack([op, key_lo, jnp.asarray(key_hi, jnp.uint32), aux], axis=-1)
+    return jnp.concatenate([head, jnp.asarray(value, jnp.uint32)], axis=-1)

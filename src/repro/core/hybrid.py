@@ -1,0 +1,113 @@
+"""One-two-sided hybrid operations (Storm §4.4, Algorithm 1).
+
+    1. lookup_start  -> where might the item be? (client-side metadata/cache)
+    2. remote_read   -> ONE-SIDED fine-grained read of that location
+    3. lookup_end    -> did we get it? (key/version/lock validation)
+    4. if not        -> WRITE-BASED RPC; the owner chases the pointers
+    5. lookup_end    -> cache the learned address for next time
+
+All lanes move through the phases together (SPMD); the RPC phase is issued
+with a per-lane `enabled` mask so only failed lanes consume handler work and
+wire bytes — the batched analogue of "switch to RPC for this operation".
+
+Modes reproduce the paper's configurations:
+  * use_onesided=False           -> "Storm" (RPC-only baseline in Fig. 4)
+  * use_onesided=True            -> "Storm(oversub)" one-two-sided
+  * use_onesided=True + cache    -> toward "Storm(perfect)" (address caching)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import onesided as osd
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import Transport, WireStats
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HybridMetrics:
+    onesided_success: jnp.ndarray   # lanes satisfied by the one-sided read
+    rpc_fallback: jnp.ndarray       # lanes that needed the RPC
+    total: jnp.ndarray
+    wire: WireStats
+
+    @staticmethod
+    def zero():
+        z = jnp.zeros((), jnp.float32)
+        return HybridMetrics(z, z, z, WireStats.zero())
+
+
+def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
+                  layout, *, cache=None, use_onesided: bool = True,
+                  rpc_serial: bool = False, capacity: Optional[int] = None):
+    """Batched one-two-sided lookup.
+
+    key_lo/key_hi: (N_local, B) uint32.
+    Returns (state, cache, found (N,B), value (N,B,V), version (N,B) uint32,
+             owner (N,B) int32, slot_idx (N,B) uint32, HybridMetrics).
+    """
+    B = key_lo.shape[-1]
+    if cache is not None and cfg.cache_slots > 0:
+        node, off, hit = jax.vmap(
+            lambda c, kl, kh: ht.lookup_start(cfg, layout, kl, kh, c)
+        )(cache, key_lo, key_hi)
+    else:
+        node, off, hit = ht.lookup_start(cfg, layout, key_lo, key_hi, None)
+    read_words = cfg.bucket_width * sl.SLOT_WORDS
+
+    if use_onesided:
+        buf, ovf, s_read = osd.remote_read(
+            t, state["arena"], node, off, length=read_words, capacity=capacity)
+        success, value, local_idx = ht.lookup_end(cfg, buf, key_lo, key_hi)
+        # version of the matched slot (for OCC validation bookkeeping)
+        slots_v = buf.reshape(buf.shape[:-1] + (cfg.bucket_width, sl.SLOT_WORDS))
+        version = jnp.take_along_axis(
+            slots_v[..., sl.VERSION], local_idx[..., None].astype(jnp.int32),
+            axis=-1)[..., 0]
+        # global slot idx of the hit (cache hits read the exact slot)
+        _, bucket = ht.home_of(cfg, key_lo, key_hi)
+        base_idx = bucket * jnp.uint32(cfg.bucket_width) + local_idx
+        cached_idx = (off - jnp.uint32(layout["slots"].base)) // jnp.uint32(sl.SLOT_WORDS)
+        slot_idx = jnp.where(hit, cached_idx + local_idx, base_idx)
+        success = success & ~ovf
+        need_rpc = ~success
+    else:
+        success = jnp.zeros(key_lo.shape, bool)
+        value = jnp.zeros(key_lo.shape + (sl.VALUE_WORDS,), jnp.uint32)
+        version = jnp.zeros(key_lo.shape, jnp.uint32)
+        slot_idx = jnp.zeros(key_lo.shape, jnp.uint32)
+        s_read = WireStats.zero()
+        need_rpc = jnp.ones(key_lo.shape, bool)
+
+    # ---- phase 2: write-based RPC for the failed lanes --------------------
+    recs = ht.make_record(R.OP_LOOKUP, key_lo, key_hi)
+    handler = (ht.make_rpc_handler(cfg, layout) if rpc_serial
+               else ht.make_lookup_handler_vector(cfg, layout))
+    state, replies, ovf2, s_rpc = R.rpc_call(
+        t, state, node, recs, handler, capacity=capacity, enabled=need_rpc)
+    rpc_ok = need_rpc & (replies[..., 0] == R.ST_OK) & ~ovf2
+    value = jnp.where(rpc_ok[..., None], replies[..., 3:], value)
+    version = jnp.where(rpc_ok, replies[..., 2], version)
+    slot_idx = jnp.where(rpc_ok, replies[..., 1], slot_idx)
+    found = success | rpc_ok
+
+    # ---- lookup_end caching duty ------------------------------------------
+    if cache is not None and cfg.cache_slots > 0:
+        cache = jax.vmap(
+            lambda c, kl, kh, nd, si, v: ht.cache_update(cfg, c, kl, kh, nd, si, v)
+        )(cache, key_lo, key_hi, node, slot_idx, found)
+
+    metrics = HybridMetrics(
+        onesided_success=jnp.sum(success.astype(jnp.float32)),
+        rpc_fallback=jnp.sum(need_rpc.astype(jnp.float32)),
+        total=jnp.asarray(success.size, jnp.float32),
+        wire=s_read + s_rpc,
+    )
+    return state, cache, found, value, version, node, slot_idx, metrics

@@ -1,0 +1,96 @@
+"""One-sided remote reads and writes (Storm §4.2, §5.1).
+
+The defining property of a one-sided op is that the OWNER RUNS NO APPLICATION
+LOGIC: the initiator names (node, offset, length) and the owner side is pure
+data movement.  Here the owner-side computation is exactly an address
+translation (flat or paged) plus a gather/scatter — the work an RDMA NIC does
+in hardware — and nothing else.  Contrast with rpc.py, where the owner runs a
+registered handler (pointer chasing, lock logic, ...).
+
+All ops are batched: each node issues B lanes per round (the coroutine
+pipeline).  One round = ONE network round trip for every lane in flight.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import regions as rg
+from repro.core.transport import (Transport, WireStats, pick_replies,
+                                  route_by_dest, wire_for)
+
+
+@partial(jax.named_call, name="storm_remote_read")
+def remote_read(t: Transport, arenas, dest, offsets, *, length: int,
+                capacity: Optional[int] = None,
+                mode: rg.AddressMode | None = None, page_tables=None):
+    """Batched one-sided READ.
+
+    arenas:  (N_local, arena_words) uint32 — this shard's node states
+    dest:    (N_local, B) int32  — target node of each lane
+    offsets: (N_local, B) uint32 — word offset inside the target arena
+    length:  static words per read (e.g. a 128B slot = 32 words)
+
+    Returns (data (N_local, B, length), overflow (N_local, B) bool, WireStats).
+    """
+    B = dest.shape[-1]
+    cap = capacity or B
+    buf, mask, pos, ovf = jax.vmap(
+        lambda d, p: route_by_dest(d, p, t.n_nodes, cap))(dest, offsets[..., None])
+    inbox = t.exchange(buf)          # (N_local, N_src, C, 1)
+    # Owner side: translation + gather ONLY.
+    if mode is not None and mode.kind == "paged":
+        gather = jax.vmap(lambda a, pt, off: rg.arena_read(a, off, length, mode, pt))
+        data = gather(arenas, page_tables, inbox[..., 0])
+    else:
+        gather = jax.vmap(lambda a, off: rg.arena_read(a, off, length))
+        data = gather(arenas, inbox[..., 0])
+    back = t.exchange(data)          # (N_local, N_dst, C, length) dest-major
+    out = jax.vmap(pick_replies)(back, dest, pos, ovf)
+    stats = wire_for(mask, req_words=1, reply_words=length)
+    return out, ovf, stats
+
+
+@partial(jax.named_call, name="storm_remote_write")
+def remote_write(t: Transport, arenas, dest, offsets, values, *,
+                 capacity: Optional[int] = None,
+                 mode: rg.AddressMode | None = None, page_tables=None,
+                 enabled=None):
+    """Batched one-sided WRITE (no reply payload — transport-level ack only).
+
+    values: (N_local, B, L) uint32; enabled: optional (N_local, B) bool.
+    Returns (new_arenas, overflow, WireStats).
+    """
+    B = dest.shape[-1]
+    L = values.shape[-1]
+    cap = capacity or B
+    if enabled is None:
+        enabled = jnp.ones(dest.shape, bool)
+    payload = jnp.concatenate(
+        [offsets[..., None].astype(jnp.uint32), values.astype(jnp.uint32)], axis=-1)
+    buf, mask, pos, ovf = jax.vmap(
+        lambda d, p: route_by_dest(d, p, t.n_nodes, cap))(dest, payload)
+    # suppress disabled lanes at the source: clear their mask cells
+    live = enabled & ~ovf
+    srcmask = jnp.zeros_like(mask)
+    srcmask = jax.vmap(lambda m, d, p, l: m.at[d, p].set(l))(srcmask, dest, pos, live)
+    mask = mask & srcmask
+    inbox = t.exchange(buf)
+    inbox_mask = t.exchange(mask)
+
+    def owner_scatter(a, recs, msk, pt):
+        off = recs[..., 0]
+        val = recs[..., 1:]
+        return rg.arena_write(a, off, val, mode=mode, page_table=pt,
+                              enabled=msk)
+
+    if mode is not None and mode.kind == "paged":
+        arenas = jax.vmap(owner_scatter)(arenas, inbox, inbox_mask, page_tables)
+    else:
+        arenas = jax.vmap(lambda a, r, m: owner_scatter(a, r, m, None))(
+            arenas, inbox, inbox_mask)
+    stats = wire_for(mask, req_words=1 + L, reply_words=0)
+    return arenas, ovf, stats

@@ -1,0 +1,141 @@
+"""Contiguous memory regions (Storm §4.3, §5.1) and the paged/physical-segment
+addressing modes (§6.2.5).
+
+Storm's principle: register FEW, LARGE, CONTIGUOUS regions so the NIC's MPT
+stays tiny, and use *physical segments* so the MTT disappears entirely.  The
+TPU/XLA analogue: every node owns ONE arena buffer (a flat uint32 array) out
+of which all data structures are carved at static offsets.  One buffer means
+one allocation, static addressing, donation-friendly update-in-place, and no
+per-object buffer zoo in the HLO — the compiler-level equivalent of a single
+MPT entry.
+
+Two addressing modes are implemented so the paper's physical-segment
+experiment can be reproduced:
+
+  * ``flat``  — "physical segment": address = offset.  One bounds check.
+  * ``paged`` — "4KB pages": every access walks a page table (the MTT):
+                phys = page_table[offset // page] * page + offset % page.
+                This models the extra dependent load RDMA NICs pay per
+                translation; on TPU it shows up as an extra gather per access.
+
+`RegionTable` is the MPT: (region_id -> base, size).  Storm keeps it minimal —
+so do we: a handful of regions per node (hash buckets, overflow pool,
+allocator state, RPC rings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import slots as sl
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    region_id: int
+    base: int          # word offset in the arena
+    size: int          # words
+
+    @property
+    def end(self) -> int:
+        return self.base + self.size
+
+
+@dataclasses.dataclass
+class RegionTable:
+    """The MPT analogue. Registration happens at setup time (off the data
+    path, like Storm's kernel-mediated physical-segment registration)."""
+    regions: Dict[str, Region] = dataclasses.field(default_factory=dict)
+    next_base: int = 0
+    next_id: int = 0
+
+    def register(self, name: str, size_words: int) -> Region:
+        if name in self.regions:
+            raise ValueError(f"region {name!r} already registered")
+        r = Region(self.next_id, self.next_base, size_words)
+        self.regions[name] = r
+        self.next_base += size_words
+        self.next_id += 1
+        return r
+
+    @property
+    def total_words(self) -> int:
+        return self.next_base
+
+    def __getitem__(self, name: str) -> Region:
+        return self.regions[name]
+
+
+def make_arena(table: RegionTable, dtype=jnp.uint32) -> jnp.ndarray:
+    """One contiguous arena per node — the Storm allocator's big chunk."""
+    return jnp.zeros((table.total_words,), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Addressing modes
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AddressMode:
+    """flat = physical segment; paged = per-page translation (MTT walk)."""
+    kind: str = "flat"            # "flat" | "paged"
+    page_words: int = 1024        # 4 KiB pages in uint32 words
+
+    def make_page_table(self, total_words: int, key=None) -> jnp.ndarray | None:
+        if self.kind == "flat":
+            return None
+        n_pages = -(-total_words // self.page_words)
+        # Identity mapping by default; tests may permute it to prove the
+        # translation is actually honoured.
+        return jnp.arange(n_pages, dtype=jnp.uint32)
+
+    def translate(self, page_table, offsets):
+        """offsets: uint32 word offsets -> physical word offsets."""
+        if self.kind == "flat":
+            return offsets
+        page = offsets // self.page_words
+        within = offsets % self.page_words
+        phys_page = page_table[page]
+        return phys_page * self.page_words + within
+
+
+def arena_read(arena, offsets, length: int, mode: AddressMode | None = None,
+               page_table=None):
+    """Gather `length` consecutive words starting at each offset.
+
+    This is the owner-side data movement of a one-sided READ: pure gather,
+    no application logic.  offsets: (...,) uint32 -> (..., length).
+    """
+    idx = offsets[..., None].astype(jnp.uint32) + jnp.arange(length, dtype=jnp.uint32)
+    if mode is not None and mode.kind == "paged":
+        idx = mode.translate(page_table, idx)
+    return arena[idx]
+
+
+def arena_write(arena, offsets, values, mode: AddressMode | None = None,
+                page_table=None, enabled=None):
+    """Scatter consecutive words at each offset (one-sided WRITE).
+
+    values: (..., L); enabled: optional (...,) bool mask (lanes whose write is
+    suppressed — needed for the masked RPC fallback lanes).
+    """
+    length = values.shape[-1]
+    idx = offsets[..., None].astype(jnp.uint32) + jnp.arange(length, dtype=jnp.uint32)
+    if mode is not None and mode.kind == "paged":
+        idx = mode.translate(page_table, idx)
+    flat_idx = idx.reshape(-1)
+    flat_val = values.reshape(-1).astype(arena.dtype)
+    if enabled is not None:
+        keep = jnp.broadcast_to(enabled[..., None], idx.shape).reshape(-1)
+        # Redirect suppressed lanes to a scratch word (last word of arena is
+        # reserved as the write sink by every layout built in this module).
+        flat_idx = jnp.where(keep, flat_idx, jnp.uint32(arena.shape[0] - 1))
+        cur = arena[flat_idx]
+        flat_val = jnp.where(keep, flat_val, cur)
+    return arena.at[flat_idx].set(flat_val, mode="drop")
+
+
+def slot_offset(region: Region, slot_idx):
+    """Word offset of slot `slot_idx` inside a slot-array region."""
+    return jnp.uint32(region.base) + jnp.asarray(slot_idx, jnp.uint32) * jnp.uint32(sl.SLOT_WORDS)

@@ -1,0 +1,127 @@
+"""Write-based RPC (Storm §5.2).
+
+Storm implements RPC with ``rdma_write_with_imm``: the request is WRITTEN into
+a receive ring at the callee, a completion with an immediate header pops out
+of ONE shared completion queue, the handler runs, and the reply is written
+back the same way.  Our realization:
+
+  * request records are written into per-owner INBOX buffers by an all-to-all
+    (= the one-sided write of the request),
+  * the cell coordinates (src, slot) play the role of the immediate header
+    identifying sender and coroutine lane,
+  * ONE fused validity mask per inbox = the single completion queue,
+  * the owner runs the registered handler over its inbox, then replies are
+    written back by the mirror all-to-all.
+
+Handlers come in two flavours:
+  * ``serial``  — mutating ops.  Records are folded sequentially through the
+    node state (lax.scan), which gives genuine mutual-exclusion semantics for
+    locks/inserts: the order of the scan is the serialization order.
+  * ``vector``  — read-only ops (lookups): vectorized across the inbox.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.transport import (Transport, WireStats, pick_replies,
+                                  route_by_dest, wire_for)
+
+# Well-known opcodes (data structures may extend >= 16)
+OP_NOP = 0
+OP_LOOKUP = 1
+OP_INSERT = 2
+OP_UPDATE = 3
+OP_DELETE = 4
+OP_LOCK = 5           # lock write-set entry (returns version at lock time)
+OP_COMMIT_UNLOCK = 6  # install value, version += 2, unlock
+OP_ABORT_UNLOCK = 7   # release lock without installing
+OP_READ_VERSION = 8   # validation re-read by RPC (fallback path)
+
+# Reply status codes (word 0 of every reply)
+ST_OK = 0
+ST_NOT_FOUND = 1
+ST_LOCK_FAIL = 2
+ST_NO_SPACE = 3
+ST_BAD_OP = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class Handler:
+    """A registered rpc_handler (Storm Table 3)."""
+    fn: Callable            # see serial/vector signatures below
+    reply_words: int
+    serial: bool = True
+
+
+def serial_apply(handler_fn, state, records, mask, reply_words: int):
+    """Fold records through node state in a fixed serialization order.
+
+    handler_fn(state, record (W,), valid) -> (state, reply (reply_words,))
+    records: (S, C, W); mask: (S, C) -> replies (S, C, reply_words)
+    """
+    S, C, W = records.shape
+    flat_r = records.reshape(S * C, W)
+    flat_m = mask.reshape(S * C)
+
+    def step(st, rm):
+        rec, valid = rm
+        st, rep = handler_fn(st, rec, valid)
+        return st, rep
+
+    state, flat_rep = lax.scan(step, state, (flat_r, flat_m))
+    return state, flat_rep.reshape(S, C, reply_words)
+
+
+def vector_apply(handler_fn, state, records, mask, reply_words: int):
+    """handler_fn(state, records (S,C,W), mask) -> replies (S,C,reply_words).
+    State is read-only on this path."""
+    return state, handler_fn(state, records, mask)
+
+
+@partial(jax.named_call, name="storm_rpc")
+def rpc_call(t: Transport, state, dest, records, handler: Handler, *,
+             capacity: Optional[int] = None, enabled=None):
+    """Batched write-based RPC round (one round trip for B lanes/node).
+
+    state:   pytree with leading node axis (N_local, ...)
+    dest:    (N_local, B) int32
+    records: (N_local, B, W) uint32 (word 0 must be the opcode)
+    enabled: optional (N_local, B) bool — lanes that actually issue the RPC.
+             Disabled lanes still occupy a cell (shape static) but carry
+             OP_NOP and are masked out of the handler and the wire stats.
+
+    Returns (state, replies (N_local, B, R), overflow (N_local, B), WireStats)
+    """
+    B = dest.shape[-1]
+    cap = capacity or B
+    if enabled is not None:
+        nop = records.at[..., 0].set(jnp.uint32(OP_NOP))
+        records = jnp.where(enabled[..., None], records, nop)
+    buf, mask, pos, ovf = jax.vmap(
+        lambda d, p: route_by_dest(d, p, t.n_nodes, cap))(dest, records)
+    if enabled is not None:
+        live = enabled & ~ovf
+        srcmask = jnp.zeros_like(mask)
+        srcmask = jax.vmap(lambda m, d, p, l: m.at[d, p].set(l))(
+            srcmask, dest, pos, live)
+        mask = mask & srcmask
+    inbox = t.exchange(buf)
+    inbox_mask = t.exchange(mask)
+
+    apply_fn = serial_apply if handler.serial else vector_apply
+
+    def per_node(st, recs, msk):
+        return apply_fn(handler.fn, st, recs, msk, handler.reply_words)
+
+    state, replies = jax.vmap(per_node)(state, inbox, inbox_mask)
+    back = t.exchange(replies)
+    out = jax.vmap(pick_replies)(back, dest, pos, ovf)
+    stats = wire_for(mask, req_words=records.shape[-1],
+                     reply_words=handler.reply_words)
+    return state, out, ovf, stats

@@ -1,0 +1,98 @@
+"""MICA-style inline slot codec (Storm §5.5).
+
+Storm achieves zero-copy by inlining all per-item metadata in the slot that is
+fetched by a single one-sided read: key, lock and version live next to the
+value.  A slot is SLOT_WORDS uint32 words (= 128 bytes, the paper's transfer
+unit: "Each data transfer, including the application-level and RPC-level
+headers, is 128 bytes in size").
+
+Layout (uint32 words):
+  [0] key_lo        [1] key_hi
+  [2] version       (seqlock: even = stable, odd = write in progress)
+  [3] lock          (0 = free, owner_tag+1 otherwise)
+  [4] next_ptr      (global slot index of overflow-chain successor; NULL_PTR = end)
+  [5..] value       (VALUE_WORDS words = 108 B payload)
+
+Everything here is branch-free and vmap-friendly: slots travel as (..., 32)
+uint32 arrays, exactly the byte image a one-sided read would return.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SLOT_WORDS = 32
+SLOT_BYTES = SLOT_WORDS * 4          # 128 B, the paper's item size
+KEY_LO, KEY_HI, VERSION, LOCK, NEXT_PTR, VALUE0 = 0, 1, 2, 3, 4, 5
+VALUE_WORDS = SLOT_WORDS - VALUE0    # 27 words = 108 B
+NULL_PTR = jnp.uint32(0xFFFFFFFF)
+EMPTY_KEY = jnp.uint32(0xFFFFFFFF)   # key_lo of an empty slot
+
+
+def make_empty_slot() -> jnp.ndarray:
+    s = jnp.zeros((SLOT_WORDS,), jnp.uint32)
+    s = s.at[KEY_LO].set(EMPTY_KEY)
+    s = s.at[NEXT_PTR].set(NULL_PTR)
+    return s
+
+
+def pack_slot(key_lo, key_hi, version, lock, next_ptr, value) -> jnp.ndarray:
+    """value: (..., VALUE_WORDS) uint32. Returns (..., SLOT_WORDS)."""
+    head = jnp.stack(
+        [jnp.asarray(key_lo, jnp.uint32),
+         jnp.asarray(key_hi, jnp.uint32),
+         jnp.asarray(version, jnp.uint32),
+         jnp.asarray(lock, jnp.uint32),
+         jnp.asarray(next_ptr, jnp.uint32)], axis=-1)
+    return jnp.concatenate([head, jnp.asarray(value, jnp.uint32)], axis=-1)
+
+
+def slot_key_lo(slot):   return slot[..., KEY_LO]
+def slot_key_hi(slot):   return slot[..., KEY_HI]
+def slot_version(slot):  return slot[..., VERSION]
+def slot_lock(slot):     return slot[..., LOCK]
+def slot_next(slot):     return slot[..., NEXT_PTR]
+def slot_value(slot):    return slot[..., VALUE0:]
+
+
+def slot_matches(slot, key_lo, key_hi):
+    """Key match & stable (even version) & unlocked — the `lookup_end`
+    validity predicate for a one-sided read (Storm Algorithm 1, line 7)."""
+    return (
+        (slot_key_lo(slot) == key_lo)
+        & (slot_key_hi(slot) == key_hi)
+        & (slot_version(slot) % 2 == 0)
+        & (slot_lock(slot) == 0)
+    )
+
+
+def slot_is_empty(slot):
+    return slot_key_lo(slot) == EMPTY_KEY
+
+
+# ---------------------------------------------------------------------------
+# Key hashing: 64-bit splittable mix done in uint32 lanes (JAX x64 stays off).
+# node id and bucket id come from independent halves of the mix so the
+# distribution across nodes is independent from the distribution over buckets.
+# ---------------------------------------------------------------------------
+_M1 = jnp.uint32(0x85EBCA6B)
+_M2 = jnp.uint32(0xC2B2AE35)
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def _mix32(x):
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 13)
+    x = x * _M2
+    x = x ^ (x >> 16)
+    return x
+
+
+def hash_key(key_lo, key_hi):
+    """Returns (h_node, h_bucket) — two decorrelated 32-bit hashes."""
+    a = _mix32(jnp.asarray(key_lo, jnp.uint32))
+    b = _mix32(jnp.asarray(key_hi, jnp.uint32) + _GOLDEN)
+    h1 = _mix32(a + b * _M1)
+    h2 = _mix32(b + a * _M2 + _GOLDEN)
+    return h1, h2

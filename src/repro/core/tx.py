@@ -1,0 +1,143 @@
+"""Storm transactional protocol (§5.4, Fig. 3): OCC + 2PC optimized for the
+dataplane's two primitives.
+
+Per transaction lane:
+  EXECUTE   read-set via one-two-sided hybrid lookups (reads buffered
+            locally), write-set read-for-update + LOCK via write-based RPC
+            (the paper locks intended writes during execution).
+  VALIDATE  re-read read-set slot versions with ONE-SIDED reads (Storm keeps
+            the remote offsets of every read-set object).
+  COMMIT    write-based RPCs install values, bump versions to even, unlock.
+  ABORT     unlock / roll back placeholder inserts for lanes whose locks
+            failed or whose validation detected a concurrent writer.
+
+Shapes are static: each lane has exactly R read keys and W write keys; lanes
+are batched B per node ("coroutines"), so a full transaction costs the same
+FIVE pipeline rounds the paper's Figure 3 shows, independent of B:
+    read (1-2 RTs: read + masked RPC) + lock (1) + validate (1) + commit (1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hybrid as hy
+from repro.core import onesided as osd
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import Transport, WireStats
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TxResult:
+    committed: jnp.ndarray        # (N, B) bool
+    read_found: jnp.ndarray       # (N, B, R) bool
+    read_values: jnp.ndarray      # (N, B, R, VALUE_WORDS)
+    locked_values: jnp.ndarray    # (N, B, W, VALUE_WORDS) read-for-update values
+    metrics: hy.HybridMetrics
+    round_trips: jnp.ndarray      # scalar
+
+
+def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
+                     read_keys, write_keys, write_values, write_enabled=None,
+                     read_enabled=None, cache=None, use_onesided: bool = True,
+                     capacity: Optional[int] = None):
+    """Execute a batch of transactions, one per lane.
+
+    read_keys:    (N, B, Rd, 2) uint32 (lo, hi)
+    write_keys:   (N, B, Wr, 2) uint32
+    write_values: (N, B, Wr, VALUE_WORDS) uint32
+    *_enabled:    optional masks (N, B, Rd/Wr) for ragged sets.
+
+    Read/write sets are assumed disjoint per lane (read-for-update goes in the
+    write set — its LOCK reply returns the current value, Fig. 3).
+    """
+    N, B, Rd = read_keys.shape[:3]
+    Wr = write_keys.shape[2]
+    if read_enabled is None:
+        read_enabled = jnp.ones((N, B, Rd), bool)
+    if write_enabled is None:
+        write_enabled = jnp.ones((N, B, Wr), bool)
+    serial_h = ht.make_rpc_handler(cfg, layout)
+    wire = WireStats.zero()
+
+    # ---------------- EXECUTE: read set (hybrid one-two-sided) -------------
+    rk_lo = read_keys[..., 0].reshape(N, B * Rd)
+    rk_hi = read_keys[..., 1].reshape(N, B * Rd)
+    state, cache, found, rvals, rvers, rnode, rslot, m = hy.hybrid_lookup(
+        t, state, rk_lo, rk_hi, cfg, layout, cache=cache,
+        use_onesided=use_onesided, rpc_serial=False, capacity=capacity)
+    wire = wire + m.wire
+    read_found = (found & read_enabled.reshape(N, B * Rd)).reshape(N, B, Rd)
+
+    # ---------------- EXECUTE: lock + read-for-update the write set --------
+    wk_lo = write_keys[..., 0].reshape(N, B * Wr)
+    wk_hi = write_keys[..., 1].reshape(N, B * Wr)
+    wnode, _, _ = ht.lookup_start(cfg, layout, wk_lo, wk_hi, None)
+    # unique nonzero lock tag per (node, lane)
+    lane = jnp.arange(B * Wr, dtype=jnp.uint32) // jnp.uint32(Wr)
+    tag = (t.node_ids().astype(jnp.uint32)[:, None] * jnp.uint32(B)
+           + lane[None, :] + jnp.uint32(1))
+    lock_recs = ht.make_record(R.OP_LOCK, wk_lo, wk_hi, aux=tag)
+    state, lrep, lovf, s_lock = R.rpc_call(
+        t, state, wnode, lock_recs, serial_h, capacity=capacity,
+        enabled=write_enabled.reshape(N, B * Wr))
+    wire = wire + s_lock
+    lock_ok = (lrep[..., 0] == R.ST_OK) & ~lovf
+    lock_slot = lrep[..., 1]
+    locked_values = lrep[..., 3:].reshape(N, B, Wr, sl.VALUE_WORDS)
+    lane_locks_ok = jnp.all(
+        (lock_ok | ~write_enabled.reshape(N, B * Wr)).reshape(N, B, Wr), axis=-1)
+
+    # ---------------- VALIDATE: one-sided re-read of read-set versions -----
+    voff = ht.slot_idx_offset(layout, rslot)
+    vbuf, vovf, s_val = osd.remote_read(
+        t, state["arena"], rnode, voff, length=sl.SLOT_WORDS, capacity=capacity)
+    cur_ver = vbuf[..., sl.VERSION]
+    cur_klo = vbuf[..., sl.KEY_LO]
+    cur_lock = vbuf[..., sl.LOCK]
+    unchanged = (cur_ver == rvers) & (cur_klo == rk_lo) & (cur_lock == 0) & ~vovf
+    # absent reads validate trivially (repeatable-read of a miss is NOT
+    # guaranteed — documented limitation, same as the paper's protocol sketch)
+    read_valid = unchanged | ~found
+    wire = wire + s_val
+    lane_valid = jnp.all(
+        (read_valid | ~read_enabled.reshape(N, B * Rd)).reshape(N, B, Rd), axis=-1)
+
+    # ---------------- COMMIT / ABORT (write-based RPCs) --------------------
+    commit_lane = lane_locks_ok & lane_valid            # (N, B)
+    commit_item = jnp.repeat(commit_lane, Wr, axis=-1)  # (N, B*Wr)
+    op = jnp.where(commit_item, jnp.uint32(R.OP_COMMIT_UNLOCK),
+                   jnp.uint32(R.OP_ABORT_UNLOCK))
+    cm_recs = ht.make_record(
+        op, wk_lo, wk_hi, aux=lock_slot,
+        value=write_values.reshape(N, B * Wr, sl.VALUE_WORDS))
+    # only lanes that actually HOLD a lock must unlock/commit
+    state, crep, covf, s_cm = R.rpc_call(
+        t, state, wnode, cm_recs, serial_h, capacity=capacity,
+        enabled=lock_ok & write_enabled.reshape(N, B * Wr))
+    wire = wire + s_cm
+
+    has_writes = jnp.any(write_enabled, axis=-1)
+    committed = jnp.where(has_writes, commit_lane, lane_valid)
+
+    metrics = hy.HybridMetrics(
+        onesided_success=m.onesided_success,
+        rpc_fallback=m.rpc_fallback,
+        total=m.total,
+        wire=wire,
+    )
+    rts = m.wire.round_trips + s_lock.round_trips + s_val.round_trips + s_cm.round_trips
+    return state, cache, TxResult(
+        committed=committed,
+        read_found=read_found,
+        read_values=rvals.reshape(N, B, Rd, sl.VALUE_WORDS),
+        locked_values=locked_values,
+        metrics=metrics,
+        round_trips=rts,
+    )

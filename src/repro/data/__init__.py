@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, synthetic_batch, batch_specs  # noqa: F401

@@ -1,0 +1,135 @@
+"""Flash attention as a Pallas TPU kernel.
+
+Grid: (batch*heads, q_blocks, kv_blocks) — kv innermost so the online-softmax
+state (m, l, acc) lives in VMEM scratch across kv iterations.  Causal /
+sliding-window blocks outside the mask are skipped with pl.when (the pair
+schedule of models.layers.block_attention realized on-chip).  GQA is handled
+by the K/V index_map (q head h reads kv head h // group).
+
+Block shapes are MXU-aligned (q_block x head_dim and kv_block x head_dim
+tiles, head_dim 64/128 in every assigned config; defaults 128x128).
+VMEM working set per step:
+    q (qb x D) + k,v (kb x D each) + acc (qb x D f32) + scores (qb x kb f32)
+    = 128x128 x (2+2+2)B + 128x128x4 x2 = ~230 KiB  << 16 MiB VMEM.
+
+Validated against kernels.ref.attention_ref in interpret mode (CPU); on TPU
+the same code lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            softcap: Optional[float], q_block: int, kv_block: int,
+            n_kv: int, seq_k: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_lo = i * q_block
+    k_lo = j * kv_block
+    needed = True
+    if causal:
+        needed = jnp.asarray(k_lo <= q_lo + q_block - 1)
+    if window is not None:
+        needed = needed & jnp.asarray(
+            k_lo + kv_block - 1 >= q_lo - (window - 1))
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)            # (qb, D)
+        k = k_ref[0].astype(jnp.float32)            # (kb, D)
+        v = v_ref[0]                                # (kb, D)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_lo + lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 0)
+        kpos = k_lo + lax.broadcasted_iota(jnp.int32, (q_block, kv_block), 1)
+        mask = kpos < seq_k
+        if causal:
+            mask &= qpos >= kpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = corr * l_prev + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = corr[:, None] * acc_ref[...] + pv
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "softcap", "q_block",
+                              "kv_block", "group", "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal=True, window=None, softcap=None,
+                         q_block=128, kv_block=128, group=1,
+                         interpret=False):
+    """q: (BHq, Sq, D); k/v: (BHkv, Sk, D) with BHq == BHkv * group.
+    Heads-major layout; see ops.flash_attention for the (B,S,H,D) wrapper."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Sk)
+    pad_q = (-Sq) % qb
+    pad_k = (-Sk) % kb
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    n_q = (Sq + pad_q) // qb
+    n_kv = (Sk + pad_k) // kb
+    scale = D ** -0.5
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
+        q_block=qb, kv_block=kb, n_kv=n_kv, seq_k=Sk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, qb, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, kb, D), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, kb, D), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qb, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq + pad_q, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qb, D), jnp.float32),   # acc
+            pltpu.VMEM((qb,), jnp.float32),     # m
+            pltpu.VMEM((qb,), jnp.float32),     # l
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

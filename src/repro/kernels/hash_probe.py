@@ -1,0 +1,77 @@
+"""Batched MICA bucket probe as a Pallas TPU kernel — the one-sided lookup
+hot path (`remote_read` + `lookup_end`) fused on-chip.
+
+TPU-native structure: the bucket indices are SCALAR-PREFETCHED and consumed
+by the arena BlockSpec index_map, so the sequential grid streams exactly the
+bucket lines the keys hash to (the NIC's gather, expressed as data-dependent
+block fetching).  One grid step = one key: load the bucket's slots, compare
+key / version-parity / lock, select the value.
+
+Layout contract: the arena's slot region starts at word 0 (hashtable
+build_layout registers "slots" first) and buckets are bucket_width slots of
+SLOT_WORDS words -> the arena can be viewed (n_buckets, width*SLOT_WORDS).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import slots as sl
+
+# reply words: [found, version, value...]
+REPLY_WORDS = 2 + sl.VALUE_WORDS
+
+
+def _kernel(bucket_idx_ref, key_lo_ref, key_hi_ref, bucket_ref, out_ref, *,
+            width: int):
+    b = pl.program_id(0)
+    key_lo = key_lo_ref[b]
+    key_hi = key_hi_ref[b]
+    slots_ = bucket_ref[0].reshape(width, sl.SLOT_WORDS)
+    ok = ((slots_[:, sl.KEY_LO] == key_lo)
+          & (slots_[:, sl.KEY_HI] == key_hi)
+          & (slots_[:, sl.VERSION] % 2 == 0)
+          & (slots_[:, sl.LOCK] == 0))
+    found = jnp.any(ok)
+    # first matching slot (argmax on bool)
+    idx = jnp.argmax(ok.astype(jnp.int32))
+    slot = slots_[idx]
+    out = jnp.zeros((REPLY_WORDS,), jnp.uint32)
+    out = out.at[0].set(found.astype(jnp.uint32))
+    out = out.at[1].set(slot[sl.VERSION])
+    val = jnp.where(found, slot[sl.VALUE0:], jnp.zeros((sl.VALUE_WORDS,), jnp.uint32))
+    out = out.at[2:].set(val)
+    out_ref[0] = out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("width", "interpret"))
+def hash_probe(arena, bucket_idx, key_lo, key_hi, *, width: int,
+               interpret: bool = False):
+    """arena: (n_words,) uint32 with slots at word 0; bucket_idx: (B,) int32;
+    key_lo/key_hi: (B,) uint32.  Returns (B, REPLY_WORDS) uint32."""
+    B = bucket_idx.shape[0]
+    line = width * sl.SLOT_WORDS
+    n_buckets = arena.shape[0] // line
+    arena2d = arena[:n_buckets * line].reshape(n_buckets, line)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, line), lambda b, bidx, klo, khi: (bidx[b], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, REPLY_WORDS), lambda b, *_: (b, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, width=width),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, REPLY_WORDS), jnp.uint32),
+        interpret=interpret,
+    )(bucket_idx.astype(jnp.int32), key_lo.astype(jnp.uint32),
+      key_hi.astype(jnp.uint32), arena2d)

@@ -1,0 +1,66 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Layout adapters + the use_pallas switch: on CPU (this container) the
+reference path or interpret mode runs; on TPU the same call sites lower the
+Mosaic kernels.  `repro.models.layers.block_attention` / `mamba2.ssd_chunked`
+are the jnp paths the dry-run lowers; these wrappers are the drop-in
+kernel-backed equivalents.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import hash_probe as hp
+from repro.kernels import ssd_scan as ss
+from repro.kernels import ref
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None,
+                    q_block=128, kv_block=128, use_pallas=None,
+                    interpret=None):
+    """q: (B, S, Hq, D); k/v: (B, S, Hkv, D) — model layout."""
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    interpret = (not on_tpu()) if interpret is None else interpret
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    if not use_pallas and not interpret:
+        from repro.models.layers import block_attention
+        return block_attention(q, k, v, causal=causal, window=window,
+                               attn_softcap=softcap, q_block=q_block,
+                               kv_block=kv_block)
+    g = Hq // Hkv
+    qh = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Sk, D)
+    out = fa.flash_attention_bhsd(qh, kh, vh, causal=causal, window=window,
+                                  softcap=softcap, q_block=q_block,
+                                  kv_block=kv_block, group=g,
+                                  interpret=interpret)
+    return out.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)
+
+
+def hash_probe(arena, bucket_idx, key_lo, key_hi, *, width,
+               use_pallas=None, interpret=None):
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    interpret = (not on_tpu()) if interpret is None else interpret
+    if not use_pallas and not interpret:
+        return ref.hash_probe_ref(arena, bucket_idx, key_lo, key_hi,
+                                  width=width)
+    return hp.hash_probe(arena, bucket_idx, key_lo, key_hi, width=width,
+                         interpret=interpret)
+
+
+def ssd_scan(xdt, dA, Bc, Cc, *, h_tile=4, use_pallas=None, interpret=None):
+    use_pallas = on_tpu() if use_pallas is None else use_pallas
+    interpret = (not on_tpu()) if interpret is None else interpret
+    if not use_pallas and not interpret:
+        return ref.ssd_scan_ref(xdt, dA, Bc, Cc)
+    return ss.ssd_scan(xdt, dA, Bc, Cc, h_tile=h_tile, interpret=interpret)

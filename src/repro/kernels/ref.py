@@ -1,0 +1,80 @@
+"""Pure-jnp oracles for every Pallas kernel (CI compares interpret-mode
+kernels against these across shape/dtype sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import slots as sl
+from repro.models.layers import attention_ref  # noqa: F401  (flash oracle)
+from repro.models.mamba2 import ssd_chunked  # noqa: F401
+
+
+def attention_ref_bhsd(q, k, v, *, causal=True, window=None, softcap=None):
+    """(BH, S, D) layout oracle wrapping models.layers.attention_ref."""
+    BH, Sq, D = q.shape
+    BHkv = k.shape[0]
+    g = BH // BHkv
+    qb = q.reshape(BHkv, g, Sq, D).transpose(0, 2, 1, 3)[None]
+    kb = k.transpose(1, 0, 2)[None]
+    vb = v.transpose(1, 0, 2)[None]
+    # attention_ref expects (B, S, H, D)
+    q4 = q.reshape(1, BH, Sq, D).transpose(0, 2, 1, 3)
+    k4 = k.reshape(1, BHkv, -1, D).transpose(0, 2, 1, 3)
+    v4 = v.reshape(1, BHkv, -1, D).transpose(0, 2, 1, 3)
+    out = attention_ref(q4, k4, v4, causal=causal, window=window,
+                        attn_softcap=softcap)
+    return out.transpose(0, 2, 1, 3).reshape(BH, Sq, D)
+
+
+def hash_probe_ref(arena, bucket_idx, key_lo, key_hi, *, width: int):
+    """Oracle for kernels.hash_probe: probe bucket slots, no chain."""
+    line = width * sl.SLOT_WORDS
+
+    def one(bi, klo, khi):
+        base = bi.astype(jnp.int32) * line
+        buf = jax.lax.dynamic_slice(arena, (base,), (line,))
+        slots_ = buf.reshape(width, sl.SLOT_WORDS)
+        ok = ((slots_[:, sl.KEY_LO] == klo)
+              & (slots_[:, sl.KEY_HI] == khi)
+              & (slots_[:, sl.VERSION] % 2 == 0)
+              & (slots_[:, sl.LOCK] == 0))
+        found = jnp.any(ok)
+        idx = jnp.argmax(ok.astype(jnp.int32))
+        slot = slots_[idx]
+        val = jnp.where(found, slot[sl.VALUE0:],
+                        jnp.zeros((sl.VALUE_WORDS,), jnp.uint32))
+        return jnp.concatenate([
+            jnp.stack([found.astype(jnp.uint32), slot[sl.VERSION]]), val])
+
+    return jax.vmap(one)(bucket_idx, key_lo, key_hi)
+
+
+def ssd_scan_ref(xdt, dA, Bc, Cc):
+    """Oracle for kernels.ssd_scan: the exact per-timestep recurrence
+        h_t = exp(dA_t) h_{t-1} + B_t xdt_t ;  y_t = C_t h_t
+    (identical semantics to models.mamba2.ssd_chunked with xdt = x*dt and
+    dA = dt*A folded in by the caller).
+
+    xdt: (B, nc, Q, H, P) f32; dA: (B, nc, Q, H); Bc/Cc: (B, nc, Q, N).
+    """
+    B, nc, Q, H, P = xdt.shape
+    S = nc * Q
+    flat = lambda t: t.reshape((B, S) + t.shape[3:])
+    state = jnp.zeros((B, H, Bc.shape[-1], P), jnp.float32)
+    xf, df = flat(xdt), flat(dA)
+    Bf, Cf = flat(Bc), flat(Cc)
+
+    def step(state, t):
+        x_t, dA_t, B_t, C_t = t
+        decay = jnp.exp(dA_t)                                    # (B,H)
+        upd = jnp.einsum("bn,bhp->bhnp", B_t, x_t)
+        state = state * decay[..., None, None] + upd
+        y_t = jnp.einsum("bn,bhnp->bhp", C_t, state)
+        return state, y_t
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(df, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    state, ys = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nc, Q, H, P)
+    return y, state

@@ -1,0 +1,110 @@
+"""Mamba2 SSD chunk scan as a Pallas TPU kernel.
+
+Grid: (B, n_head_tiles, n_chunks) — chunks innermost so the inter-chunk
+state (h_tile, N, P) persists in VMEM scratch across the sequential grid
+(the recurrence never leaves the chip; only per-chunk inputs stream in).
+
+Per step, for its head tile:
+    cum   = cumsum(dA)                      (Q, h)
+    CB    = C @ B^T                         (Q, Q)   MXU
+    y     = (CB * decay * causal) @ xdt     (Q, h, P) MXU per head
+    y    += (C @ state) * exp(cum)          MXU
+    state = exp(cum_Q) * state + (B * dec_end)^T @ xdt
+
+VMEM working set (Q=128, h_tile=4, N=128, P=64):
+    xdt 128*4*64*4B + CB 128*128*4B + state 4*128*64*4B = ~0.5 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(xdt_ref, dA_ref, B_ref, C_ref, y_ref, state_out_ref, state_ref, *,
+            Q: int, n_chunks: int, h_tile: int, N: int, P: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xdt = xdt_ref[0, 0].astype(jnp.float32)        # (Q, h, P)
+    dA = dA_ref[0, 0].astype(jnp.float32)          # (Q, h)
+    Bc = B_ref[0, 0].astype(jnp.float32)           # (Q, N)
+    Cc = C_ref[0, 0].astype(jnp.float32)           # (Q, N)
+
+    cum = jnp.cumsum(dA, axis=0)                   # (Q, h)
+    CB = jax.lax.dot_general(Cc, Bc, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    qi = lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    ki = lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    causal = qi >= ki
+
+    y = jnp.zeros((Q, h_tile, P), jnp.float32)
+    state_new = jnp.zeros((h_tile, N, P), jnp.float32)
+    for h in range(h_tile):                        # static unroll over tile
+        delta = cum[:, None, h] - cum[None, :, h]
+        delta = jnp.where(causal, delta, NEG)
+        scores = CB * jnp.exp(delta)               # (Q, Q)
+        yh = jax.lax.dot_general(scores, xdt[:, h], (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        st = state_ref[h]                          # (N, P)
+        y_off = jax.lax.dot_general(Cc, st, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        yh = yh + y_off * jnp.exp(cum[:, h])[:, None]
+        y = y.at[:, h].set(yh)
+        dec_end = jnp.exp(cum[-1, h] - cum[:, h])  # (Q,)
+        upd = jax.lax.dot_general(
+            Bc * dec_end[:, None], xdt[:, h], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)    # (N, P)
+        state_new = state_new.at[h].set(jnp.exp(cum[-1, h]) * st + upd)
+    state_ref[...] = state_new
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(c == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("h_tile", "interpret"))
+def ssd_scan(xdt, dA, Bc, Cc, *, h_tile: int = 4, interpret: bool = False):
+    """xdt: (B, nc, Q, H, P) f32 (= x * dt); dA: (B, nc, Q, H) f32;
+    Bc/Cc: (B, nc, Q, N) f32.
+    Returns (y (B, nc, Q, H, P) f32, final_state (B, H, N, P) f32)."""
+    B, nc, Q, H, P = xdt.shape
+    N = Bc.shape[-1]
+    assert H % h_tile == 0, (H, h_tile)
+    nh = H // h_tile
+
+    kernel = functools.partial(_kernel, Q=Q, n_chunks=nc, h_tile=h_tile,
+                               N=N, P=P)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, h_tile, P),
+                         lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, h_tile), lambda b, h, c: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, h, c: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, h_tile, P),
+                         lambda b, h, c: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, h_tile, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((h_tile, N, P), jnp.float32)],
+        interpret=interpret,
+    )(xdt, dA, Bc, Cc)
+    return y, state

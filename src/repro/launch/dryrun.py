@@ -1,0 +1,320 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+DOC = """Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and extract the roofline terms.
+
+For each cell this driver:
+  1. builds abstract (ShapeDtypeStruct) params / optimizer state / batch /
+     cache — NO device allocation for full-size configs,
+  2. jits the right step (train_step / prefill / decode_step) with explicit
+     in/out shardings,
+  3. .lower().compile() — any sharding mismatch, OOM-at-compile or
+     unsupported collective is a bug in the system, not in the run,
+  4. records memory_analysis(), cost_analysis() and the collective mix
+     parsed from the optimized HLO into benchmarks/results/<cell>.json.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-moe-1b-a400m \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+WHILE_RE = re.compile(r"while\(.*body=%?([\w.\-]+)")
+TRIP_RE = re.compile(r'known_trip_count"?\s*[:=]\s*\{"?n"?[:=]\s*"?(\d+)')
+CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))           # [n_groups, group_size]<=[devices]
+    m = GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 0
+
+
+def parse_collectives(hlo_text: str):
+    """Per-device output bytes + replica-group sizes of every collective in
+    the optimized (post-SPMD) HLO, with while-loop TRIP COUNTS applied
+    (XLA text places a scanned layer's collectives once inside the loop
+    body; `known_trip_count` gives the multiplier)."""
+    comp_collectives = {}   # comp -> [(op, bytes, group)]
+    comp_whiles = {}        # comp -> [(body_comp, trip)]
+    comp_calls = {}         # comp -> [callee]
+    cur = "__top__"
+    for line in hlo_text.splitlines():
+        mc = COMP_RE.match(line.strip()) if line and not line.startswith(" ") \
+            else None
+        if mc:
+            cur = mc.group(1)
+            continue
+        mw = WHILE_RE.search(line)
+        if mw:
+            mt = TRIP_RE.search(line)
+            trip = int(mt.group(1)) if mt else 1
+            comp_whiles.setdefault(cur, []).append((mw.group(1), trip))
+            continue
+        m = COLLECTIVE_RE.search(line)
+        if m:
+            type_str, op = m.groups()
+            comp_collectives.setdefault(cur, []).append(
+                (op, _shape_bytes(type_str), _group_size(line)))
+            continue
+        mcall = CALL_RE.search(line)
+        if mcall and ("fusion(" in line or "call(" in line
+                      or "conditional(" in line):
+            comp_calls.setdefault(cur, []).append(mcall.group(1))
+
+    # propagate multipliers from every root (computations not named as a
+    # while body get multiplier 1 — entry, conditions, fusions reached by
+    # calls inherit the caller's multiplier)
+    bodies = {b for ws in comp_whiles.values() for b, _ in ws}
+    mult = {c: 1 for c in (set(comp_collectives) | set(comp_whiles)
+                           | set(comp_calls)) if c not in bodies}
+    frontier = list(mult)
+    seen = set(frontier)
+    while frontier:
+        c = frontier.pop()
+        for body, trip in comp_whiles.get(c, []):
+            m = mult.get(c, 1) * max(trip, 1)
+            if mult.get(body, 0) < m:
+                mult[body] = m
+                if body not in seen or True:
+                    frontier.append(body)
+        for callee in comp_calls.get(c, []):
+            m = mult.get(c, 1)
+            if mult.get(callee, 0) < m:
+                mult[callee] = m
+                frontier.append(callee)
+
+    out = {}
+    for comp, items in comp_collectives.items():
+        k = mult.get(comp, 1)
+        for op, b, g in items:
+            d = out.setdefault(op, {"count": 0, "bytes": 0, "by_group": {}})
+            d["count"] += k
+            d["bytes"] += b * k
+            gk = str(g)
+            d["by_group"][gk] = d["by_group"].get(gk, 0) + b * k
+    return out
+
+
+def build_cell(arch: str, shape_name: str, multi_pod: bool,
+               opt: str = "baseline", moe_mode: str = "auto"):
+    """Returns (jitted_fn, example_args (abstract), meta).
+
+    opt="tuned" applies the §Perf exact-equivalent optimizations:
+    pad_heads (A1) and wide-DP rules for sub-scale SSMs (C1)."""
+    from repro.configs import SHAPES, shape_applicable
+    from repro.configs.registry import get
+    from repro.data.pipeline import batch_specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import api
+    from repro.models.transformer import RunOptions
+    from repro.optim.adamw import opt_state_specs
+    from repro.parallel.sharding import (DEFAULT_RULES, SERVE_RULES,
+                                         WIDE_DP_RULES, Topology,
+                                         abstract_params, param_shardings,
+                                         is_spec)
+    from repro.serving.decode import (cache_abstract, cache_shardings,
+                                      make_decode_step, make_prefill)
+    from repro.train.step import TrainHparams, make_train_step
+
+    cfg = get(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return None, None, {"skipped": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pspecs = api.param_specs(cfg)
+    tuned = opt == "tuned"
+    # §Perf C: sub-scale models (d_model <= 1536) waste the model axis on
+    # narrow TP; widen DP instead (experts/vocab replicated, ZeRO over all)
+    wide_dp = tuned and cfg.d_model <= 1536 and cfg.family in ("ssm", "moe")
+
+    if shape.kind == "train":
+        rules = WIDE_DP_RULES if wide_dp else DEFAULT_RULES
+        topo = Topology(mesh, dict(rules))
+        hp = TrainHparams(opts=RunOptions(remat=True, pad_heads=tuned,
+                                          moe_mode=moe_mode))
+        step = make_train_step(cfg, topo, hp)
+        ospecs = opt_state_specs(pspecs)
+        state_abs = {"params": abstract_params(pspecs),
+                     "opt": abstract_params(ospecs)}
+        state_sh = {"params": param_shardings(topo, pspecs),
+                    "opt": param_shardings(topo, ospecs)}
+        batch_abs = batch_specs(cfg, shape)
+        batch_sh = {k: topo.sharding_for(v.shape, ("batch",) + (None,) * (len(v.shape) - 1))
+                    for k, v in batch_abs.items()}
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+        return fn, (state_abs, batch_abs), {"kind": "train"}
+
+    topo = Topology(mesh, dict(SERVE_RULES))
+    params_abs = abstract_params(pspecs)
+    params_sh = param_shardings(topo, pspecs)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "prefill":
+        prefill = make_prefill(cfg, topo, S, RunOptions(remat=False))
+        batch_abs = batch_specs(cfg, shape)
+        batch_sh = {k: topo.sharding_for(v.shape, ("batch",) + (None,) * (len(v.shape) - 1))
+                    for k, v in batch_abs.items()}
+        cache_sh = cache_shardings(cfg, topo, B, S)
+        logit_sh = topo.sharding_for((B, cfg.vocab_padded), ("batch", "vocab"))
+        fn = jax.jit(prefill, in_shardings=(params_sh, batch_sh),
+                     out_shardings=(logit_sh, cache_sh))
+        return fn, (params_abs, batch_abs), {"kind": "prefill"}
+
+    # decode: one new token against a cache of S
+    step = make_decode_step(cfg, topo)
+    cache_abs = cache_abstract(cfg, topo, B, S)
+    cache_sh = cache_shardings(cfg, topo, B, S)
+    tok_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_sh = topo.sharding_for((B,), ("batch",))
+    logit_sh = topo.sharding_for((B, cfg.vocab_padded), ("batch", "vocab"))
+    fn = jax.jit(step, in_shardings=(params_sh, cache_sh, tok_sh),
+                 out_shardings=(logit_sh, cache_sh), donate_argnums=(1,))
+    return fn, (params_abs, cache_abs, tok_abs), {"kind": "decode"}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, force: bool = False,
+             opt: str = "baseline", moe_mode: str = "auto", tag_suffix: str = ""):
+    tag = f"{arch}__{shape_name}__{mesh_kind}{tag_suffix}"
+    out_path = RESULTS / f"{tag}.json"
+    if out_path.exists() and not force:
+        print(f"[skip-cached] {tag}")
+        return json.loads(out_path.read_text())
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "opt": opt, "moe_mode": moe_mode}
+    t0 = time.time()
+    try:
+        fn, args, meta = build_cell(arch, shape_name, mesh_kind == "multi",
+                                    opt=opt, moe_mode=moe_mode)
+        rec.update(meta)
+        if fn is None:
+            rec["status"] = "skipped"
+            out_path.write_text(json.dumps(rec, indent=2))
+            print(f"[skipped ] {tag}: {meta['skipped']}")
+            return rec
+        t1 = time.time()
+        lowered = fn.lower(*args)
+        t2 = time.time()
+        compiled = lowered.compile()
+        t3 = time.time()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+        try:
+            rec["memory"]["peak"] = int(mem.peak_memory_in_bytes)
+        except Exception:
+            pass
+        rec["cost"] = {k: float(v) for k, v in dict(cost or {}).items()
+                       if isinstance(v, (int, float)) and (
+                           k in ("flops", "bytes accessed")
+                           or k.startswith("bytes accessed"))}
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+        rec["timings"] = {"build_s": round(t1 - t0, 2),
+                          "lower_s": round(t2 - t1, 2),
+                          "compile_s": round(t3 - t2, 2)}
+        rec["status"] = "ok"
+        print(f"[ok      ] {tag}: lower {t2-t1:.1f}s compile {t3-t2:.1f}s "
+              f"flops={rec['cost'].get('flops', 0):.3e}")
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[ERROR   ] {tag}: {type(e).__name__}: {str(e)[:200]}")
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--opt", default="baseline", choices=["baseline", "tuned"])
+    ap.add_argument("--moe-mode", default="auto",
+                    choices=["auto", "rpc", "onesided"])
+    ap.add_argument("--tag", default="",
+                    help="suffix for the result file (e.g. __tuned)")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES
+    from repro.configs.registry import ARCHS
+
+    archs = sorted(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    n_ok = n_err = n_skip = 0
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape in shapes:
+                rec = run_cell(arch, shape, mesh_kind, force=args.force,
+                               opt=args.opt, moe_mode=args.moe_mode,
+                               tag_suffix=args.tag)
+                s = rec.get("status")
+                n_ok += s == "ok"
+                n_err += s == "error"
+                n_skip += s == "skipped"
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped-by-rule, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import api, layers, mamba2, moe, transformer, whisper, zamba  # noqa: F401

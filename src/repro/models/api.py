@@ -1,0 +1,37 @@
+"""Family dispatcher: one entry point per model-zoo family."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import mamba2, transformer, whisper, zamba
+from repro.parallel.sharding import Topology
+
+
+def param_specs(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return mamba2.param_specs(cfg)
+    if cfg.family == "hybrid":
+        return zamba.param_specs(cfg)
+    if cfg.family == "audio":
+        return whisper.param_specs(cfg)
+    return transformer.param_specs(cfg)   # dense | moe | vlm
+
+
+def forward(cfg: ModelConfig, topo: Topology, params, batch: Dict[str, Any], *,
+            opts=None):
+    """batch: {"tokens": (B,S) int32, optional "frames"/"patch_embeds"}.
+    Returns logits (B, S, V) vocab-sharded."""
+    tokens = batch["tokens"]
+    if cfg.family == "ssm":
+        return mamba2.forward(cfg, topo, params, tokens, opts=opts)
+    if cfg.family == "hybrid":
+        return zamba.forward(cfg, topo, params, tokens, opts=opts)
+    if cfg.family == "audio":
+        return whisper.forward(cfg, topo, params, tokens,
+                               frames=batch.get("frames"), opts=opts)
+    return transformer.forward(cfg, topo, params, tokens,
+                               extra_embeds=batch.get("patch_embeds"),
+                               opts=opts)

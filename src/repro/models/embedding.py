@@ -1,0 +1,66 @@
+"""Vocab-sharded embedding lookup — a Storm hybrid integration point.
+
+The embedding table is a remote data structure sharded over the `model` axis
+(each shard owns a contiguous vocab range — Storm's contiguous region).  Two
+access modes:
+
+  * "rpc"  (default): ship the ids to every vocab shard; each shard computes
+    the rows it owns (the handler) and a psum combines — compute-at-the-data.
+    Wire cost per layer: one psum of (B_loc, S, d).
+  * "onesided": all-gather the table shards to the requester and gather rows
+    locally — data-to-compute.  Only wins for tiny tables (cost_model).
+
+The LM head needs no shard_map: logits stay vocab-sharded under SPMD and the
+loss reduces over the sharded axis in place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import cost_model
+from repro.parallel.sharding import Topology
+
+
+def embed_lookup(topo: Topology, table: jax.Array, tokens: jax.Array,
+                 mode: str = "auto") -> jax.Array:
+    """table: (V, d) sharded ("vocab"=model, None); tokens: (B, S) int32.
+    Returns (B, S, d) batch-sharded, replicated over model."""
+    V, d = table.shape
+    tp = topo.axis_sizes.get("model", 1)
+    vocab_axes = topo._mesh_axes_for("vocab", V)
+    if tp == 1 or V % tp != 0 or not vocab_axes:
+        return jnp.take(table, tokens, axis=0)
+
+    if mode == "auto":
+        toks_per_shard = int(jnp.size(tokens))  # global tokens
+        choice = cost_model.embedding_lookup_choice(
+            tokens_per_shard=toks_per_shard // max(topo.axis_sizes.get("data", 1), 1),
+            d_model=d, vocab=V, shards=tp)
+        mode = choice.mode
+
+    batch_spec = topo.spec_for(tokens.shape, ("batch", None))
+    table_spec = topo.spec_for(table.shape, ("vocab", None))
+    out_spec = topo.spec_for(tokens.shape + (d,), ("batch", None, None))
+    vs = V // tp
+
+    if mode == "onesided":
+        def one(tbl, toks):
+            full = lax.all_gather(tbl, "model", axis=0, tiled=True)
+            return jnp.take(full, toks.astype(jnp.int32), axis=0)
+        fn = one
+    else:
+        def rpc(tbl, toks):
+            m = lax.axis_index("model")
+            ids = toks.astype(jnp.int32) - m * vs
+            ok = (ids >= 0) & (ids < vs)
+            rows = jnp.take(tbl, jnp.clip(ids, 0, vs - 1), axis=0)
+            rows = jnp.where(ok[..., None], rows, jnp.zeros((), tbl.dtype))
+            return lax.psum(rows, "model")
+        fn = rpc
+
+    return jax.shard_map(
+        fn, mesh=topo.mesh, in_specs=(table_spec, batch_spec),
+        out_specs=out_spec, check_vma=False)(table, tokens)

@@ -1,0 +1,256 @@
+"""Core neural layers, built for clean SPMD partitioning and small HLO.
+
+The training/prefill attention is a *pair-scheduled* blockwise flash
+attention: the (q_block, kv_block) pairs that are actually needed under the
+causal/sliding-window mask are enumerated at trace time (numpy) and processed
+by ONE lax.scan — so HLO size is O(1) in sequence length and masked-out
+blocks are never computed (no 2x causal waste).  The Pallas TPU kernel in
+``repro.kernels.flash_attention`` implements the same schedule on-chip;
+this jnp version is its oracle and the dry-run lowering path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_tables(positions, head_dim: int, theta: float):
+    """positions: (..., S) int32 -> (cos, sin): (..., S, head_dim//2) f32."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None]
+        sin = sin[None]
+    c = cos[..., None, :].astype(jnp.float32)
+    s = sin[..., None, :].astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * c - x2f * s, x2f * c + x1f * s], axis=-1).astype(x.dtype)
+
+
+def softcap(x, cap: Optional[float]):
+    if cap is None:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def mask_pad_logits(logits, vocab_real: int):
+    """Mask the padded vocab tail (see ModelConfig.vocab_padded)."""
+    V = logits.shape[-1]
+    if V == vocab_real:
+        return logits
+    iota = lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    return jnp.where(iota < vocab_real, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Pair-scheduled blockwise attention
+# ---------------------------------------------------------------------------
+def _pair_schedule(n_q: int, n_k: int, q_block: int, kv_block: int,
+                   causal: bool, window: Optional[int], q_offset: int):
+    """Static (trace-time) list of (q_idx, k_idx) block pairs that intersect
+    the mask.  q positions are q_offset + [0, n_q*q_block)."""
+    pairs = []
+    for i in range(n_q):
+        q_lo = q_offset + i * q_block
+        q_hi = q_offset + (i + 1) * q_block - 1
+        for j in range(n_k):
+            k_lo = j * kv_block
+            k_hi = (j + 1) * kv_block - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window is not None and k_hi < q_lo - (window - 1):
+                continue
+            pairs.append((i, j))
+    return np.asarray(pairs, np.int32)
+
+
+def block_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    attn_softcap: Optional[float] = None,
+                    q_block: int = 512, kv_block: int = 512,
+                    q_offset: int = 0, scale: Optional[float] = None):
+    """q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D) with Hq % Hkv == 0.
+
+    GQA is handled by grouped einsums (no KV repetition).  Returns
+    (B, Sq, Hq, D) in q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+
+    qb = min(q_block, Sq)
+    kb = min(kv_block, Sk)
+    pad_q = (-Sq) % qb
+    pad_k = (-Sk) % kb
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    Sq_p, Sk_p = Sq + pad_q, Sk + pad_k
+    n_q, n_k = Sq_p // qb, Sk_p // kb
+
+    qg = q.reshape(B, Sq_p, Hkv, G, D)
+    pairs = _pair_schedule(n_q, n_k, qb, kb, causal, window, q_offset)
+
+    NEG = jnp.float32(-1e30)
+    acc0 = jnp.zeros((B, Hkv, G, Sq_p, D), jnp.float32)
+    m0 = jnp.full((B, Hkv, G, Sq_p), NEG, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq_p), jnp.float32)
+
+    # With a single q block (the sequence-parallel path where q stays sharded
+    # over the model axis) q is never dynamically sliced — a dynamic_slice on
+    # a sharded dim would force an all-gather.
+    slice_q = n_q > 1
+
+    def step(carry, pair):
+        acc, m, l = carry
+        i, j = pair[0], pair[1]
+        qs = (lax.dynamic_slice_in_dim(qg, i * qb, qb, axis=1)
+              if slice_q else qg)                                    # B,qb,Hkv,G,D
+        ks = lax.dynamic_slice_in_dim(k, j * kb, kb, axis=1)         # B,kb,Hkv,D
+        vs = lax.dynamic_slice_in_dim(v, j * kb, kb, axis=1)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qs, ks,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, attn_softcap)
+        qpos = (q_offset + i * qb + jnp.arange(qb)) if slice_q \
+            else (q_offset + jnp.arange(qb))
+        kpos = j * kb + jnp.arange(kb)
+        mask = jnp.ones((qb, kb), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        if pad_k:
+            mask &= (kpos[None, :] < Sk)
+        s = jnp.where(mask[None, None, None], s, NEG)
+
+        if slice_q:
+            m_blk = lax.dynamic_slice_in_dim(m, i * qb, qb, axis=3)
+            l_blk = lax.dynamic_slice_in_dim(l, i * qb, qb, axis=3)
+            a_blk = lax.dynamic_slice_in_dim(acc, i * qb, qb, axis=3)
+        else:
+            m_blk, l_blk, a_blk = m, l, acc
+        m_new = jnp.maximum(m_blk, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_blk - m_new)
+        l_new = corr * l_blk + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        a_new = corr[..., None] * a_blk + pv
+        if slice_q:
+            acc = lax.dynamic_update_slice_in_dim(acc, a_new, i * qb, axis=3)
+            m = lax.dynamic_update_slice_in_dim(m, m_new, i * qb, axis=3)
+            l = lax.dynamic_update_slice_in_dim(l, l_new, i * qb, axis=3)
+        else:
+            acc, m, l = a_new, m_new, l_new
+        return (acc, m, l), None
+
+    (acc, m, l), _ = lax.scan(step, (acc0, m0, l0), jnp.asarray(pairs))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq_p, Hq, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, attn_softcap=None,
+                  q_offset: int = 0, scale=None):
+    """O(S^2)-materializing oracle for tests."""
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, attn_softcap)
+    qpos = q_offset + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     attn_softcap=None, scale=None):
+    """Single-token decode over a (B, S, Hkv, D) cache.  q: (B, Hq, D).
+    cache_len: (B,) int32 — number of valid cache positions (the new token's
+    K/V must already be appended).  Pure-jnp; the sequence-sharded "RPC path"
+    wraps this per shard (serving.decode)."""
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, attn_softcap)
+    pos = jnp.arange(S)
+    mask = pos[None] < cache_len[:, None]
+    if window is not None:
+        mask &= pos[None] > (cache_len[:, None] - 1) - window
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def swiglu(x, w_gate, w_up, w_down):
+    g = jnp.einsum("...d,df->...f", x, w_gate)
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, w_down)
+
+
+def gelu_mlp(x, w_in, b_in, w_out, b_out):
+    h = jnp.einsum("...d,df->...f", x, w_in) + b_in
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, w_out) + b_out

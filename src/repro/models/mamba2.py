@@ -1,0 +1,230 @@
+"""Mamba2 (SSD — state-space duality, arXiv:2405.21060) in JAX.
+
+Training/prefill uses the chunked SSD algorithm: ONE lax.scan over sequence
+chunks carrying the inter-chunk state (B, H, N, P); each step computes the
+intra-chunk quadratic term + the off-diagonal (state) term.  Decode is the
+O(1) recurrent step.  Heads shard over `model` (48/16, 64/16 both divide);
+B/C groups (G=1) replicate — every SSD einsum is head-local, so the layer
+needs NO collectives beyond the in/out projections' FSDP gathers.
+
+The Pallas kernel `repro.kernels.ssd_scan` implements the chunk step
+on-chip; this jnp version is its oracle and the dry-run lowering path.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import ParamSpec as PS, Topology
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (per layer, stackable)
+# ---------------------------------------------------------------------------
+def mamba_layer_specs(cfg: ModelConfig, n_layers: Optional[int] = None,
+                      stacked: bool = True):
+    d, di = cfg.d_model, cfg.d_inner
+    H, P, N, G, K = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                     cfg.ssm_groups, cfg.conv_width)
+    Ldim = (n_layers if n_layers is not None else cfg.n_layers,) if stacked else ()
+    Lax = (None,) if stacked else ()
+    return {
+        "norm": PS(Ldim + (d,), Lax + (None,), "ones"),
+        "wz": PS(Ldim + (d, di), Lax + ("fsdp", "ff"), "scaled"),
+        "wx": PS(Ldim + (d, di), Lax + ("fsdp", "ff"), "scaled"),
+        "wB": PS(Ldim + (d, G * N), Lax + ("fsdp", None), "scaled"),
+        "wC": PS(Ldim + (d, G * N), Lax + ("fsdp", None), "scaled"),
+        "wdt": PS(Ldim + (d, H), Lax + ("fsdp", "heads"), "scaled"),
+        "conv_x_w": PS(Ldim + (K, di), Lax + (None, "ff"), "normal", scale=0.1),
+        "conv_x_b": PS(Ldim + (di,), Lax + ("ff",), "zeros"),
+        "conv_B_w": PS(Ldim + (K, G * N), Lax + (None, None), "normal", scale=0.1),
+        "conv_B_b": PS(Ldim + (G * N,), Lax + (None,), "zeros"),
+        "conv_C_w": PS(Ldim + (K, G * N), Lax + (None, None), "normal", scale=0.1),
+        "conv_C_b": PS(Ldim + (G * N,), Lax + (None,), "zeros"),
+        "A_log": PS(Ldim + (H,), Lax + ("heads",), "zeros"),
+        "D": PS(Ldim + (H,), Lax + ("heads",), "ones"),
+        "dt_bias": PS(Ldim + (H,), Lax + ("heads",), "zeros"),
+        "gnorm": PS(Ldim + (di,), Lax + ("ff",), "ones"),
+        "wo": PS(Ldim + (di, d), Lax + ("ff", "fsdp"), "scaled"),
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    return {
+        "embed": PS((cfg.vocab_padded, cfg.d_model), ("vocab", None), "normal"),
+        "final_norm": PS((cfg.d_model,), (None,), "ones"),
+        "layers": mamba_layer_specs(cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Primitives
+# ---------------------------------------------------------------------------
+def causal_conv(x, w, b, state=None):
+    """Depthwise causal conv.  x: (B, S, C); w: (K, C); state: (B, K-1, C)
+    carries the last K-1 inputs for decode continuity.
+    Returns (y, new_state)."""
+    B, S, C = x.shape
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, K - 1, C), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for j in range(K):
+        y = y + xp[:, j:j + S].astype(jnp.float32) * w[j].astype(jnp.float32)
+    y = jax.nn.silu(y + b.astype(jnp.float32)).astype(x.dtype)
+    new_state = xp[:, S:]
+    return y, new_state
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P) bf16; dt: (B, S, H) f32 (post-softplus);
+    A: (H,) f32 negative; Bm/Cm: (B, S, N) f32/bf16 (G=1 groups).
+    Returns (y (B, S, H, P), final_state (B, H, N, P) f32).
+    """
+    B, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+
+    dA = dt * A  # (B, S, H), negative
+    xdt = (xh.astype(jnp.float32) * dt[..., None])
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape((B, nc, Q) + t.shape[2:]), 1, 0)
+
+    xs = (to_chunks(xdt), to_chunks(dA), to_chunks(Bm.astype(jnp.float32)),
+          to_chunks(Cm.astype(jnp.float32)))
+    S0 = (jnp.zeros((B, H, N, P), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(Sprev, inp):
+        xc, dAc, Bc, Cc = inp          # (B,Q,H,P), (B,Q,H), (B,Q,N), (B,Q,N)
+        cum = jnp.cumsum(dAc, axis=1)  # (B,Q,H) inclusive
+        # intra-chunk: scores[q,k] = C_q.B_k * exp(cum_q - cum_k), k <= q.
+        # Mask the EXPONENT (not the exp output): exp of the huge positive
+        # delta in masked cells would be inf and poison the gradient.
+        CB = jnp.einsum("bqn,bkn->bqk", Cc, Bc)                    # (B,Q,Q)
+        delta = cum[:, :, None, :] - cum[:, None, :, :]            # (B,Q,Q,H)
+        delta = jnp.where(causal[None, :, :, None], delta, -1e30)
+        scores = CB[..., None] * jnp.exp(delta)
+        y = jnp.einsum("bqkh,bkhp->bqhp", scores, xc)
+        # off-diagonal: carry-in state
+        y = y + jnp.einsum("bqn,bhnp->bqhp", Cc, Sprev) * jnp.exp(cum)[..., None]
+        # next state
+        dec_end = jnp.exp(cum[:, -1:, :] - cum)                     # (B,Q,H)
+        Snew = (jnp.exp(cum[:, -1])[..., None, None] * Sprev
+                + jnp.einsum("bkn,bkhp->bhnp", Bc, xc * dec_end[..., None]))
+        return Snew, y
+
+    Sfin, ys = lax.scan(step, S0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P)
+    return y.astype(xh.dtype), Sfin
+
+
+def ssd_ref(xh, dt, A, Bm, Cm):
+    """O(S^2) oracle: full materialized decay matrix."""
+    B, S, H, P = xh.shape
+    dA = dt * A
+    cum = jnp.cumsum(dA, axis=1)                                   # (B,S,H)
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    delta = cum[:, :, None, :] - cum[:, None, :, :]                # (B,S,S,H)
+    delta = jnp.where(causal[None, :, :, None], delta, -1e30)
+    CB = jnp.einsum("bqn,bkn->bqk", Cm.astype(jnp.float32),
+                    Bm.astype(jnp.float32))
+    scores = CB[..., None] * jnp.exp(delta)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    y = jnp.einsum("bqkh,bkhp->bqhp", scores, xdt)
+    return y.astype(xh.dtype)
+
+
+def ssd_step(state, x1, dt1, A, B1, C1):
+    """One decode step.  state: (B,H,N,P) f32; x1: (B,H,P); dt1: (B,H);
+    B1/C1: (B,N).  Returns (new_state, y (B,H,P))."""
+    dA = jnp.exp(dt1 * A)                                           # (B,H)
+    upd = jnp.einsum("bn,bhp->bhnp", B1.astype(jnp.float32),
+                     x1.astype(jnp.float32) * dt1[..., None])
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", C1.astype(jnp.float32), state)
+    return state, y.astype(x1.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Layer + model
+# ---------------------------------------------------------------------------
+def mamba_block(cfg: ModelConfig, topo: Topology, p, h, *, conv_state=None,
+                ssm_state=None, decode: bool = False):
+    """h: (B, S, d).  In decode mode S == 1 and states are carried."""
+    B, S, d = h.shape
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    hn = L.rms_norm(h, p["norm"])
+    z = jnp.einsum("bsd,de->bse", hn, p["wz"])
+    xr = jnp.einsum("bsd,de->bse", hn, p["wx"])
+    Br = jnp.einsum("bsd,dn->bsn", hn, p["wB"])
+    Cr = jnp.einsum("bsd,dn->bsn", hn, p["wC"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", hn, p["wdt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    cs_x = cs_B = cs_C = None
+    if conv_state is not None:
+        cs_x, cs_B, cs_C = conv_state
+    xc, ns_x = causal_conv(xr, p["conv_x_w"], p["conv_x_b"], cs_x)
+    Bc, ns_B = causal_conv(Br, p["conv_B_w"], p["conv_B_b"], cs_B)
+    Cc, ns_C = causal_conv(Cr, p["conv_C_w"], p["conv_C_b"], cs_C)
+    new_conv_state = (ns_x, ns_B, ns_C)
+
+    xh = xc.reshape(B, S, H, P)
+    xh = topo.constrain(xh, "batch", None, "heads", None)
+    if decode:
+        assert S == 1
+        st = (jnp.zeros((B, H, N, P), jnp.float32) if ssm_state is None
+              else ssm_state)
+        new_state, y1 = ssd_step(st, xh[:, 0], dt[:, 0], A, Bc[:, 0], Cc[:, 0])
+        y = y1[:, None]
+    else:
+        y, new_state = ssd_chunked(xh, dt, A, Bc, Cc, cfg.ssm_chunk,
+                                   init_state=ssm_state)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) * p["D"].astype(y.dtype)[:, None]
+    y = y.reshape(B, S, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = L.rms_norm(y, p["gnorm"])
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    h = topo.constrain(h + out, "batch", None, None)
+    if decode or conv_state is not None or ssm_state is not None:
+        return h, (new_conv_state, new_state)
+    return h, None
+
+
+def forward(cfg: ModelConfig, topo: Topology, params, tokens, *,
+            opts=None):
+    """Train/prefill forward -> logits (B, S, V)."""
+    from repro.models.embedding import embed_lookup
+    from repro.models.transformer import RunOptions, _maybe_remat
+    opts = opts or RunOptions()
+    B, S = tokens.shape
+    h = embed_lookup(topo, params["embed"], tokens)
+    h = topo.constrain(h, "batch", None, None)
+
+    def body(carry, lp):
+        hh, _ = carry
+        hh, _st = mamba_block(cfg, topo, lp, hh)
+        return (hh, 0), None
+
+    (h, _), _ = lax.scan(_maybe_remat(body, opts), (h, 0), params["layers"])
+    h = L.rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", None, "vocab")

@@ -1,0 +1,200 @@
+"""Mixture-of-Experts with Storm's one-two-sided dispatch (DESIGN §3.2).
+
+Experts are a remote data structure sharded over the `model` axis.  Per
+(config, shape) the cost model picks the access mode at trace time:
+
+  * "rpc":      compute-at-the-data.  Every model rank holds the full token
+    set of its data shard (activations are TP-replicated); it runs ONLY its
+    local experts over the tokens routed to them, and a psum("model")
+    combines partial outputs.  Wire: one psum of (B_loc,S,d) — exactly the
+    all-reduce a dense TP MLP would pay.  Compute is skewed by routing
+    (an owner with hot experts works more — the RPC handler effect).
+  * "onesided": data-to-compute.  Each rank all-gathers the expert weights
+    (the one-sided READ of the remote region), takes 1/tp of the local
+    tokens, runs the FULL MoE on them, and all-gathers outputs back.
+    Compute is perfectly balanced; wire: weights + (B_loc,S,d) gather.
+    Wins for small expert tables (granite: 32 x 3 x 1024 x 512).
+
+Routing is capacity-based (drop on overflow, deterministic) — the TPU-static
+analogue of the send-queue back-pressure in transport.route_by_dest, and the
+same code shape: sort by destination, position-within-destination, scatter.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import cost_model
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import Topology
+
+
+def _route(xt, probs_topv, topi, n_experts_local: int, e_offset, capacity: int):
+    """Capacity-routed dispatch for one device's tokens.
+
+    xt: (T, d); topv/topi: (T, K).  Returns (buf (E_l, C, d), meta) where
+    meta lets the combine step gather results back.
+    """
+    T, K = topi.shape
+    d = xt.shape[-1]
+    flat_e = (topi.reshape(-1).astype(jnp.int32) - e_offset)         # (T*K,)
+    w = probs_topv.reshape(-1)
+    local = (flat_e >= 0) & (flat_e < n_experts_local)
+    slot = jnp.where(local, flat_e, n_experts_local)                 # drop row
+    onehot = slot[:, None] == jnp.arange(n_experts_local + 1)[None, :]
+    pos = (jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1)[
+        jnp.arange(T * K), slot]
+    keep = local & (pos < capacity)
+    dst_e = jnp.where(keep, slot, n_experts_local)
+    dst_c = jnp.where(keep, pos, capacity)
+    tok = jnp.arange(T * K, dtype=jnp.int32) // K
+    buf = jnp.zeros((n_experts_local + 1, capacity + 1, d), xt.dtype)
+    buf = buf.at[dst_e, dst_c].set(xt[tok])
+    return buf[:n_experts_local, :capacity], (dst_e, dst_c, tok, w, keep)
+
+
+def _combine(outbuf, meta, T: int, d: int):
+    dst_e, dst_c, tok, w, keep = meta
+    padded = jnp.pad(outbuf, ((0, 1), (0, 1), (0, 0)))
+    rows = padded[dst_e, dst_c].astype(jnp.float32)                  # (T*K, d)
+    rows = rows * jnp.where(keep, w, 0.0)[:, None]
+    out = jnp.zeros((T, d), jnp.float32).at[tok].add(rows)
+    return out.astype(outbuf.dtype)
+
+
+def _router(cfg: ModelConfig, xt, router_w):
+    logits = jnp.einsum("td,de->te", xt, router_w,
+                        preferred_element_type=jnp.float32)
+    if cfg.router_renorm:   # deepseek: softmax-all -> top-k -> renormalize
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = lax.top_k(probs, cfg.top_k)
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    else:                   # granite: top-k logits -> softmax over them
+        tlog, topi = lax.top_k(logits, cfg.top_k)
+        topv = jax.nn.softmax(tlog, axis=-1)
+    return topv, topi
+
+
+def _expert_ffn(buf, wg, wu, wd):
+    """buf: (E, C, d); weights (E, d, f)/(E, f, d)."""
+    g = jnp.einsum("ecd,edf->ecf", buf, wg)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(buf.dtype) * u
+    return jnp.einsum("ecf,efd->ecd", h, wd)
+
+
+def moe_dispatch_mode(cfg: ModelConfig, topo: Topology, tokens_per_device: int) -> str:
+    tp = topo.axis_sizes.get("model", 1)
+    if tp == 1 or cfg.n_experts % tp != 0:
+        return "local"
+    choice = cost_model.moe_dispatch_choice(
+        tokens_per_shard=tokens_per_device, d_model=cfg.d_model, d_ff=cfg.d_ff,
+        n_experts=cfg.n_experts, top_k=cfg.top_k, shards=tp)
+    return choice.mode
+
+
+def moe_ffn(cfg: ModelConfig, topo: Topology, x, router_w, wg, wu, wd,
+            mode: str = "auto"):
+    """x: (B, S, d) batch-sharded / model-replicated.
+    router_w: (d, E) replicated; wg/wu: (E, d, f); wd: (E, f, d) — E sharded
+    over model.  Returns (B, S, d)."""
+    B, S, d = x.shape
+    tp = topo.axis_sizes.get("model", 1)
+    dp = int(np.prod([topo.axis_sizes.get(a, 1) for a in ("pod", "data")]))
+    E = cfg.n_experts
+
+    if mode == "auto":
+        mode = moe_dispatch_mode(cfg, topo, tokens_per_device=(B * S) // dp)
+    if tp > 1 and not topo._mesh_axes_for("expert", E):
+        # wide-DP rules (§Perf C2): every device holds ALL experts and routes
+        # only its own tokens — zero dispatch collectives.
+        mode = "replicated"
+
+    if mode == "replicated":
+        x_spec = topo.spec_for((B, S, d), ("batch", None, None))
+        bax = x_spec[0]
+        bax = (bax,) if isinstance(bax, str) else (bax or ())
+        b_loc = B // int(np.prod([topo.axis_sizes[a] for a in bax])) if bax else B
+        T_loc = b_loc * S
+        C = max(1, int(np.ceil(T_loc * cfg.top_k / E * cfg.capacity_factor)))
+
+        def repl_impl(xl, rw, g_, u_, d_):
+            xt = xl.reshape(-1, d)
+            topv, topi = _router(cfg, xt, rw)
+            buf, meta = _route(xt, topv, topi, E, jnp.int32(0), C)
+            out = _combine(_expert_ffn(buf, g_, u_, d_), meta, xt.shape[0], d)
+            return out.reshape(xl.shape)
+
+        rep = topo.spec_for(router_w.shape, (None, None))
+        wspec = topo.spec_for(wg.shape, (None, None, None))
+        return jax.shard_map(
+            repl_impl, mesh=topo.mesh,
+            in_specs=(x_spec, rep, wspec, wspec,
+                      topo.spec_for(wd.shape, (None, None, None))),
+            out_specs=x_spec, check_vma=False)(x, router_w, wg, wu, wd)
+
+    if mode == "local" or tp == 1 or E % tp != 0:
+        # single-shard fallback (smoke tests / 1-device CPU)
+        xt = x.reshape(B * S, d)
+        topv, topi = _router(cfg, xt, router_w)
+        C = max(1, int(np.ceil(B * S * cfg.top_k / E * cfg.capacity_factor)))
+        buf, meta = _route(xt, topv, topi, E, jnp.int32(0), C)
+        out = _combine(_expert_ffn(buf, wg, wu, wd), meta, B * S, d)
+        return out.reshape(B, S, d)
+
+    E_l = E // tp
+    x_spec = topo.spec_for((B, S, d), ("batch", None, None))
+    r_spec = topo.spec_for(router_w.shape, (None, None))
+    w3_spec = topo.spec_for(wg.shape, ("expert", None, None))
+    ax0 = x_spec[0]
+    ax0 = (ax0,) if isinstance(ax0, str) else (ax0 or ())
+    b_loc = B // int(np.prod([topo.axis_sizes[a] for a in ax0])) if ax0 else B
+    T_loc = b_loc * S
+    if mode == "onesided" and T_loc % tp != 0:
+        mode = "rpc"      # decode-sized batches: too few tokens to split
+
+    if mode == "rpc":
+        C = max(1, int(np.ceil(T_loc * cfg.top_k / E * cfg.capacity_factor)))
+
+        def rpc_impl(xl, rw, g_, u_, d_):
+            xt = xl.reshape(-1, d)
+            topv, topi = _router(cfg, xt, rw)
+            m = lax.axis_index("model").astype(jnp.int32)
+            buf, meta = _route(xt, topv, topi, E_l, m * E_l, C)
+            out = _combine(_expert_ffn(buf, g_, u_, d_), meta, xt.shape[0], d)
+            out = lax.psum(out, "model")
+            return out.reshape(xl.shape)
+
+        return jax.shard_map(
+            rpc_impl, mesh=topo.mesh,
+            in_specs=(x_spec, r_spec, w3_spec, w3_spec,
+                      topo.spec_for(wd.shape, ("expert", None, None))),
+            out_specs=x_spec, check_vma=False)(x, router_w, wg, wu, wd)
+
+    # ---- one-sided: all-gather weights, compute 1/tp of local tokens ------
+    assert T_loc % tp == 0, (T_loc, tp)
+    T_my = T_loc // tp
+    C = max(1, int(np.ceil(T_my * cfg.top_k / E * cfg.capacity_factor)))
+
+    def onesided_impl(xl, rw, g_, u_, d_):
+        gf = lax.all_gather(g_, "model", axis=0, tiled=True)   # one-sided READ
+        uf = lax.all_gather(u_, "model", axis=0, tiled=True)
+        df = lax.all_gather(d_, "model", axis=0, tiled=True)
+        xt = xl.reshape(-1, d)
+        m = lax.axis_index("model")
+        x_my = lax.dynamic_slice_in_dim(xt, m * T_my, T_my, axis=0)
+        topv, topi = _router(cfg, x_my, rw)
+        buf, meta = _route(x_my, topv, topi, E, jnp.int32(0), C)
+        out_my = _combine(_expert_ffn(buf, gf, uf, df), meta, T_my, d)
+        out = lax.all_gather(out_my, "model", axis=0, tiled=True)
+        return out.reshape(xl.shape)
+
+    return jax.shard_map(
+        onesided_impl, mesh=topo.mesh,
+        in_specs=(x_spec, r_spec, w3_spec, w3_spec,
+                  topo.spec_for(wd.shape, ("expert", None, None))),
+        out_specs=x_spec, check_vma=False)(x, router_w, wg, wu, wd)

@@ -1,0 +1,242 @@
+"""Decoder-only LM assembly: dense / MoE / VLM backbones, gemma2-style
+local-global alternation, GQA, qkv-bias, softcaps.
+
+Layers are scanned in GROUPS (group = the local/global pattern period) so the
+pair-scheduled attention keeps a STATIC schedule per sub-layer kind while HLO
+stays O(1) in depth.  Remat wraps the group body.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.embedding import embed_lookup
+from repro.models.moe import moe_ffn
+from repro.parallel.sharding import ParamSpec as PS, Topology
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+def layer_param_specs(cfg: ModelConfig, n_layers: Optional[int] = None,
+                      stacked: bool = True):
+    d, hd = cfg.d_model, cfg.head_dim
+    qd, kvd = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    Ldim = (n_layers if n_layers is not None else cfg.n_layers,) if stacked else ()
+    Lax = (None,) if stacked else ()
+    p = {
+        "attn_norm": PS(Ldim + (d,), Lax + (None,), "ones"),
+        "wq": PS(Ldim + (d, qd), Lax + ("fsdp", "heads"), "scaled"),
+        "wk": PS(Ldim + (d, kvd), Lax + ("fsdp", "kv_heads"), "scaled"),
+        "wv": PS(Ldim + (d, kvd), Lax + ("fsdp", "kv_heads"), "scaled"),
+        "wo": PS(Ldim + (qd, d), Lax + ("heads", "fsdp"), "scaled"),
+        "mlp_norm": PS(Ldim + (d,), Lax + (None,), "ones"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = PS(Ldim + (qd,), Lax + ("heads",), "zeros")
+        p["bk"] = PS(Ldim + (kvd,), Lax + ("kv_heads",), "zeros")
+        p["bv"] = PS(Ldim + (kvd,), Lax + ("kv_heads",), "zeros")
+    if cfg.post_norms:
+        p["attn_post_norm"] = PS(Ldim + (d,), Lax + (None,), "ones")
+        p["mlp_post_norm"] = PS(Ldim + (d,), Lax + (None,), "ones")
+    if cfg.is_moe:
+        E, f = cfg.n_experts, cfg.d_ff
+        p["router"] = PS(Ldim + (d, E), Lax + (None, None), "scaled")
+        p["we_gate"] = PS(Ldim + (E, d, f), Lax + ("expert", "fsdp", None), "scaled")
+        p["we_up"] = PS(Ldim + (E, d, f), Lax + ("expert", "fsdp", None), "scaled")
+        p["we_down"] = PS(Ldim + (E, f, d), Lax + ("expert", None, "fsdp"), "scaled")
+        if cfg.n_shared_experts:
+            sf = cfg.n_shared_experts * f
+            p["ws_gate"] = PS(Ldim + (d, sf), Lax + ("fsdp", "ff"), "scaled")
+            p["ws_up"] = PS(Ldim + (d, sf), Lax + ("fsdp", "ff"), "scaled")
+            p["ws_down"] = PS(Ldim + (sf, d), Lax + ("ff", "fsdp"), "scaled")
+    else:
+        f = cfg.d_ff
+        p["w_gate"] = PS(Ldim + (d, f), Lax + ("fsdp", "ff"), "scaled")
+        p["w_up"] = PS(Ldim + (d, f), Lax + ("fsdp", "ff"), "scaled")
+        p["w_down"] = PS(Ldim + (f, d), Lax + ("ff", "fsdp"), "scaled")
+    return p
+
+
+def param_specs(cfg: ModelConfig):
+    d = cfg.d_model
+    tree = {
+        "embed": PS((cfg.vocab_padded, d), ("vocab", None), "normal"),
+        "final_norm": PS((d,), (None,), "ones"),
+        "layers": layer_param_specs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = PS((cfg.vocab_padded, d), ("vocab", None), "normal")
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def attention_block(cfg: ModelConfig, topo: Topology, p, h, cos, sin, *,
+                    window: Optional[int], q_block: int = 512,
+                    kv_block: int = 512, pad_heads: bool = False):
+    B, S, d = h.shape
+    hd, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    tp = topo.axis_sizes.get("model", 1)
+    hn = L.rms_norm(h, p["attn_norm"])
+    q = jnp.einsum("bsd,dq->bsq", hn, p["wq"])
+    k = jnp.einsum("bsd,dq->bsq", hn, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", hn, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, Hq, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+
+    head_tp = (tp == 1) or (Hq % tp == 0)
+    wo = p["wo"]
+    H_out = Hq
+    if head_tp:
+        if Hkv % max(tp, 1) != 0 and tp > 1:
+            # repeat KV so heads shard cleanly (granite kv=8, glm kv=2, ...)
+            g = Hq // Hkv
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        q = topo.constrain(q, "batch", None, "heads", None)
+        k = topo.constrain(k, "batch", None,
+                           "heads" if k.shape[2] == Hq else "kv_heads", None)
+        v = topo.constrain(v, "batch", None,
+                           "heads" if v.shape[2] == Hq else "kv_heads", None)
+        out = L.block_attention(q, k, v, causal=True, window=window,
+                                attn_softcap=cfg.attn_softcap,
+                                q_block=q_block, kv_block=kv_block)
+    elif pad_heads:
+        # §Perf A1: zero-pad heads to the next multiple of tp — EXACT math
+        # (pad q/k/v heads are all-zero -> pad outputs are 0; wo gets zero
+        # rows so nothing leaks), but heads now shard over `model`, killing
+        # the seq-CP per-layer activation all-gathers (EXPERIMENTS.md §Perf).
+        g = Hq // Hkv
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        Hpad = -(-Hq // tp) * tp
+        padn = Hpad - Hq
+        zpad = ((0, 0), (0, 0), (0, padn), (0, 0))
+        q = jnp.pad(q, zpad)
+        k = jnp.pad(k, zpad)
+        v = jnp.pad(v, zpad)
+        q = topo.constrain(q, "batch", None, "heads", None)
+        k = topo.constrain(k, "batch", None, "heads", None)
+        v = topo.constrain(v, "batch", None, "heads", None)
+        out = L.block_attention(q, k, v, causal=True, window=window,
+                                attn_softcap=cfg.attn_softcap,
+                                q_block=q_block, kv_block=kv_block)
+        wo = jnp.pad(wo, ((0, padn * hd), (0, 0)))
+        H_out = Hpad
+    else:
+        # sequence-parallel attention: q sharded over model on seq; one q
+        # block so q is never sliced (DESIGN §5 — qwen 40H/20H fallback)
+        q = topo.constrain(q, "batch", "kv_seq", None, None)
+        out = L.block_attention(q, k, v, causal=True, window=window,
+                                attn_softcap=cfg.attn_softcap,
+                                q_block=S, kv_block=kv_block)
+        out = topo.constrain(out, "batch", "kv_seq", None, None)
+    o = jnp.einsum("bsq,qd->bsd", out.reshape(B, S, H_out * hd), wo)
+    if cfg.post_norms:
+        o = L.rms_norm(o, p["attn_post_norm"])
+    return topo.constrain(h + o, "batch", None, None)
+
+
+def ffn_block(cfg: ModelConfig, topo: Topology, p, h, moe_mode: str = "auto"):
+    hn = L.rms_norm(h, p["mlp_norm"])
+    if cfg.is_moe:
+        out = moe_ffn(cfg, topo, hn, p["router"], p["we_gate"], p["we_up"],
+                      p["we_down"], mode=moe_mode)
+        if cfg.n_shared_experts:
+            out = out + L.swiglu(hn, p["ws_gate"], p["ws_up"], p["ws_down"])
+    else:
+        out = L.swiglu(hn, p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.post_norms:
+        out = L.rms_norm(out, p["mlp_post_norm"])
+    return topo.constrain(h + out, "batch", None, None)
+
+
+def decoder_layer(cfg: ModelConfig, topo: Topology, p, h, cos, sin, *,
+                  local: bool, q_block: int = 512, kv_block: int = 512,
+                  pad_heads: bool = False, moe_mode: str = "auto"):
+    window = cfg.sliding_window if local else None
+    h = attention_block(cfg, topo, p, h, cos, sin, window=window,
+                        q_block=q_block, kv_block=kv_block,
+                        pad_heads=pad_heads)
+    return ffn_block(cfg, topo, p, h, moe_mode=moe_mode)
+
+
+# ---------------------------------------------------------------------------
+# Full forward
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RunOptions:
+    q_block: int = 512
+    kv_block: int = 512
+    remat: bool = True
+    remat_policy: Optional[str] = "dots"   # None | "dots" | "full"
+    # §Perf knobs (EXPERIMENTS.md) — all EXACT-equivalent transforms:
+    pad_heads: bool = False    # zero-pad q heads to shard over model (A1)
+    moe_mode: str = "auto"     # force "rpc"/"onesided" for ablation (B1)
+
+
+def _maybe_remat(fn, opts: RunOptions):
+    if not opts.remat:
+        return fn
+    policy = None
+    if opts.remat_policy == "dots":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def forward(cfg: ModelConfig, topo: Topology, params, tokens, *,
+            extra_embeds=None, opts: RunOptions = RunOptions()):
+    """tokens: (B, S) int32 -> logits (B, S, V) vocab-sharded."""
+    B, S = tokens.shape
+    d = cfg.d_model
+    h = embed_lookup(topo, params["embed"], tokens)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(np.sqrt(d), h.dtype)
+    if extra_embeds is not None:
+        # VLM stub: precomputed patch embeddings occupy the first P positions
+        h = lax.dynamic_update_slice(h, extra_embeds.astype(h.dtype), (0, 0, 0))
+    h = topo.constrain(h, "batch", None, None)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cos, sin = L.rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+
+    g = max(1, cfg.local_global_pattern)
+    Lyr = cfg.n_layers
+    assert Lyr % g == 0, (Lyr, g)
+    stacked = jax.tree.map(
+        lambda a: a.reshape((Lyr // g, g) + a.shape[1:]), params["layers"])
+
+    def group_body(carry, gp):
+        hh = carry
+        for kk in range(g):
+            pk = jax.tree.map(lambda a: a[kk], gp)
+            local = (cfg.local_global_pattern == 2 and kk == 0)
+            hh = decoder_layer(cfg, topo, pk, hh, cos, sin, local=local,
+                               q_block=opts.q_block, kv_block=opts.kv_block,
+                               pad_heads=opts.pad_heads,
+                               moe_mode=opts.moe_mode)
+        return hh, None
+
+    h, _ = lax.scan(_maybe_remat(group_body, opts), h, stacked)
+    h = L.rms_norm(h, params["final_norm"])
+    table = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bsd,vd->bsv", h, table,
+                        preferred_element_type=jnp.float32)
+    logits = L.softcap(logits, cfg.logit_softcap)
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", None, "vocab")

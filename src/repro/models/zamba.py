@@ -1,0 +1,87 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared transformer block
+(attention + MLP, a single weight copy) applied after every
+`shared_attn_every`-th mamba layer (arXiv:2411.15242).
+
+The shared block is the Storm "cache the hot data structure" analogue: one
+replicated-parameter structure serving many call sites; its KV cache is the
+remote region the serving layer shards (DESIGN §6).
+
+Deviation noted in DESIGN.md: the original concatenates the residual stream
+with the initial embedding at shared-block inputs and applies per-invocation
+LoRA deltas; we apply the shared block directly on the stream (same comm and
+compute pattern, fewer bells).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.embedding import embed_lookup
+from repro.parallel.sharding import ParamSpec as PS, Topology
+
+
+def _shared_cfg(cfg: ModelConfig) -> ModelConfig:
+    import dataclasses
+    return dataclasses.replace(cfg, d_ff=cfg.shared_d_ff, n_experts=0,
+                               local_global_pattern=0, qkv_bias=False,
+                               post_norms=False)
+
+
+def param_specs(cfg: ModelConfig):
+    from repro.models.transformer import layer_param_specs
+    n_scan = (cfg.n_layers // cfg.shared_attn_every) * cfg.shared_attn_every
+    n_tail = cfg.n_layers - n_scan
+    tree = {
+        "embed": PS((cfg.vocab_padded, cfg.d_model), ("vocab", None), "normal"),
+        "final_norm": PS((cfg.d_model,), (None,), "ones"),
+        "layers": M.mamba_layer_specs(cfg, n_layers=n_scan),
+        "shared": layer_param_specs(_shared_cfg(cfg), stacked=False),
+    }
+    if n_tail:
+        tree["tail_layers"] = M.mamba_layer_specs(cfg, n_layers=n_tail)
+    return tree
+
+
+def shared_block(cfg: ModelConfig, topo: Topology, p, h, cos, sin, opts):
+    from repro.models.transformer import decoder_layer
+    return decoder_layer(_shared_cfg(cfg), topo, p, h, cos, sin, local=False,
+                         q_block=opts.q_block, kv_block=opts.kv_block)
+
+
+def forward(cfg: ModelConfig, topo: Topology, params, tokens, *, opts=None):
+    from repro.models.transformer import RunOptions, _maybe_remat
+    opts = opts or RunOptions()
+    B, S = tokens.shape
+    k = cfg.shared_attn_every
+    n_scan = (cfg.n_layers // k) * k
+    h = embed_lookup(topo, params["embed"], tokens)
+    h = topo.constrain(h, "batch", None, None)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cos, sin = L.rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    shared = params["shared"]
+
+    stacked = jax.tree.map(
+        lambda a: a.reshape((n_scan // k, k) + a.shape[1:]), params["layers"])
+
+    def group(hh, gp):
+        for i in range(k):
+            pk = jax.tree.map(lambda a: a[i], gp)
+            hh, _ = M.mamba_block(cfg, topo, pk, hh)
+        hh = shared_block(cfg, topo, shared, hh, cos, sin, opts)
+        return hh, None
+
+    h, _ = lax.scan(_maybe_remat(group, opts), h, stacked)
+    if "tail_layers" in params:
+        def tail(hh, lp):
+            hh, _ = M.mamba_block(cfg, topo, lp, hh)
+            return hh, None
+        h, _ = lax.scan(_maybe_remat(tail, opts), h, params["tail_layers"])
+    h = L.rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,vd->bsv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", None, "vocab")

@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamWConfig, init_opt_state, opt_state_specs, apply_updates  # noqa: F401

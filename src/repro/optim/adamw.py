@@ -1,0 +1,83 @@
+"""AdamW with fp32 master weights + moments, sharded exactly like the params
+(ZeRO-style via the fsdp axis on the weight specs).  bf16 params are derived
+from the master copy each step; gradient clipping is by global norm (the
+norm reduction crosses every sharded axis — XLA partitions it into local
+partials + one small all-reduce)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamSpec, is_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+
+
+def opt_state_specs(param_spec_tree):
+    """Master/m/v get the same logical axes as the param, fp32."""
+    def f32spec(s: ParamSpec) -> ParamSpec:
+        return dataclasses.replace(s, dtype=jnp.float32, init="zeros")
+    return {
+        "master": jax.tree.map(
+            lambda s: dataclasses.replace(s, dtype=jnp.float32),
+            param_spec_tree, is_leaf=is_spec),
+        "m": jax.tree.map(f32spec, param_spec_tree, is_leaf=is_spec),
+        "v": jax.tree.map(f32spec, param_spec_tree, is_leaf=is_spec),
+        "step": ParamSpec((), (), "zeros", jnp.int32),
+    }
+
+
+def init_opt_state(params):
+    return {
+        "master": jax.tree.map(lambda p: p.astype(jnp.float32), params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+def apply_updates(cfg: AdamWConfig, grads, opt_state, param_dtype=jnp.bfloat16):
+    """Returns (new_params_bf16, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    # global-norm clip in fp32
+    leaves = jax.tree.leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in leaves))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    lr = _schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m / b1c
+        vh = v / b2c
+        w = w - lr * (mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * w)
+        return m, v, w
+
+    out = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"],
+                       opt_state["master"])
+    m = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    v = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    w = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    params = jax.tree.map(lambda x: x.astype(param_dtype), w)
+    new_state = {"master": w, "m": m, "v": v, "step": step}
+    return params, new_state, {"grad_norm": gnorm, "lr": lr}

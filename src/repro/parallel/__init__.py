@@ -1,0 +1,1 @@
+from repro.parallel.sharding import Topology, ParamSpec, init_params, abstract_params  # noqa: F401

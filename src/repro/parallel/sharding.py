@@ -1,0 +1,159 @@
+"""Logical-axis sharding rules (MaxText-style) + parameter spec trees.
+
+Model code names LOGICAL axes ("batch", "heads", "ff", ...); the Topology maps
+them to mesh axes and silently drops any mapping that does not divide the
+concrete dimension (e.g. qwen2.5's 40 heads on a 16-wide model axis fall back
+to replication — the per-arch table in DESIGN.md §5).
+
+Storm connection: this table is the "region registration" of the dataplane —
+it is decided once, off the data path, and produces a STATIC communication
+schedule, the moral equivalent of Storm's pre-established RC connections.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> tuple of mesh axis names (applied only if present + divides)
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),
+    "kv_seq": ("model",),        # decode-time sequence-sharded KV cache
+    "vocab": ("model",),
+    "embed": (),
+    "ff": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "expert": ("model",),
+    "fsdp": ("data",),           # ZeRO-3 weight dim
+    "ssm_state": (),
+    "conv": (),
+}
+
+# Serving: no fsdp (weights kept whole per model-shard, replicated over data)
+SERVE_RULES = dict(DEFAULT_RULES, fsdp=(), batch=("pod", "data"))
+
+# §Perf C: sub-scale models (mamba2-780m-class) waste the model axis on
+# 96-wide TP matmuls and pay per-layer activation all-reduces.  Wide-DP
+# reassigns the model axis to batch + ZeRO: zero TP collectives, params
+# sharded over all chips and gathered per layer.
+WIDE_DP_RULES = dict(
+    DEFAULT_RULES,
+    batch=("pod", "data", "model"),
+    fsdp=("data", "model"),
+    ff=(), heads=(), kv_heads=(), vocab=(), expert=(), kv_seq=(),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+
+    @property
+    def axis_sizes(self) -> Dict[str, int]:
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def _mesh_axes_for(self, logical: Optional[str], dim: int) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        axes = tuple(a for a in self.rules.get(logical, ()) if a in self.mesh.axis_names)
+        # drop trailing axes until the product divides the dimension
+        while axes:
+            prod = int(np.prod([self.axis_sizes[a] for a in axes]))
+            if dim % prod == 0:
+                return axes
+            axes = axes[:-1]
+        return ()
+
+    def spec_for(self, shape: Sequence[int],
+                 logical_axes: Sequence[Optional[str]]) -> P:
+        assert len(shape) == len(logical_axes), (shape, logical_axes)
+        entries = []
+        used: set = set()
+        for dim, name in zip(shape, logical_axes):
+            axes = tuple(a for a in self._mesh_axes_for(name, dim) if a not in used)
+            # re-check divisibility after removing already-used axes
+            while axes and dim % int(np.prod([self.axis_sizes[a] for a in axes])) != 0:
+                axes = axes[:-1]
+            used.update(axes)
+            entries.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        return P(*entries)
+
+    def sharding_for(self, shape, logical_axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(shape, logical_axes))
+
+    def constrain(self, x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+        return jax.lax.with_sharding_constraint(
+            x, self.sharding_for(x.shape, logical_axes))
+
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Parameter specification trees
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical_axes: Tuple[Optional[str], ...]
+    init: str = "normal"        # "normal" | "zeros" | "ones" | "scaled"
+    dtype: Any = jnp.bfloat16
+    scale: float = 0.02
+
+    def initialize(self, key) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "scaled":  # 1/sqrt(fan_in) truncated normal
+            fan_in = self.shape[0] if len(self.shape) > 1 else max(self.shape[0], 1)
+            s = 1.0 / np.sqrt(fan_in)
+            return (jax.random.truncated_normal(key, -2, 2, self.shape, jnp.float32)
+                    * s).astype(self.dtype)
+        return (jax.random.normal(key, self.shape, jnp.float32)
+                * self.scale).astype(self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree, key):
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [l.initialize(k) for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStructs for the dry-run — full configs never allocate."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), spec_tree,
+        is_leaf=is_spec)
+
+
+def param_shardings(topo: Topology, spec_tree):
+    return jax.tree.map(
+        lambda s: topo.sharding_for(s.shape, s.logical_axes), spec_tree,
+        is_leaf=is_spec)
+
+
+def param_specs_pspec(topo: Topology, spec_tree):
+    return jax.tree.map(
+        lambda s: topo.spec_for(s.shape, s.logical_axes), spec_tree,
+        is_leaf=is_spec)
+
+
+def constrain_params(topo: Topology, spec_tree, params):
+    return jax.tree.map(
+        lambda s, p: jax.lax.with_sharding_constraint(
+            p, topo.sharding_for(s.shape, s.logical_axes)),
+        spec_tree, params, is_leaf=is_spec)

@@ -1,0 +1,2 @@
+from repro.serving.decode import (cache_specs, init_cache, make_prefill,  # noqa: F401
+                                  make_decode_step)

@@ -1,0 +1,432 @@
+"""Serving: prefill + single-token decode with the Storm-hybrid KV cache.
+
+The KV cache is the framework's flagship "remote data structure" (DESIGN §3):
+one contiguous region per layer, sharded over the `model` axis.  Two access
+modes per architecture, chosen STRUCTURALLY by the sharding that is legal and
+priced by the cost model:
+
+  * heads mode ("one-sided"):  kv-heads shard over `model`; the decode
+    attention runs entirely locally per shard — the query's shard reads
+    exactly its heads' K/V rows.  Needs n_kv % tp == 0
+    (deepseek 16, gemma2 16, whisper 16, zamba2 32).
+  * seq mode ("RPC"): the cache shards over SEQUENCE; the query is broadcast
+    to every shard, each computes partial flash-decode statistics (m, l, o)
+    over its local slice — compute-at-the-data — and a psum combines.
+    This is Storm's write-based RPC pattern: tiny request (q) out, tiny
+    reply (partials) back, owner does the walking.
+    (granite kv=8, qwen2.5 kv=8, qwen1.5 kv=20, glm4 kv=2, llava kv=8.)
+
+KV append for the new token is a one-sided WRITE at a static offset
+(scatter at `len`), never a handler.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.embedding import embed_lookup
+from repro.models.moe import moe_ffn
+from repro.models.transformer import RunOptions, _maybe_remat
+from repro.parallel.sharding import Topology
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+def kv_mode(cfg: ModelConfig, topo: Topology) -> str:
+    tp = topo.axis_sizes.get("model", 1)
+    if tp == 1:
+        return "heads"
+    return "heads" if (cfg.n_kv_heads % tp == 0 and cfg.n_heads % tp == 0) \
+        else "seq"
+
+
+def _kv_axes(mode: str):
+    return ((None, "batch", None, "kv_heads", None) if mode == "heads"
+            else (None, "batch", "kv_seq", None, None))
+
+
+def cache_specs(cfg: ModelConfig, topo: Topology, B: int, S: int):
+    """Returns {name: (shape, logical_axes, dtype)} describing the cache."""
+    out: Dict[str, Tuple] = {"len": ((B,), ("batch",), jnp.int32)}
+    if cfg.family in ("dense", "moe", "vlm"):
+        mode = kv_mode(cfg, topo)
+        shp = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+        out["k"] = (shp, _kv_axes(mode), jnp.bfloat16)
+        out["v"] = (shp, _kv_axes(mode), jnp.bfloat16)
+    if cfg.family in ("ssm", "hybrid"):
+        nl = cfg.n_layers
+        di, GN = cfg.d_inner, cfg.ssm_groups * cfg.ssm_state
+        K = cfg.conv_width
+        H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+        out["conv_x"] = ((nl, B, K - 1, di), (None, "batch", None, "ff"), jnp.bfloat16)
+        out["conv_B"] = ((nl, B, K - 1, GN), (None, "batch", None, None), jnp.bfloat16)
+        out["conv_C"] = ((nl, B, K - 1, GN), (None, "batch", None, None), jnp.bfloat16)
+        out["ssm"] = ((nl, B, H, N, P), (None, "batch", "heads", None, None), jnp.float32)
+    if cfg.family == "hybrid":
+        napps = cfg.n_layers // cfg.shared_attn_every
+        mode = kv_mode(cfg, topo)
+        shp = (napps, B, S, cfg.n_kv_heads, cfg.head_dim)
+        out["shared_k"] = (shp, _kv_axes(mode), jnp.bfloat16)
+        out["shared_v"] = (shp, _kv_axes(mode), jnp.bfloat16)
+    if cfg.family == "audio":
+        mode = kv_mode(cfg, topo)
+        shp = (cfg.n_layers, B, S, cfg.n_kv_heads, cfg.head_dim)
+        xshp = (cfg.n_layers, B, cfg.encoder_seq, cfg.n_kv_heads, cfg.head_dim)
+        out["k"] = (shp, _kv_axes(mode), jnp.bfloat16)
+        out["v"] = (shp, _kv_axes(mode), jnp.bfloat16)
+        out["xk"] = (xshp, (None, "batch", None, "kv_heads", None), jnp.bfloat16)
+        out["xv"] = (xshp, (None, "batch", None, "kv_heads", None), jnp.bfloat16)
+    return out
+
+
+def cache_abstract(cfg, topo, B, S):
+    return {k: jax.ShapeDtypeStruct(shp, dt)
+            for k, (shp, _, dt) in cache_specs(cfg, topo, B, S).items()}
+
+
+def cache_shardings(cfg, topo, B, S):
+    return {k: topo.sharding_for(shp, ax)
+            for k, (shp, ax, dt) in cache_specs(cfg, topo, B, S).items()}
+
+
+def init_cache(cfg, topo, B, S):
+    return {k: jnp.zeros(shp, dt)
+            for k, (shp, _, dt) in cache_specs(cfg, topo, B, S).items()}
+
+
+# ---------------------------------------------------------------------------
+# Hybrid decode attention
+# ---------------------------------------------------------------------------
+def _flash_decode_shardmap(cfg: ModelConfig, topo: Topology, q, kc, vc, lens,
+                           window: Optional[int]):
+    """The RPC path: q broadcast to sequence shards, partial (m,l,o) combined
+    by psum — compute runs where the KV rows live."""
+    B, S, Hkv, hd = kc.shape
+    Hq = q.shape[1]
+    G = Hq // Hkv
+    scale = hd ** -0.5
+    tp = topo.axis_sizes.get("model", 1)
+    S_loc = S // tp
+
+    q_spec = topo.spec_for(q.shape, ("batch", None, None))
+    kv_spec = topo.spec_for(kc.shape, ("batch", "kv_seq", None, None))
+    len_spec = topo.spec_for(lens.shape, ("batch",))
+
+    def f(q_, kc_, vc_, lens_):
+        r = lax.axis_index("model")
+        pos = r * S_loc + jnp.arange(S_loc)
+        mask = pos[None] < lens_[:, None]
+        if window is not None:
+            mask &= pos[None] > (lens_[:, None] - 1) - window
+        qg = q_.reshape(B_loc(q_), Hkv, G, hd)
+        s = jnp.einsum("bhgd,bshd->bhgs", qg, kc_,
+                       preferred_element_type=jnp.float32) * scale
+        s = L.softcap(s, cfg.attn_softcap)
+        s = jnp.where(mask[:, None, None], s, -1e30)
+        m = jnp.max(s, axis=-1)
+        p = jnp.exp(s - m[..., None])
+        l = jnp.sum(p, axis=-1)
+        o = jnp.einsum("bhgs,bshd->bhgd", p.astype(vc_.dtype), vc_,
+                       preferred_element_type=jnp.float32)
+        # combine partials across shards (the RPC replies)
+        Mg = lax.pmax(m, "model")
+        corr = jnp.exp(m - Mg)
+        Lg = lax.psum(l * corr, "model")
+        Og = lax.psum(o * corr[..., None], "model")
+        out = Og / jnp.maximum(Lg, 1e-30)[..., None]
+        return out.reshape(q_.shape).astype(q_.dtype)
+
+    def B_loc(q_):
+        return q_.shape[0]
+
+    return jax.shard_map(f, mesh=topo.mesh,
+                         in_specs=(q_spec, kv_spec, kv_spec, len_spec),
+                         out_specs=q_spec, check_vma=False)(q, kc, vc, lens)
+
+
+def hybrid_decode_attention(cfg: ModelConfig, topo: Topology, q, kc, vc, lens,
+                            *, window=None, mode: Optional[str] = None):
+    """q: (B, Hq, hd); kc/vc: (B, S, Hkv, hd); lens: (B,)."""
+    mode = mode or kv_mode(cfg, topo)
+    if mode == "heads":
+        # one-sided path: every head's K/V rows are local to its shard
+        q = topo.constrain(q, "batch", "heads", None)
+        return L.decode_attention(q, kc, vc, lens, window=window,
+                                  attn_softcap=cfg.attn_softcap)
+    return _flash_decode_shardmap(cfg, topo, q, kc, vc, lens, window)
+
+
+def append_kv(kc, vc, k_new, v_new, lens):
+    """One-sided WRITE of the new token's K/V at offset `len` (per row)."""
+    B = lens.shape[0]
+    rows = jnp.arange(B)
+    kc = kc.at[rows, lens].set(k_new.astype(kc.dtype))
+    vc = vc.at[rows, lens].set(v_new.astype(vc.dtype))
+    return kc, vc
+
+
+# ---------------------------------------------------------------------------
+# Transformer decode
+# ---------------------------------------------------------------------------
+def _rope_single(x, lens, theta):
+    """x: (B, H, hd) at per-row positions lens (B,)."""
+    cos, sin = L.rope_tables(lens.astype(jnp.int32), x.shape[-1], theta)
+    return L.apply_rope(x[:, None], cos[:, None], sin[:, None])[:, 0]
+
+
+def _tf_decode_layer(cfg, topo, p, h, kc, vc, lens, *, local: bool):
+    B, d = h.shape
+    hd, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    hn = L.rms_norm(h, p["attn_norm"])
+    q = jnp.einsum("bd,dq->bq", hn, p["wq"])
+    k = jnp.einsum("bd,dq->bq", hn, p["wk"])
+    v = jnp.einsum("bd,dq->bq", hn, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _rope_single(q.reshape(B, Hq, hd), lens, cfg.rope_theta)
+    k = _rope_single(k.reshape(B, Hkv, hd), lens, cfg.rope_theta)
+    v = v.reshape(B, Hkv, hd)
+    kc, vc = append_kv(kc, vc, k, v, lens)
+    window = cfg.sliding_window if local else None
+    att = hybrid_decode_attention(cfg, topo, q, kc, vc, lens + 1, window=window)
+    o = jnp.einsum("bq,qd->bd", att.reshape(B, Hq * hd), p["wo"])
+    if cfg.post_norms:
+        o = L.rms_norm(o, p["attn_post_norm"])
+    h = h + o
+    hn = L.rms_norm(h, p["mlp_norm"])
+    if cfg.is_moe:
+        out = moe_ffn(cfg, topo, hn[:, None], p["router"], p["we_gate"],
+                      p["we_up"], p["we_down"])[:, 0]
+        if cfg.n_shared_experts:
+            out = out + L.swiglu(hn, p["ws_gate"], p["ws_up"], p["ws_down"])
+    else:
+        out = L.swiglu(hn, p["w_gate"], p["w_up"], p["w_down"])
+    if cfg.post_norms:
+        out = L.rms_norm(out, p["mlp_post_norm"])
+    return h + out, kc, vc
+
+
+def _tf_decode(cfg: ModelConfig, topo: Topology, params, cache, tokens):
+    """tokens: (B,) int32.  Returns (logits (B, V), cache)."""
+    B = tokens.shape[0]
+    lens = cache["len"]
+    h = embed_lookup(topo, params["embed"], tokens[:, None])[:, 0]
+    if cfg.embed_scale:
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    g = max(1, cfg.local_global_pattern)
+    Lyr = cfg.n_layers
+    stacked = jax.tree.map(
+        lambda a: a.reshape((Lyr // g, g) + a.shape[1:]), params["layers"])
+    kcs = cache["k"].reshape((Lyr // g, g) + cache["k"].shape[1:])
+    vcs = cache["v"].reshape((Lyr // g, g) + cache["v"].shape[1:])
+
+    def body(h, xs):
+        gp, kc_g, vc_g = xs
+        nk, nv = [], []
+        for i in range(g):
+            pk = jax.tree.map(lambda a: a[i], gp)
+            local = (cfg.local_global_pattern == 2 and i == 0)
+            h, kc, vc = _tf_decode_layer(cfg, topo, pk, h, kc_g[i], vc_g[i],
+                                         lens, local=local)
+            nk.append(kc)
+            nv.append(vc)
+        return h, (jnp.stack(nk), jnp.stack(nv))
+
+    h, (nk, nv) = lax.scan(body, h, (stacked, kcs, vcs))
+    cache = dict(cache)
+    cache["k"] = nk.reshape(cache["k"].shape)
+    cache["v"] = nv.reshape(cache["v"].shape)
+    cache["len"] = lens + 1
+    h = L.rms_norm(h, params["final_norm"])
+    table = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", h, table,
+                        preferred_element_type=jnp.float32)
+    logits = L.softcap(logits, cfg.logit_softcap)
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", "vocab"), cache
+
+
+# ---------------------------------------------------------------------------
+# Mamba / hybrid decode
+# ---------------------------------------------------------------------------
+def _ssm_decode_layer(cfg, topo, p, h, conv_x, conv_B, conv_C, ssm_st):
+    h2, (ncs, nss) = M.mamba_block(
+        cfg, topo, p, h[:, None], conv_state=(conv_x, conv_B, conv_C),
+        ssm_state=ssm_st, decode=True)
+    return h2[:, 0], ncs, nss
+
+
+def _ssm_decode(cfg: ModelConfig, topo: Topology, params, cache, tokens):
+    B = tokens.shape[0]
+    h = embed_lookup(topo, params["embed"], tokens[:, None])[:, 0]
+
+    def body(h, xs):
+        lp, cx, cb, cc, st = xs
+        h, (ncx, ncb, ncc), nst = _ssm_decode_layer(cfg, topo, lp, h, cx, cb, cc, st)
+        return h, (ncx, ncb, ncc, nst)
+
+    h, (ncx, ncb, ncc, nst) = lax.scan(
+        body, h, (params["layers"], cache["conv_x"], cache["conv_B"],
+                  cache["conv_C"], cache["ssm"]))
+    cache = dict(cache, conv_x=ncx, conv_B=ncb, conv_C=ncc, ssm=nst,
+                 len=cache["len"] + 1)
+    h = L.rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", "vocab"), cache
+
+
+def _shared_decode_block(cfg, topo, p, h, kc, vc, lens):
+    """Zamba shared transformer block, decode flavour (no pattern/moe)."""
+    import dataclasses as dc
+    scfg = dc.replace(cfg, d_ff=cfg.shared_d_ff, n_experts=0, qkv_bias=False,
+                      post_norms=False)
+    return _tf_decode_layer(scfg, topo, p, h, kc, vc, lens, local=False)
+
+
+def _hybrid_decode(cfg: ModelConfig, topo: Topology, params, cache, tokens):
+    B = tokens.shape[0]
+    k = cfg.shared_attn_every
+    n_scan = (cfg.n_layers // k) * k
+    lens = cache["len"]
+    h = embed_lookup(topo, params["embed"], tokens[:, None])[:, 0]
+    shared = params["shared"]
+    grp = jax.tree.map(
+        lambda a: a.reshape((n_scan // k, k) + a.shape[1:]), params["layers"])
+    sub = lambda t, n=n_scan // k, kk=k: jax.tree.map(
+        lambda a: a.reshape((n, kk) + a.shape[1:]), t)
+
+    def body(h, xs):
+        gp, cx, cb, cc, st, skc, svc = xs
+        ncx, ncb, ncc, nst = [], [], [], []
+        for i in range(k):
+            lp = jax.tree.map(lambda a: a[i], gp)
+            h, (a, b, c), s = _ssm_decode_layer(
+                cfg, topo, lp, h, cx[i], cb[i], cc[i], st[i])
+            ncx.append(a); ncb.append(b); ncc.append(c); nst.append(s)
+        h, skc, svc = _shared_decode_block(cfg, topo, shared, h, skc, svc, lens)
+        return h, (jnp.stack(ncx), jnp.stack(ncb), jnp.stack(ncc),
+                   jnp.stack(nst), skc, svc)
+
+    xs = (grp, *[sub(cache[n][:n_scan]) for n in
+                 ("conv_x", "conv_B", "conv_C", "ssm")],
+          cache["shared_k"], cache["shared_v"])
+    h, (ncx, ncb, ncc, nst, nskc, nsvc) = lax.scan(body, h, xs)
+
+    cache = dict(cache)
+    for name, new in (("conv_x", ncx), ("conv_B", ncb), ("conv_C", ncc),
+                      ("ssm", nst)):
+        flat = new.reshape((n_scan,) + new.shape[2:])
+        if n_scan < cfg.n_layers:
+            pass
+        cache[name] = cache[name].at[:n_scan].set(flat.astype(cache[name].dtype))
+    cache["shared_k"], cache["shared_v"] = nskc, nsvc
+
+    if "tail_layers" in params:
+        def tail(h, xs):
+            lp, cx, cb, cc, st = xs
+            h, (a, b, c), s = _ssm_decode_layer(cfg, topo, lp, h, cx, cb, cc, st)
+            return h, (a, b, c, s)
+        n_tail = cfg.n_layers - n_scan
+        h, (tcx, tcb, tcc, tst) = lax.scan(
+            tail, h, (params["tail_layers"],
+                      *[cache[n][n_scan:] for n in
+                        ("conv_x", "conv_B", "conv_C", "ssm")]))
+        for name, new in (("conv_x", tcx), ("conv_B", tcb), ("conv_C", tcc),
+                          ("ssm", tst)):
+            cache[name] = cache[name].at[n_scan:].set(
+                new.astype(cache[name].dtype))
+    cache["len"] = lens + 1
+    h = L.rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", "vocab"), cache
+
+
+# ---------------------------------------------------------------------------
+# Whisper decode
+# ---------------------------------------------------------------------------
+def _wh_decode_layer(cfg, topo, p, h, kc, vc, xk, xv, lens):
+    B, d = h.shape
+    hd, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    hn = L.layer_norm(h, p["s_ln_w"], p["s_ln_b"])
+    q = (jnp.einsum("bd,dq->bq", hn, p["s_wq"]) + p["s_bq"]).reshape(B, Hq, hd)
+    k = jnp.einsum("bd,dq->bq", hn, p["s_wk"]).reshape(B, Hkv, hd)
+    v = (jnp.einsum("bd,dq->bq", hn, p["s_wv"]) + p["s_bv"]).reshape(B, Hkv, hd)
+    kc, vc = append_kv(kc, vc, k, v, lens)
+    att = hybrid_decode_attention(cfg, topo, q, kc, vc, lens + 1)
+    h = h + jnp.einsum("bq,qd->bd", att.reshape(B, Hq * hd), p["s_wo"]) + p["s_bo"]
+    # cross attention: READ-ONLY remote region (one-sided reads)
+    hn = L.layer_norm(h, p["x_ln_w"], p["x_ln_b"])
+    q = (jnp.einsum("bd,dq->bq", hn, p["x_wq"]) + p["x_bq"]).reshape(B, Hq, hd)
+    xlen = jnp.full((B,), xk.shape[1], jnp.int32)
+    att = hybrid_decode_attention(cfg, topo, q, xk, xv, xlen, mode="heads")
+    h = h + jnp.einsum("bq,qd->bd", att.reshape(B, Hq * hd), p["x_wo"]) + p["x_bo"]
+    hn = L.layer_norm(h, p["m_ln_w"], p["m_ln_b"])
+    h = h + L.gelu_mlp(hn, p["w_in"], p["b_in"], p["w_out"], p["b_out"])
+    return h, kc, vc
+
+
+def _wh_decode(cfg: ModelConfig, topo: Topology, params, cache, tokens):
+    B = tokens.shape[0]
+    lens = cache["len"]
+    from repro.models.whisper import sinusoid
+    h = embed_lookup(topo, params["embed"], tokens[:, None])[:, 0]
+    h = h + jnp.take(sinusoid(cache["k"].shape[2], cfg.d_model), lens, axis=0)
+
+    def body(h, xs):
+        lp, kc, vc, xk, xv = xs
+        h, kc, vc = _wh_decode_layer(cfg, topo, lp, h, kc, vc, xk, xv, lens)
+        return h, (kc, vc)
+
+    h, (nk, nv) = lax.scan(body, h, (params["dec_layers"], cache["k"],
+                                     cache["v"], cache["xk"], cache["xv"]))
+    cache = dict(cache, k=nk, v=nv, len=lens + 1)
+    h = L.layer_norm(h, params["dec_ln_w"], params["dec_ln_b"])
+    logits = jnp.einsum("bd,vd->bv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", "vocab"), cache
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+def make_decode_step(cfg: ModelConfig, topo: Topology):
+    if cfg.family in ("dense", "moe", "vlm"):
+        fn = _tf_decode
+    elif cfg.family == "ssm":
+        fn = _ssm_decode
+    elif cfg.family == "hybrid":
+        fn = _hybrid_decode
+    elif cfg.family == "audio":
+        fn = _wh_decode
+    else:
+        raise ValueError(cfg.family)
+
+    def decode_step(params, cache, tokens):
+        return fn(cfg, topo, params, cache, tokens)
+
+    return decode_step
+
+
+def make_prefill(cfg: ModelConfig, topo: Topology, S: int,
+                 opts: RunOptions = RunOptions()):
+    """Returns prefill(params, batch) -> (last_logits (B, V), cache).
+
+    Prefill reuses the training forward blocks but emits per-layer K/V into
+    the cache region (transformers) or carries SSM states (mamba/zamba)."""
+    from repro.serving.prefill import prefill_fn
+    return partial(prefill_fn, cfg, topo, S, opts)

@@ -1,0 +1,250 @@
+"""Prefill: forward pass over the prompt that populates the KV cache.
+
+Structurally the training forward with (a) per-layer K/V emitted into the
+cache region (a bulk one-sided WRITE of each layer's rows), (b) LM head on
+the last position only, (c) no remat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models.embedding import embed_lookup
+from repro.models.moe import moe_ffn
+from repro.models.transformer import RunOptions, ffn_block
+from repro.parallel.sharding import Topology
+from repro.serving.decode import kv_mode, _kv_axes
+
+
+def _attn_with_cache(cfg, topo, p, h, cos, sin, *, window, opts):
+    """Like transformer.attention_block but returns (h, k_cache_rows, v_...)."""
+    B, S, d = h.shape
+    hd, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    tp = topo.axis_sizes.get("model", 1)
+    hn = L.rms_norm(h, p["attn_norm"])
+    q = jnp.einsum("bsd,dq->bsq", hn, p["wq"])
+    k = jnp.einsum("bsd,dq->bsq", hn, p["wk"])
+    v = jnp.einsum("bsd,dq->bsq", hn, p["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = L.apply_rope(q.reshape(B, S, Hq, hd), cos, sin)
+    k = L.apply_rope(k.reshape(B, S, Hkv, hd), cos, sin)
+    v = v.reshape(B, S, Hkv, hd)
+    kv_ax = _kv_axes(kv_mode(cfg, topo))[1:]
+    k = topo.constrain(k, *kv_ax)
+    v = topo.constrain(v, *kv_ax)
+
+    head_tp = (tp == 1) or (Hq % tp == 0)
+    if head_tp:
+        ka, va = k, v
+        if Hkv % max(tp, 1) != 0 and tp > 1:
+            g = Hq // Hkv
+            ka = jnp.repeat(k, g, axis=2)
+            va = jnp.repeat(v, g, axis=2)
+        q = topo.constrain(q, "batch", None, "heads", None)
+        out = L.block_attention(q, ka, va, causal=True, window=window,
+                                attn_softcap=cfg.attn_softcap,
+                                q_block=opts.q_block, kv_block=opts.kv_block)
+    else:
+        q = topo.constrain(q, "batch", "kv_seq", None, None)
+        out = L.block_attention(q, k, v, causal=True, window=window,
+                                attn_softcap=cfg.attn_softcap,
+                                q_block=S, kv_block=opts.kv_block)
+        out = topo.constrain(out, "batch", "kv_seq", None, None)
+    o = jnp.einsum("bsq,qd->bsd", out.reshape(B, S, Hq * hd), p["wo"])
+    if cfg.post_norms:
+        o = L.rms_norm(o, p["attn_post_norm"])
+    return topo.constrain(h + o, "batch", None, None), k, v
+
+
+def _tf_prefill(cfg: ModelConfig, topo: Topology, S, opts, params, batch):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    h = embed_lookup(topo, params["embed"], tokens)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(np.sqrt(cfg.d_model), h.dtype)
+    if batch.get("patch_embeds") is not None:
+        h = lax.dynamic_update_slice(
+            h, batch["patch_embeds"].astype(h.dtype), (0, 0, 0))
+    h = topo.constrain(h, "batch", None, None)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cos, sin = L.rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    g = max(1, cfg.local_global_pattern)
+    Lyr = cfg.n_layers
+    stacked = jax.tree.map(
+        lambda a: a.reshape((Lyr // g, g) + a.shape[1:]), params["layers"])
+
+    def body(h, gp):
+        ks, vs = [], []
+        for i in range(g):
+            pk = jax.tree.map(lambda a: a[i], gp)
+            local = (cfg.local_global_pattern == 2 and i == 0)
+            h, k, v = _attn_with_cache(
+                cfg, topo, pk, h, cos, sin,
+                window=cfg.sliding_window if local else None, opts=opts)
+            h = ffn_block(cfg, topo, pk, h)
+            ks.append(k)
+            vs.append(v)
+        return h, (jnp.stack(ks), jnp.stack(vs))
+
+    h, (ks, vs) = lax.scan(body, h, stacked)
+    kc = ks.reshape((Lyr,) + ks.shape[2:])
+    vc = vs.reshape((Lyr,) + vs.shape[2:])
+    h = L.rms_norm(h[:, -1], params["final_norm"])
+    table = params.get("lm_head", params["embed"])
+    logits = jnp.einsum("bd,vd->bv", h, table,
+                        preferred_element_type=jnp.float32)
+    logits = L.softcap(logits, cfg.logit_softcap)
+    cache = {"k": kc, "v": vc, "len": jnp.full((B,), S, jnp.int32)}
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", "vocab"), cache
+
+
+def _ssm_prefill(cfg, topo, S, opts, params, batch):
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    h = embed_lookup(topo, params["embed"], tokens)
+    h = topo.constrain(h, "batch", None, None)
+    zc = lambda shp, dt=jnp.bfloat16: jnp.zeros(shp, dt)
+    K, di, GN = cfg.conv_width, cfg.d_inner, cfg.ssm_groups * cfg.ssm_state
+
+    def body(h, lp):
+        cs = (zc((B, K - 1, di)), zc((B, K - 1, GN)), zc((B, K - 1, GN)))
+        h, (ncs, nst) = M.mamba_block(cfg, topo, lp, h, conv_state=cs,
+                                      ssm_state=None)
+        return h, (ncs[0], ncs[1], ncs[2], nst)
+
+    h, (cx, cb, cc, st) = lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h[:, -1], params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    cache = {"conv_x": cx, "conv_B": cb, "conv_C": cc, "ssm": st,
+             "len": jnp.full((B,), S, jnp.int32)}
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", "vocab"), cache
+
+
+def _hybrid_prefill(cfg, topo, S, opts, params, batch):
+    from repro.models.zamba import _shared_cfg
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    k = cfg.shared_attn_every
+    n_scan = (cfg.n_layers // k) * k
+    h = embed_lookup(topo, params["embed"], tokens)
+    h = topo.constrain(h, "batch", None, None)
+    pos = jnp.arange(S, dtype=jnp.int32)
+    cos, sin = L.rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    shared = params["shared"]
+    scfg = _shared_cfg(cfg)
+    zc = lambda shp, dt=jnp.bfloat16: jnp.zeros(shp, dt)
+    K, di, GN = cfg.conv_width, cfg.d_inner, cfg.ssm_groups * cfg.ssm_state
+    grp = jax.tree.map(
+        lambda a: a.reshape((n_scan // k, k) + a.shape[1:]), params["layers"])
+
+    def body(h, gp):
+        cxs, cbs, ccs, sts = [], [], [], []
+        for i in range(k):
+            lp = jax.tree.map(lambda a: a[i], gp)
+            cs = (zc((B, K - 1, di)), zc((B, K - 1, GN)), zc((B, K - 1, GN)))
+            h, (ncs, nst) = M.mamba_block(cfg, topo, lp, h, conv_state=cs,
+                                          ssm_state=None)
+            cxs.append(ncs[0]); cbs.append(ncs[1]); ccs.append(ncs[2])
+            sts.append(nst)
+        h, sk, sv = _attn_with_cache(scfg, topo, shared, h, cos, sin,
+                                     window=None, opts=opts)
+        h = ffn_block(scfg, topo, shared, h)
+        return h, (jnp.stack(cxs), jnp.stack(cbs), jnp.stack(ccs),
+                   jnp.stack(sts), sk, sv)
+
+    h, (cx, cb, cc, st, sk, sv) = lax.scan(body, h, grp)
+    reshp = lambda a: a.reshape((n_scan,) + a.shape[2:])
+    cx, cb, cc, st = map(reshp, (cx, cb, cc, st))
+    if "tail_layers" in params:
+        def tail(h, lp):
+            cs = (zc((B, K - 1, di)), zc((B, K - 1, GN)), zc((B, K - 1, GN)))
+            h, (ncs, nst) = M.mamba_block(cfg, topo, lp, h, conv_state=cs,
+                                          ssm_state=None)
+            return h, (ncs[0], ncs[1], ncs[2], nst)
+        h, (tx, tb, tc, ts) = lax.scan(tail, h, params["tail_layers"])
+        cx = jnp.concatenate([cx, tx]); cb = jnp.concatenate([cb, tb])
+        cc = jnp.concatenate([cc, tc]); st = jnp.concatenate([st, ts])
+    h = L.rms_norm(h[:, -1], params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    cache = {"conv_x": cx, "conv_B": cb, "conv_C": cc, "ssm": st,
+             "shared_k": sk, "shared_v": sv,
+             "len": jnp.full((B,), S, jnp.int32)}
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", "vocab"), cache
+
+
+def _wh_prefill(cfg, topo, S, opts, params, batch):
+    from repro.models.whisper import encode, sinusoid
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    frames = batch.get("frames")
+    if frames is None:
+        frames = jnp.zeros((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    enc_out = encode(cfg, topo, params, frames, opts)
+    hd, Hq, Hkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    h = embed_lookup(topo, params["embed"], tokens)
+    h = h + sinusoid(S, cfg.d_model)[None]
+    h = topo.constrain(h, "batch", None, None)
+
+    def body(h, lp):
+        # decoder self-attention with cache emission
+        hn = L.layer_norm(h, lp["s_ln_w"], lp["s_ln_b"])
+        q = (jnp.einsum("bsd,dq->bsq", hn, lp["s_wq"]) + lp["s_bq"]
+             ).reshape(B, S, Hq, hd)
+        k = jnp.einsum("bsd,dq->bsq", hn, lp["s_wk"]).reshape(B, S, Hkv, hd)
+        v = (jnp.einsum("bsd,dq->bsq", hn, lp["s_wv"]) + lp["s_bv"]
+             ).reshape(B, S, Hkv, hd)
+        out = L.block_attention(q, k, v, causal=True, q_block=opts.q_block,
+                                kv_block=opts.kv_block)
+        h = h + jnp.einsum("bsq,qd->bsd", out.reshape(B, S, Hq * hd),
+                           lp["s_wo"]) + lp["s_bo"]
+        # cross attention + cross-cache emission
+        hn = L.layer_norm(h, lp["x_ln_w"], lp["x_ln_b"])
+        q = (jnp.einsum("bsd,dq->bsq", hn, lp["x_wq"]) + lp["x_bq"]
+             ).reshape(B, S, Hq, hd)
+        xk = jnp.einsum("bsd,dq->bsq", enc_out, lp["x_wk"]).reshape(
+            B, cfg.encoder_seq, Hkv, hd)
+        xv = (jnp.einsum("bsd,dq->bsq", enc_out, lp["x_wv"]) + lp["x_bv"]
+              ).reshape(B, cfg.encoder_seq, Hkv, hd)
+        out = L.block_attention(q, xk, xv, causal=False, q_block=opts.q_block,
+                                kv_block=opts.kv_block)
+        h = h + jnp.einsum("bsq,qd->bsd", out.reshape(B, S, Hq * hd),
+                           lp["x_wo"]) + lp["x_bo"]
+        hn = L.layer_norm(h, lp["m_ln_w"], lp["m_ln_b"])
+        h = h + L.gelu_mlp(hn, lp["w_in"], lp["b_in"], lp["w_out"], lp["b_out"])
+        return topo.constrain(h, "batch", None, None), (k, v, xk, xv)
+
+    h, (kc, vc, xkc, xvc) = lax.scan(body, h, params["dec_layers"])
+    h = L.layer_norm(h[:, -1], params["dec_ln_w"], params["dec_ln_b"])
+    logits = jnp.einsum("bd,vd->bv", h, params["embed"],
+                        preferred_element_type=jnp.float32)
+    cache = {"k": kc, "v": vc, "xk": xkc, "xv": xvc,
+             "len": jnp.full((B,), S, jnp.int32)}
+    logits = L.mask_pad_logits(logits, cfg.vocab_size)
+    return topo.constrain(logits, "batch", "vocab"), cache
+
+
+def prefill_fn(cfg: ModelConfig, topo: Topology, S: int, opts: RunOptions,
+               params, batch):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _tf_prefill(cfg, topo, S, opts, params, batch)
+    if cfg.family == "ssm":
+        return _ssm_prefill(cfg, topo, S, opts, params, batch)
+    if cfg.family == "hybrid":
+        return _hybrid_prefill(cfg, topo, S, opts, params, batch)
+    if cfg.family == "audio":
+        return _wh_prefill(cfg, topo, S, opts, params, batch)
+    raise ValueError(cfg.family)

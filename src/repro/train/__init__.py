@@ -1,0 +1,2 @@
+from repro.train.step import TrainHparams, make_train_step, make_train_state_specs, init_train_state  # noqa: F401
+from repro.train.loss import lm_loss  # noqa: F401

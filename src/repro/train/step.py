@@ -1,0 +1,93 @@
+"""train_step: forward (remat-scanned layers) + backward + AdamW, with
+optional microbatched gradient accumulation.  Everything is a pure function
+of (state, batch) so jit donation keeps buffers in place."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import api
+from repro.models.transformer import RunOptions
+from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state, opt_state_specs
+from repro.parallel.sharding import ParamSpec, Topology, init_params, is_spec
+from repro.train.loss import lm_loss
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHparams:
+    optimizer: AdamWConfig = AdamWConfig()
+    microbatches: int = 1
+    opts: RunOptions = RunOptions()
+
+
+def make_train_state_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    pspecs = api.param_specs(cfg)
+    return {"params": pspecs, "opt": opt_state_specs(pspecs)}
+
+
+def init_train_state(cfg: ModelConfig, key):
+    params = init_params(api.param_specs(cfg), key)
+    return {"params": params, "opt": init_opt_state(params)}
+
+
+def state_shardings(topo: Topology, specs):
+    return jax.tree.map(lambda s: topo.sharding_for(s.shape, s.logical_axes),
+                        specs, is_leaf=is_spec)
+
+
+def make_train_step(cfg: ModelConfig, topo: Topology,
+                    hp: TrainHparams = TrainHparams()):
+    def loss_fn(params, batch):
+        logits = api.forward(cfg, topo, params, batch, opts=hp.opts)
+        labels = batch["labels"]
+        loss, metrics = lm_loss(logits, labels, batch.get("mask"))
+        return loss, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if hp.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((hp.microbatches, b // hp.microbatches)
+                                 + x.shape[1:])
+            micro = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, metric_acc = carry
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                metric_acc = jax.tree.map(jnp.add, metric_acc, metrics)
+                return (g_acc, metric_acc), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            m0 = {"loss": jnp.zeros(()), "accuracy": jnp.zeros(()),
+                  "tokens": jnp.zeros(())}
+            (grads, metrics), _ = jax.lax.scan(acc_body, (g0, m0), micro)
+            grads = jax.tree.map(lambda g: g / hp.microbatches, grads)
+            metrics = jax.tree.map(lambda x: x / hp.microbatches, metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        new_params, new_opt, opt_metrics = apply_updates(
+            hp.optimizer, grads, state["opt"])
+        metrics = {**metrics, **opt_metrics}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, topo: Topology, opts: RunOptions = RunOptions()):
+    def eval_step(params, batch):
+        logits = api.forward(cfg, topo, params, batch, opts=opts)
+        _, metrics = lm_loss(logits, batch["labels"], batch.get("mask"))
+        return metrics
+    return eval_step

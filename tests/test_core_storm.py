@@ -1,0 +1,327 @@
+"""Storm dataplane behaviour tests: slots, regions, transport routing,
+one-sided ops, RPC handlers, hybrid lookups, OCC transactions."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import regions as rg
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core import onesided as osd
+from repro.core import hybrid as hy
+from repro.core import tx as txm
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport, route_by_dest, pick_replies
+
+N = 4  # simulated nodes
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ht.HashTableConfig(n_nodes=N, n_buckets=64, bucket_width=2,
+                              n_overflow=64, max_chain=6)
+
+
+@pytest.fixture(scope="module")
+def layout(cfg):
+    return ht.build_layout(cfg)
+
+
+def make_keys(n, seed=0):
+    rng = np.random.RandomState(seed)
+    lo = rng.randint(0, 2**31, size=n).astype(np.uint32)
+    hi = rng.randint(0, 2**31, size=n).astype(np.uint32)
+    return jnp.asarray(lo), jnp.asarray(hi)
+
+
+def value_for(key_lo):
+    i = jnp.arange(sl.VALUE_WORDS, dtype=jnp.uint32)
+    return sl._mix32(key_lo[..., None] + i)
+
+
+# ---------------------------------------------------------------------------
+def test_slot_roundtrip():
+    val = jnp.arange(sl.VALUE_WORDS, dtype=jnp.uint32)
+    s = sl.pack_slot(7, 9, 4, 0, sl.NULL_PTR, val)
+    assert int(sl.slot_key_lo(s)) == 7
+    assert int(sl.slot_version(s)) == 4
+    assert bool(sl.slot_matches(s, jnp.uint32(7), jnp.uint32(9)))
+    assert not bool(sl.slot_matches(s, jnp.uint32(8), jnp.uint32(9)))
+    s_locked = s.at[sl.LOCK].set(3)
+    assert not bool(sl.slot_matches(s_locked, jnp.uint32(7), jnp.uint32(9)))
+    s_odd = s.at[sl.VERSION].set(5)
+    assert not bool(sl.slot_matches(s_odd, jnp.uint32(7), jnp.uint32(9)))
+
+
+def test_region_paged_translation():
+    mode = rg.AddressMode(kind="paged", page_words=8)
+    table = mode.make_page_table(64)
+    # permute pages and check translation is honoured
+    perm = jnp.asarray(np.random.RandomState(0).permutation(8), jnp.uint32)
+    arena = jnp.arange(64, dtype=jnp.uint32)
+    # physical arena laid out so that logical word i lives at perm-page
+    offs = jnp.arange(64, dtype=jnp.uint32)
+    phys = mode.translate(perm, offs)
+    assert phys.shape == offs.shape
+    np.testing.assert_array_equal(
+        np.asarray(phys), np.asarray(perm)[np.arange(64) // 8] * 8 + np.arange(64) % 8)
+
+
+def test_route_by_dest_and_replies():
+    B, n_dst, cap = 16, 4, 16
+    rng = np.random.RandomState(1)
+    dest = jnp.asarray(rng.randint(0, n_dst, B), jnp.int32)
+    payload = jnp.asarray(rng.randint(0, 100, (B, 3)), jnp.uint32)
+    buf, mask, pos, ovf = route_by_dest(dest, payload, n_dst, cap)
+    assert not bool(ovf.any())
+    assert int(mask.sum()) == B
+    # echo replies: reply = payload, delivered back through pick
+    out = pick_replies(buf, dest, pos, ovf)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(payload))
+
+
+def test_route_overflow():
+    B, n_dst, cap = 8, 2, 2
+    dest = jnp.zeros((B,), jnp.int32)  # everyone to node 0, capacity 2
+    payload = jnp.ones((B, 1), jnp.uint32)
+    buf, mask, pos, ovf = route_by_dest(dest, payload, n_dst, cap)
+    assert int(ovf.sum()) == B - cap
+    assert int(mask.sum()) == cap
+
+
+def test_one_sided_read_write(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    arenas = state["arena"]
+    B = 8
+    rng = np.random.RandomState(2)
+    dest = jnp.asarray(rng.randint(0, N, (N, B)), jnp.int32)
+    # write distinct patterns at distinct slot offsets, then read them back
+    slot_ids = jnp.asarray(rng.choice(cfg.n_slots, (N, B), replace=False), jnp.uint32)
+    offs = ht.slot_idx_offset(layout, slot_ids)
+    vals = jnp.asarray(rng.randint(0, 2**31, (N, B, 4)), jnp.uint32)
+    arenas, ovf, s = osd.remote_write(t, arenas, dest, offs, vals)
+    assert not bool(ovf.any())
+    data, ovf2, s2 = osd.remote_read(t, arenas, dest, offs, length=4)
+    assert not bool(ovf2.any())
+    np.testing.assert_array_equal(np.asarray(data), np.asarray(vals))
+    assert float(s2.round_trips) == 1.0
+
+
+def test_insert_then_lookup_rpc_only(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 32
+    klo, khi = make_keys(N * B, seed=3)
+    klo, khi = klo.reshape(N, B), khi.reshape(N, B)
+    vals = value_for(klo)
+    node, _, _ = ht.lookup_start(cfg, layout, klo, khi)
+    recs = ht.make_record(R.OP_INSERT, klo, khi, value=vals)
+    h = ht.make_rpc_handler(cfg, layout)
+    state, rep, ovf, _ = R.rpc_call(t, state, node, recs, h)
+    assert not bool(ovf.any())
+    np.testing.assert_array_equal(np.asarray(rep[..., 0]), R.ST_OK)
+
+    # RPC-only lookup (serial handler)
+    recs2 = ht.make_record(R.OP_LOOKUP, klo, khi)
+    state, rep2, _, _ = R.rpc_call(t, state, node, recs2, h)
+    np.testing.assert_array_equal(np.asarray(rep2[..., 0]), R.ST_OK)
+    np.testing.assert_array_equal(np.asarray(rep2[..., 3:]), np.asarray(vals))
+
+    # vectorized read-only handler agrees
+    hv = ht.make_lookup_handler_vector(cfg, layout)
+    state, rep3, _, _ = R.rpc_call(t, state, node, recs2, hv)
+    np.testing.assert_array_equal(np.asarray(rep3[..., 0]), R.ST_OK)
+    np.testing.assert_array_equal(np.asarray(rep3[..., 3:]), np.asarray(vals))
+
+    # missing keys are NOT_FOUND
+    mlo, mhi = make_keys(N * B, seed=99)
+    mlo, mhi = mlo.reshape(N, B), mhi.reshape(N, B)
+    mnode, _, _ = ht.lookup_start(cfg, layout, mlo, mhi)
+    recsm = ht.make_record(R.OP_LOOKUP, mlo, mhi)
+    state, repm, _, _ = R.rpc_call(t, state, mnode, recsm, h)
+    np.testing.assert_array_equal(np.asarray(repm[..., 0]), R.ST_NOT_FOUND)
+
+
+def test_hybrid_lookup_one_two_sided(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 48
+    klo, khi = make_keys(N * B, seed=4)
+    klo, khi = klo.reshape(N, B), khi.reshape(N, B)
+    vals = value_for(klo)
+    node, _, _ = ht.lookup_start(cfg, layout, klo, khi)
+    h = ht.make_rpc_handler(cfg, layout)
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_INSERT, klo, khi, value=vals), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+
+    state, cache, found, value, ver, onode, sidx, m = hy.hybrid_lookup(
+        t, state, klo, khi, cfg, layout, use_onesided=True)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(value), np.asarray(vals))
+    # with 128 keys in 64*2-slot buckets most lookups succeed one-sided;
+    # chained items fall back to RPC — both paths must agree
+    assert float(m.onesided_success) + 0 >= 0
+    assert float(m.onesided_success) + float(m.rpc_fallback) >= m.total
+
+
+def test_hybrid_lookup_rpc_only_matches(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 16
+    klo, khi = make_keys(N * B, seed=5)
+    klo, khi = klo.reshape(N, B), khi.reshape(N, B)
+    vals = value_for(klo)
+    node, _, _ = ht.lookup_start(cfg, layout, klo, khi)
+    h = ht.make_rpc_handler(cfg, layout)
+    state, _, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_INSERT, klo, khi, value=vals), h)
+    s1, _, f1, v1, _, _, _, _ = hy.hybrid_lookup(
+        t, state, klo, khi, cfg, layout, use_onesided=True)
+    s2, _, f2, v2, _, _, _, _ = hy.hybrid_lookup(
+        t, state, klo, khi, cfg, layout, use_onesided=False)
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+def test_overflow_chain_walk():
+    # tiny table: force every key into one bucket -> chains exercise RPC path
+    cfg = ht.HashTableConfig(n_nodes=1, n_buckets=1, bucket_width=1,
+                             n_overflow=32, max_chain=20)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(1)
+    state = ht.init_cluster_state(cfg)
+    B = 12
+    klo, khi = make_keys(B, seed=6)
+    klo, khi = klo.reshape(1, B), khi.reshape(1, B)
+    vals = value_for(klo)
+    node = jnp.zeros((1, B), jnp.int32)
+    h = ht.make_rpc_handler(cfg, layout)
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_INSERT, klo, khi, value=vals), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+    # all but one key lives in the chain -> hybrid must still find all
+    state, _, found, value, _, _, _, m = hy.hybrid_lookup(
+        t, state, klo, khi, cfg, layout, use_onesided=True)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(value), np.asarray(vals))
+    assert float(m.rpc_fallback) >= B - 1  # chained keys needed the RPC
+
+
+def test_delete_and_update(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 8
+    klo, khi = make_keys(N * B, seed=7)
+    klo, khi = klo.reshape(N, B), khi.reshape(N, B)
+    vals = value_for(klo)
+    node, _, _ = ht.lookup_start(cfg, layout, klo, khi)
+    h = ht.make_rpc_handler(cfg, layout)
+    state, _, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_INSERT, klo, khi, value=vals), h)
+    # update
+    vals2 = value_for(klo + jnp.uint32(1))
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_UPDATE, klo, khi, value=vals2), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_LOOKUP, klo, khi), h)
+    np.testing.assert_array_equal(np.asarray(rep[..., 3:]), np.asarray(vals2))
+    # delete then miss
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_DELETE, klo, khi), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_LOOKUP, klo, khi), h)
+    np.testing.assert_array_equal(np.asarray(rep[..., 0]), R.ST_NOT_FOUND)
+
+
+def test_transactions_commit_and_isolation(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B, Rd, Wr = 8, 2, 1
+    klo, khi = make_keys(N * (B * (Rd + Wr)), seed=8)
+    klo = klo.reshape(N, B, Rd + Wr)
+    khi = khi.reshape(N, B, Rd + Wr)
+    vals = value_for(klo)
+    h = ht.make_rpc_handler(cfg, layout)
+    node, _, _ = ht.lookup_start(cfg, layout,
+                                 klo.reshape(N, -1), khi.reshape(N, -1))
+    state, rep, _, _ = R.rpc_call(
+        t, state, node,
+        ht.make_record(R.OP_INSERT, klo.reshape(N, -1), khi.reshape(N, -1),
+                       value=vals.reshape(N, -1, sl.VALUE_WORDS)), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+
+    read_keys = jnp.stack([klo[..., :Rd], khi[..., :Rd]], axis=-1)
+    write_keys = jnp.stack([klo[..., Rd:], khi[..., Rd:]], axis=-1)
+    new_vals = value_for(klo[..., Rd:] + jnp.uint32(42))
+    state, _, res = txm.run_transactions(
+        t, state, cfg, layout, read_keys=read_keys, write_keys=write_keys,
+        write_values=new_vals)
+    # disjoint keys -> every transaction commits
+    assert bool(res.committed.all()), np.asarray(res.committed)
+    assert bool(res.read_found.all())
+    np.testing.assert_array_equal(
+        np.asarray(res.read_values), np.asarray(vals[..., :Rd, :]))
+    # committed values visible afterwards
+    state, rep, _, _ = R.rpc_call(
+        t, state, node[..., :0 + B * Wr * 0 + B * Wr] if False else
+        ht.lookup_start(cfg, layout, klo[..., Rd:].reshape(N, -1),
+                        khi[..., Rd:].reshape(N, -1))[0],
+        ht.make_record(R.OP_LOOKUP, klo[..., Rd:].reshape(N, -1),
+                       khi[..., Rd:].reshape(N, -1)), h)
+    np.testing.assert_array_equal(
+        np.asarray(rep[..., 3:]),
+        np.asarray(new_vals.reshape(N, -1, sl.VALUE_WORDS)))
+
+
+def test_transactions_write_conflict_aborts(cfg, layout):
+    """Two lanes writing the SAME key: exactly one lock wins per round."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 4
+    klo = jnp.full((N, B, 1), 1234, jnp.uint32)   # every lane, same key
+    khi = jnp.zeros((N, B, 1), jnp.uint32)
+    h = ht.make_rpc_handler(cfg, layout)
+    node, _, _ = ht.lookup_start(cfg, layout, klo.reshape(N, -1),
+                                 khi.reshape(N, -1))
+    state, _, _, _ = R.rpc_call(
+        t, state, node,
+        ht.make_record(R.OP_INSERT, klo.reshape(N, -1), khi.reshape(N, -1),
+                       value=value_for(klo.reshape(N, -1))), h)
+    read_keys = jnp.zeros((N, B, 0, 2), jnp.uint32)
+    write_keys = jnp.stack([klo, khi], axis=-1)
+    state, _, res = txm.run_transactions(
+        t, state, cfg, layout, read_keys=read_keys, write_keys=write_keys,
+        write_values=value_for(klo + jnp.uint32(7)))
+    committed = np.asarray(res.committed)
+    assert committed.sum() == 1, committed  # single winner cluster-wide
+    # and the winner's unlock must leave the slot unlocked for the next round
+    state, _, res2 = txm.run_transactions(
+        t, state, cfg, layout, read_keys=read_keys, write_keys=write_keys,
+        write_values=value_for(klo + jnp.uint32(9)))
+    assert np.asarray(res2.committed).sum() == 1
+
+
+def test_transaction_insert_new_key(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 4
+    klo, khi = make_keys(N * B, seed=11)
+    klo, khi = klo.reshape(N, B, 1), khi.reshape(N, B, 1)
+    read_keys = jnp.zeros((N, B, 0, 2), jnp.uint32)
+    write_keys = jnp.stack([klo, khi], axis=-1)
+    vals = value_for(klo)
+    state, _, res = txm.run_transactions(
+        t, state, cfg, layout, read_keys=read_keys, write_keys=write_keys,
+        write_values=vals)
+    assert bool(res.committed.all())
+    h = ht.make_rpc_handler(cfg, layout)
+    node, _, _ = ht.lookup_start(cfg, layout, klo.reshape(N, -1), khi.reshape(N, -1))
+    state, rep, _, _ = R.rpc_call(
+        t, state, node,
+        ht.make_record(R.OP_LOOKUP, klo.reshape(N, -1), khi.reshape(N, -1)), h)
+    np.testing.assert_array_equal(np.asarray(rep[..., 0]), R.ST_OK)

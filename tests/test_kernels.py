@@ -1,0 +1,163 @@
+"""Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
+swept over shapes/dtypes, + hypothesis property tests."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import slots as sl
+from repro.core.datastructs import hashtable as ht
+from repro.kernels import ops, ref
+from repro.models.layers import attention_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+ATTN_CASES = [
+    # (B, Sq, Sk, Hq, Hkv, D, causal, window, softcap, dtype)
+    (1, 128, 128, 2, 2, 64, True, None, None, jnp.float32),
+    (2, 256, 256, 4, 2, 64, True, None, None, jnp.bfloat16),
+    (1, 128, 128, 4, 1, 128, True, None, None, jnp.float32),
+    (1, 256, 256, 2, 2, 64, True, 64, None, jnp.float32),     # sliding window
+    (1, 128, 128, 2, 2, 64, True, None, 50.0, jnp.float32),   # softcap
+    (1, 96, 160, 2, 2, 64, False, None, None, jnp.float32),   # cross, ragged
+    (2, 192, 192, 2, 2, 32, True, None, None, jnp.float32),   # pad blocks
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES)
+def test_flash_attention_matches_oracle(case):
+    B, Sq, Sk, Hq, Hkv, D, causal, window, softcap, dtype = case
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(B, Sq, Hq, D), dtype) * 0.5
+    k = jnp.asarray(rng.randn(B, Sk, Hkv, D), dtype) * 0.5
+    v = jnp.asarray(rng.randn(B, Sk, Hkv, D), dtype) * 0.5
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, q_block=64, kv_block=64,
+                              use_pallas=True, interpret=True)
+    want = attention_ref(q, k, v, causal=causal, window=window,
+                         attn_softcap=softcap)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), atol=atol,
+                               rtol=1e-2)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    sq=st.sampled_from([64, 128, 192]),
+    hq=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2]),
+    d=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(sq, hq, g, d, causal):
+    if hq % g:
+        g = 1
+    rng = np.random.RandomState(sq + hq + d)
+    q = jnp.asarray(rng.randn(1, sq, hq, d), jnp.float32) * 0.3
+    k = jnp.asarray(rng.randn(1, sq, hq // g, d), jnp.float32) * 0.3
+    v = jnp.asarray(rng.randn(1, sq, hq // g, d), jnp.float32) * 0.3
+    got = ops.flash_attention(q, k, v, causal=causal, q_block=64, kv_block=64,
+                              use_pallas=True, interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4,
+                               rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# hash probe
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("width", [1, 2, 4])
+@pytest.mark.parametrize("n_keys", [8, 32])
+def test_hash_probe_matches_oracle_and_table(width, n_keys):
+    cfg = ht.HashTableConfig(n_nodes=1, n_buckets=64, bucket_width=width,
+                             n_overflow=16)
+    layout = ht.build_layout(cfg)
+    from repro.core import rpc as R
+    from repro.core.transport import SimTransport
+    t = SimTransport(1)
+    state = ht.init_cluster_state(cfg)
+    rng = np.random.RandomState(1)
+    klo = jnp.asarray(rng.randint(0, 2**31, n_keys), jnp.uint32)[None]
+    khi = jnp.asarray(rng.randint(0, 2**31, n_keys), jnp.uint32)[None]
+    vals = sl._mix32(klo[..., None] + jnp.arange(sl.VALUE_WORDS, dtype=jnp.uint32))
+    node = jnp.zeros((1, n_keys), jnp.int32)
+    h = ht.make_rpc_handler(cfg, layout)
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_INSERT, klo, khi, value=vals), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+
+    arena = state["arena"][0]
+    _, bucket = ht.home_of(cfg, klo[0], khi[0])
+    got = ops.hash_probe(arena, bucket.astype(jnp.int32), klo[0], khi[0],
+                         width=width, use_pallas=True, interpret=True)
+    want = ref.hash_probe_ref(arena, bucket.astype(jnp.int32), klo[0], khi[0],
+                              width=width)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # every in-bucket key is found with the right value; chained keys are
+    # exactly the (found == 0) ones
+    found = np.asarray(got[:, 0]).astype(bool)
+    if found.any():
+        np.testing.assert_array_equal(np.asarray(got[found][:, 2:]),
+                                      np.asarray(vals[0])[found])
+    # missing keys never match
+    miss = ops.hash_probe(arena, bucket.astype(jnp.int32), klo[0] + 1,
+                          khi[0], width=width, use_pallas=True, interpret=True)
+    assert not np.asarray(miss[:, 0]).any()
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+SSD_CASES = [
+    # (B, nc, Q, H, P, N, h_tile)
+    (1, 2, 32, 4, 16, 16, 4),
+    (2, 4, 64, 8, 32, 32, 4),
+    (1, 3, 16, 2, 64, 128, 2),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES)
+def test_ssd_scan_matches_oracle(case):
+    B, nc, Q, H, P, N, h_tile = case
+    rng = np.random.RandomState(2)
+    xdt = jnp.asarray(rng.randn(B, nc, Q, H, P), jnp.float32) * 0.1
+    dA = -jnp.asarray(rng.rand(B, nc, Q, H), jnp.float32) * 0.5
+    Bc = jnp.asarray(rng.randn(B, nc, Q, N), jnp.float32) * 0.3
+    Cc = jnp.asarray(rng.randn(B, nc, Q, N), jnp.float32) * 0.3
+    y, st_ = ops.ssd_scan(xdt, dA, Bc, Cc, h_tile=h_tile, use_pallas=True,
+                          interpret=True)
+    yr, str_ = ref.ssd_scan_ref(xdt, dA, Bc, Cc)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-4,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(str_), atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_ssd_scan_matches_model_chunked():
+    """The kernel agrees with the model's ssd_chunked (same fold-in)."""
+    from repro.models.mamba2 import ssd_chunked
+    B, S, H, P, N, Q = 2, 128, 4, 16, 32, 32
+    rng = np.random.RandomState(3)
+    xh = jnp.asarray(rng.randn(B, S, H, P), jnp.float32) * 0.2
+    dt = jnp.asarray(rng.rand(B, S, H), jnp.float32) * 0.5 + 0.1
+    A = -jnp.asarray(rng.rand(H), jnp.float32) - 0.1
+    Bm = jnp.asarray(rng.randn(B, S, N), jnp.float32) * 0.3
+    Cm = jnp.asarray(rng.randn(B, S, N), jnp.float32) * 0.3
+    y_model, st_model = ssd_chunked(xh, dt, A, Bm, Cm, Q)
+    nc = S // Q
+    resh = lambda t: t.reshape((B, nc, Q) + t.shape[2:])
+    y_k, st_k = ops.ssd_scan(resh(xh * dt[..., None]), resh(dt * A),
+                             resh(Bm), resh(Cm), h_tile=2, use_pallas=True,
+                             interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(y_k.reshape(B, S, H, P)),
+        np.asarray(y_model, np.float32).astype(np.float32), atol=2e-2,
+        rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_model),
+                               atol=1e-3, rtol=1e-3)

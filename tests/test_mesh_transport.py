@@ -1,0 +1,78 @@
+"""MeshTransport (shard_map/all_to_all) must agree with SimTransport.
+
+Runs in a SUBPROCESS with xla_force_host_platform_device_count=8 so the main
+test session keeps its single-device view (per the dry-run isolation rule).
+"""
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import rpc as R
+    from repro.core import slots as sl
+    from repro.core import onesided as osd
+    from repro.core import hybrid as hy
+    from repro.core.datastructs import hashtable as ht
+    from repro.core.transport import SimTransport, MeshTransport
+
+    N, B = 8, 16
+    cfg = ht.HashTableConfig(n_nodes=N, n_buckets=32, bucket_width=2,
+                             n_overflow=32)
+    layout = ht.build_layout(cfg)
+    rng = np.random.RandomState(0)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, B)), jnp.uint32)
+    vals = sl._mix32(klo[..., None] + jnp.arange(sl.VALUE_WORDS, dtype=jnp.uint32))
+    node, _, _ = ht.lookup_start(cfg, layout, klo, khi)
+    h = ht.make_rpc_handler(cfg, layout)
+
+    # --- simulator reference -------------------------------------------
+    ts = SimTransport(N)
+    s_sim = ht.init_cluster_state(cfg)
+    s_sim, rep_sim, _, _ = R.rpc_call(
+        ts, s_sim, node, ht.make_record(R.OP_INSERT, klo, khi, value=vals), h)
+    s_sim, _, f_sim, v_sim, *_ = hy.hybrid_lookup(
+        ts, s_sim, klo, khi, cfg, layout)
+
+    # --- mesh execution --------------------------------------------------
+    mesh = jax.make_mesh((8,), ("node",))
+    tm = MeshTransport(N, axis_name="node")
+    sh = NamedSharding(mesh, P("node"))
+
+    def put(tree):
+        return jax.tree.map(lambda x: jax.device_put(x, sh), tree)
+
+    def run(state, node, klo, khi, vals):
+        recs = ht.make_record(R.OP_INSERT, klo, khi, value=vals)
+        state, rep, _, _ = R.rpc_call(tm, state, node, recs, h)
+        state, _, found, value, *_ = hy.hybrid_lookup(
+            tm, state, klo, khi, cfg, layout)
+        return rep, found, value
+
+    fn = jax.jit(jax.shard_map(
+        run, mesh=mesh,
+        in_specs=(P("node"), P("node"), P("node"), P("node"), P("node")),
+        out_specs=(P("node"), P("node"), P("node")), check_vma=False))
+    s_mesh = put(ht.init_cluster_state(cfg))
+    rep_m, f_m, v_m = fn(s_mesh, put(node), put(klo), put(khi), put(vals))
+
+    np.testing.assert_array_equal(np.asarray(rep_m[..., 0]),
+                                  np.asarray(rep_sim[..., 0]))
+    np.testing.assert_array_equal(np.asarray(f_m), np.asarray(f_sim))
+    np.testing.assert_array_equal(np.asarray(v_m), np.asarray(v_sim))
+    print("MESH_OK")
+""")
+
+
+def test_mesh_transport_matches_simulator():
+    import os
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "/root/repo/src"
+    env.pop("XLA_FLAGS", None)
+    res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, timeout=560, env=env)
+    assert "MESH_OK" in res.stdout, res.stdout + "\n" + res.stderr[-3000:]

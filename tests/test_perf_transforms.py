@@ -1,0 +1,97 @@
+"""The §Perf transforms must be EXACT-equivalent (same math, new schedule)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ShapeConfig
+from repro.configs.registry import ARCHS
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models import api
+from repro.models.transformer import RunOptions
+from repro.parallel.sharding import Topology, WIDE_DP_RULES, init_params
+
+SHAPE = ShapeConfig("t", 64, 2, "train")
+
+
+def topo():
+    return Topology(jax.make_mesh((1, 1), ("data", "model")))
+
+
+def test_pad_heads_is_exact():
+    """qwen-style head counts: padded-head attention == baseline logits."""
+    cfg = dataclasses.replace(ARCHS["qwen2.5-32b"].smoke(), n_heads=5,
+                              n_kv_heads=1)
+    t = topo()
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    batch = {"tokens": synthetic_batch(cfg, SHAPE, DataConfig(), 0)["tokens"]}
+    base = jax.jit(lambda p, b: api.forward(
+        cfg, t, p, b, opts=RunOptions(q_block=32, kv_block=32, remat=False,
+                                      pad_heads=False)))(params, batch)
+    # force the pad path even on the 1-wide mesh by simulating tp divisibility:
+    # run with pad_heads=True on a config whose heads don't divide a fake tp.
+    # On the 1-device mesh head_tp is always true, so instead compare the
+    # padded math directly through the attention block with a hand-padded tp.
+    from repro.models import transformer as tf
+    from repro.models import layers as L
+    p0 = jax.tree.map(lambda a: a[0], params["layers"])
+    h = jax.random.normal(jax.random.key(1), (2, 64, cfg.d_model),
+                          jnp.float32).astype(jnp.bfloat16) * 0.1
+    pos = jnp.arange(64)
+    cos, sin = L.rope_tables(pos, cfg.head_dim, cfg.rope_theta)
+    out_base = tf.attention_block(cfg, t, p0, h, cos, sin, window=None,
+                                  q_block=32, kv_block=32, pad_heads=False)
+
+    class FakeTopo(Topology):
+        @property
+        def axis_sizes(self):
+            return {"data": 1, "model": 4}   # forces Hq=5 % 4 != 0 -> pad
+
+        def constrain(self, x, *axes):
+            return x                          # no real mesh behind it
+
+    ft = FakeTopo(t.mesh)
+    out_pad = tf.attention_block(cfg, ft, p0, h, cos, sin, window=None,
+                                 q_block=32, kv_block=32, pad_heads=True)
+    np.testing.assert_allclose(np.asarray(out_pad, np.float32),
+                               np.asarray(out_base, np.float32),
+                               atol=2e-2, rtol=1e-2)
+
+
+def test_moe_modes_agree():
+    """rpc and onesided MoE dispatch compute the same function."""
+    cfg = dataclasses.replace(ARCHS["granite-moe-1b-a400m"].smoke(),
+                              capacity_factor=16.0)
+    t = topo()
+    params = init_params(api.param_specs(cfg), jax.random.key(2))
+    batch = {"tokens": synthetic_batch(cfg, SHAPE, DataConfig(), 0)["tokens"]}
+    outs = {}
+    for mode in ("rpc", "onesided"):
+        # 1-device mesh: moe_ffn falls back to "local"; instead compare the
+        # mode implementations directly through moe_ffn on a fake 2-way mesh
+        # is heavy — compare through the local path vs forced local (both
+        # modes reduce to local on tp=1); the multi-way equivalence is
+        # covered by the mesh-transport subprocess test + dry-run compiles.
+        outs[mode] = jax.jit(lambda p, b: api.forward(
+            cfg, t, p, b, opts=RunOptions(q_block=32, kv_block=32,
+                                          remat=False, moe_mode=mode)))(
+            params, batch)
+    np.testing.assert_allclose(
+        np.asarray(outs["rpc"], np.float32),
+        np.asarray(outs["onesided"], np.float32), atol=1e-3)
+
+
+def test_wide_dp_rules_forward_matches_default():
+    """WIDE_DP rules change sharding only — same function on 1 device."""
+    cfg = ARCHS["mamba2-780m"].smoke()
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    t_def = Topology(mesh)
+    t_wide = Topology(mesh, dict(WIDE_DP_RULES))
+    params = init_params(api.param_specs(cfg), jax.random.key(3))
+    batch = {"tokens": synthetic_batch(cfg, SHAPE, DataConfig(), 0)["tokens"]}
+    opts = RunOptions(q_block=32, kv_block=32, remat=False)
+    a = jax.jit(lambda p, b: api.forward(cfg, t_def, p, b, opts=opts))(params, batch)
+    b = jax.jit(lambda p, b: api.forward(cfg, t_wide, p, b, opts=opts))(params, batch)
+    np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                  np.asarray(b, np.float32))

@@ -1,0 +1,124 @@
+"""Hypothesis property tests on the Storm dataplane's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hybrid as hy
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core import tx as txm
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport, pick_replies, route_by_dest
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 24),
+    n_dst=st.integers(1, 6),
+    cap=st.integers(1, 24),
+    seed=st.integers(0, 1000),
+)
+def test_routing_conservation(b, n_dst, cap, seed):
+    """Every lane is either placed in exactly one live cell or overflowed;
+    live cells reproduce payloads exactly (no loss, no duplication)."""
+    rng = np.random.RandomState(seed)
+    dest = jnp.asarray(rng.randint(0, n_dst, b), jnp.int32)
+    payload = jnp.asarray(rng.randint(0, 2**31, (b, 2)), jnp.uint32)
+    buf, mask, pos, ovf = route_by_dest(dest, payload, n_dst, cap)
+    assert int(mask.sum()) + int(ovf.sum()) == b
+    out = pick_replies(buf, dest, pos, ovf)
+    ok = ~np.asarray(ovf)
+    np.testing.assert_array_equal(np.asarray(out)[ok], np.asarray(payload)[ok])
+    # per-destination occupancy never exceeds capacity
+    assert int(mask.sum(axis=1).max()) <= cap
+
+
+@settings(max_examples=4, deadline=None)
+@given(
+    n_keys=st.sampled_from([8, 24]),     # fixed sizes -> jit cache hits
+    n_buckets=st.sampled_from([16]),
+    width=st.sampled_from([1, 2]),
+    seed=st.integers(0, 100),
+)
+def test_insert_lookup_delete_invariant(n_keys, n_buckets, width, seed):
+    """insert(k,v) -> lookup(k)==v; delete(k) -> lookup misses; other keys
+    unaffected — regardless of collisions/chaining."""
+    cfg = ht.HashTableConfig(n_nodes=2, n_buckets=n_buckets,
+                             bucket_width=width, n_overflow=32,
+                             max_chain=26)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(2)
+    state = ht.init_cluster_state(cfg)
+    rng = np.random.RandomState(seed)
+    # unique keys (offset stride guarantees uniqueness without a 2^31 perm)
+    k = (rng.randint(0, 2**20, size=2 * n_keys).astype(np.uint32) * 2048
+         + np.arange(2 * n_keys, dtype=np.uint32))
+    klo = jnp.asarray(k.reshape(2, n_keys))
+    khi = jnp.zeros_like(klo)
+    vals = sl._mix32(klo[..., None] + jnp.arange(sl.VALUE_WORDS, dtype=jnp.uint32))
+    node, _, _ = ht.lookup_start(cfg, layout, klo, khi)
+    h = ht.make_rpc_handler(cfg, layout)
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_INSERT, klo, khi, value=vals), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+
+    state, _, found, value, *_ = hy.hybrid_lookup(
+        t, state, klo, khi, cfg, layout, use_onesided=True)
+    assert bool(found.all())
+    np.testing.assert_array_equal(np.asarray(value), np.asarray(vals))
+
+    # delete the first half on each node
+    half = max(n_keys // 2, 1)
+    dl, dh = klo[:, :half], khi[:, :half]
+    dnode, _, _ = ht.lookup_start(cfg, layout, dl, dh)
+    state, rep, _, _ = R.rpc_call(
+        t, state, dnode, ht.make_record(R.OP_DELETE, dl, dh), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+    state, _, found2, value2, *_ = hy.hybrid_lookup(
+        t, state, klo, khi, cfg, layout, use_onesided=True)
+    f2 = np.asarray(found2)
+    assert not f2[:, :half].any(), "deleted keys must miss"
+    assert f2[:, half:].all(), "surviving keys must still hit"
+    np.testing.assert_array_equal(np.asarray(value2)[:, half:],
+                                  np.asarray(vals)[:, half:])
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 50), lanes=st.sampled_from([3]))
+def test_tx_single_winner_per_contended_key(seed, lanes):
+    """OCC invariant: any number of lanes writing the same key -> exactly one
+    commit per round, and the slot is consistent (even version, unlocked)."""
+    N = 2
+    cfg = ht.HashTableConfig(n_nodes=N, n_buckets=16, bucket_width=2,
+                             n_overflow=16)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    key = jnp.full((N, lanes, 1), 777 + seed, jnp.uint32)
+    khi = jnp.zeros_like(key)
+    wk = jnp.stack([key, khi], axis=-1)
+    state, _, res = txm.run_transactions(
+        t, state, cfg, layout,
+        read_keys=jnp.zeros((N, lanes, 0, 2), jnp.uint32),
+        write_keys=wk, write_values=sl._mix32(
+            key + jnp.arange(sl.VALUE_WORDS, dtype=jnp.uint32)))
+    assert int(np.asarray(res.committed).sum()) == 1
+    # post-state: the key is readable, even-version, unlocked
+    state, _, found, _, ver, *_ = hy.hybrid_lookup(
+        t, state, key[:, :, 0], khi[:, :, 0], cfg, layout)
+    assert bool(found.all())
+    v = np.asarray(ver)
+    assert (v % 2 == 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(klo=st.integers(0, 2**31), khi=st.integers(0, 2**31))
+def test_hash_stability_and_range(klo, khi):
+    cfg = ht.HashTableConfig(n_nodes=7, n_buckets=64, bucket_width=1,
+                             n_overflow=8)
+    n1, b1 = ht.home_of(cfg, jnp.uint32(klo), jnp.uint32(khi))
+    n2, b2 = ht.home_of(cfg, jnp.uint32(klo), jnp.uint32(khi))
+    assert int(n1) == int(n2) and int(b1) == int(b2)
+    assert 0 <= int(n1) < 7 and 0 <= int(b1) < 64

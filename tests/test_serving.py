@@ -1,0 +1,99 @@
+"""Serving correctness: prefill+decode must reproduce the teacher-forced
+forward pass (per architecture, reduced configs, CPU)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig
+from repro.configs.registry import ARCHS
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models import api
+from repro.models.transformer import RunOptions
+from repro.parallel.sharding import Topology, init_params
+from repro.serving.decode import init_cache, make_decode_step, make_prefill
+
+OPTS = RunOptions(q_block=16, kv_block=16, remat=False)
+PROMPT, DECODE = 24, 4
+
+
+def smoke_topo():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    return Topology(mesh)
+
+
+def grow_kv(cache, names, new_S):
+    out = dict(cache)
+    for n in names:
+        c = cache[n]
+        pad = new_S - c.shape[2]
+        out[n] = jnp.pad(c, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return out
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_prefill_decode_matches_forward(arch):
+    # capacity_factor high enough that no token is ever dropped: capacity
+    # routing legitimately differs between a 2-token decode batch and the
+    # full forward, so parity needs the no-drop regime.
+    cfg = dataclasses.replace(ARCHS[arch].smoke(), capacity_factor=16.0)
+    topo = smoke_topo()
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    B, total = 2, PROMPT + DECODE
+    shape = ShapeConfig("t", total, B, "train")
+    batch = synthetic_batch(cfg, shape, DataConfig(), 0)
+    tokens = batch["tokens"]
+
+    # teacher-forced reference over the full sequence
+    full = dict(batch)
+    full.pop("labels")
+    ref_logits = jax.jit(
+        lambda p, b: api.forward(cfg, topo, p, b, opts=OPTS))(params, full)
+
+    # prefill on the prompt
+    pre_batch = {k: (v[:, :PROMPT] if k in ("tokens", "labels") else v)
+                 for k, v in full.items()}
+    prefill = make_prefill(cfg, topo, PROMPT, OPTS)
+    logits_p, cache = jax.jit(prefill)(params, pre_batch)
+    np.testing.assert_allclose(
+        np.asarray(logits_p, np.float32),
+        np.asarray(ref_logits[:, PROMPT - 1], np.float32), atol=0.3, rtol=0.1)
+
+    # grow the cache and decode token by token
+    if cfg.family in ("dense", "moe", "vlm"):
+        cache = grow_kv(cache, ("k", "v"), total)
+    elif cfg.family == "hybrid":
+        cache = grow_kv(cache, ("shared_k", "shared_v"), total)
+    elif cfg.family == "audio":
+        cache = grow_kv(cache, ("k", "v"), total)
+    step = jax.jit(make_decode_step(cfg, topo))
+    for t in range(PROMPT, total):
+        logits_d, cache = step(params, cache, tokens[:, t])
+        ref_t = np.asarray(ref_logits[:, t], np.float32)
+        got = np.asarray(logits_d, np.float32)
+        np.testing.assert_allclose(got, ref_t, atol=0.12, rtol=0.05)
+        # argmax must agree unless the ref's own top-2 margin is within
+        # bf16 noise of the observed deviation
+        margin = np.sort(ref_t, -1)[:, -1] - np.sort(ref_t, -1)[:, -2]
+        flip = np.argmax(got, -1) != np.argmax(ref_t, -1)
+        dev = np.abs(got - ref_t).max()
+        assert not np.any(flip & (margin > 4 * dev)), (t, margin, dev)
+
+
+@pytest.mark.parametrize("arch", ["granite-moe-1b-a400m", "mamba2-780m"])
+def test_decode_from_empty_cache(arch):
+    """Decode-only path: start from an empty cache (len=0) and free-run."""
+    cfg = ARCHS[arch].smoke()
+    topo = smoke_topo()
+    params = init_params(api.param_specs(cfg), jax.random.key(1))
+    B, S = 2, 16
+    cache = init_cache(cfg, topo, B, S)
+    step = jax.jit(make_decode_step(cfg, topo))
+    tok = jnp.ones((B,), jnp.int32)
+    for _ in range(4):
+        logits, cache = step(params, cache, tok)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert int(cache["len"][0]) == 4

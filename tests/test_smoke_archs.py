@@ -1,0 +1,76 @@
+"""Per-architecture smoke tests: instantiate a REDUCED same-family config,
+run one forward + one train step on CPU, assert shapes + finiteness."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, ShapeConfig
+from repro.configs.registry import ARCHS
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models import api
+from repro.models.transformer import RunOptions
+from repro.parallel.sharding import Topology, init_params
+from repro.train.step import TrainHparams, init_train_state, make_train_step
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=64, global_batch=2, kind="train")
+OPTS = RunOptions(q_block=32, kv_block=32, remat=False)
+
+
+def smoke_topo():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    return Topology(mesh)
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch):
+    cfg = ARCHS[arch].smoke()
+    topo = smoke_topo()
+    params = init_params(api.param_specs(cfg), jax.random.key(0))
+    batch = synthetic_batch(cfg, SMOKE_SHAPE, DataConfig(), step=0)
+    logits = jax.jit(
+        lambda p, b: api.forward(cfg, topo, p, b, opts=OPTS))(params, batch)
+    assert logits.shape == (SMOKE_SHAPE.global_batch, SMOKE_SHAPE.seq_len,
+                            cfg.vocab_padded)
+    assert bool(jnp.isfinite(logits.astype(jnp.float32)).all()), arch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_train_step_runs_and_loss_finite(arch):
+    cfg = ARCHS[arch].smoke()
+    topo = smoke_topo()
+    state = init_train_state(cfg, jax.random.key(1))
+    hp = TrainHparams(opts=OPTS)
+    step_fn = jax.jit(make_train_step(cfg, topo, hp))
+    batch = synthetic_batch(cfg, SMOKE_SHAPE, DataConfig(), step=0)
+    state, metrics = step_fn(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    assert float(metrics["grad_norm"]) > 0
+    # a second step must also run (donated buffers, schedule)
+    batch2 = synthetic_batch(cfg, SMOKE_SHAPE, DataConfig(), step=1)
+    state, metrics2 = step_fn(state, batch2)
+    assert np.isfinite(float(metrics2["loss"]))
+
+
+def test_loss_decreases_on_repetitive_stream():
+    """End-to-end learnability: tiny dense model on the synthetic stream."""
+    cfg = ARCHS["qwen1.5-4b"].smoke()
+    topo = smoke_topo()
+    state = init_train_state(cfg, jax.random.key(2))
+    from repro.optim.adamw import AdamWConfig
+    hp = TrainHparams(opts=OPTS, optimizer=AdamWConfig(
+        lr=5e-3, warmup_steps=10, weight_decay=0.0))
+    step_fn = jax.jit(make_train_step(cfg, topo, hp))
+    losses = []
+    for s in range(100):
+        batch = synthetic_batch(cfg, SMOKE_SHAPE, DataConfig(), step=s)
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+    # clear, monotone-ish descent on the repetitive stream (tiny model +
+    # 100 steps: a few percent — the examples/ drivers train to larger gains)
+    assert min(losses[-10:]) < losses[0] * 0.99, (losses[:5], losses[-10:])
+    assert min(losses[-10:]) < min(losses[:5]), (losses[:5], losses[-10:])
