@@ -51,7 +51,7 @@ def run_config(name, n_nodes, *, oversub: bool, use_onesided: bool,
 
     @jax.jit
     def round_fn(state, caches):
-        st, cch, found, val, ver, node, sidx, m = hy.hybrid_lookup(
+        st, cch, found, val, ver, node, sidx, _, m = hy.hybrid_lookup(
             t, state, kl, kh, cfg, layout, cache=caches,
             use_onesided=use_onesided)
         return st, cch, found, m

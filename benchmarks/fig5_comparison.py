@@ -52,7 +52,7 @@ def run_system(name, n_nodes, *, width: int, use_onesided: bool,
 
     @jax.jit
     def round_fn(state):
-        st, _, found, val, ver, node, sidx, m = hy.hybrid_lookup(
+        st, _, found, val, ver, node, sidx, _, m = hy.hybrid_lookup(
             t, state, kl, kh, cfg, layout, use_onesided=use_onesided)
         return st, found, m
 

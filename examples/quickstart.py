@@ -32,7 +32,7 @@ state, rep, _, _ = rpc.rpc_call(
 print(f"inserted {int((rep[..., 0] == rpc.ST_OK).sum())} keys")
 
 # --- one-two-sided lookups (Algorithm 1) ------------------------------------
-state, _, found, got, _, _, _, m = hybrid.hybrid_lookup(
+state, _, found, got, _, _, _, _, m = hybrid.hybrid_lookup(
     t, state, klo, khi, cfg, layout, use_onesided=True)
 assert bool(found.all()) and np.array_equal(np.asarray(got), np.asarray(vals))
 print(f"lookups: {float(m.onesided_success):.0f}/{float(m.total):.0f} "

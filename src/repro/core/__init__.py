@@ -7,5 +7,7 @@
 #   rpc        — write-based RPC: inbox + single completion mask + handlers
 #   hybrid     — one-two-sided operations (Algorithm 1)
 #   tx         — OCC transactions (execute/lock/validate/commit, Fig. 3)
+#   txloop     — bounded-retry transaction engine (re-enable masks + backoff)
 #   cost_model — the bytes/round-trip napkin math behind every hybrid choice
-from repro.core import cost_model, hybrid, onesided, regions, rpc, slots, transport, tx  # noqa: F401
+from repro.core import (cost_model, hybrid, onesided, regions, rpc, slots,  # noqa: F401
+                        transport, tx, txloop)

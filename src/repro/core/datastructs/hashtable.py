@@ -142,12 +142,23 @@ def lookup_end(cfg: HashTableConfig, buf, key_lo, key_hi, cache_hit=None):
 
     buf: (..., read_slots * SLOT_WORDS).  Returns (success, value, local_idx)
     where local_idx is the matching slot's index within the read (for address
-    caching).  On a cache-hit read only one slot is present.
+    caching).
+
+    cache_hit: optional (...,) bool.  A cache-hit read targets ONE exact slot;
+    when bucket_width > 1 the (static-length) read window still spans
+    bucket_width slots, which belong to a *different* bucket — or, for a
+    cached overflow slot near the arena end, to clamped out-of-region garbage.
+    For hit lanes only window position 0 (the cached slot itself) may match;
+    a stale cache entry then falls through to the RPC path, which re-learns
+    the address.
     """
     shp = buf.shape[:-1]
     width = buf.shape[-1] // sl.SLOT_WORDS
     slots_ = buf.reshape(shp + (width, sl.SLOT_WORDS))
     m = sl.slot_matches(slots_, key_lo[..., None], key_hi[..., None])
+    if cache_hit is not None:
+        exact_only = (jnp.arange(width) == 0) | ~cache_hit[..., None]
+        m = m & exact_only
     success = jnp.any(m, axis=-1)
     local_idx = jnp.argmax(m, axis=-1)
     value = jnp.take_along_axis(

@@ -46,14 +46,23 @@ class HybridMetrics:
 
 def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
                   layout, *, cache=None, use_onesided: bool = True,
-                  rpc_serial: bool = False, capacity: Optional[int] = None):
+                  rpc_serial: bool = False, capacity: Optional[int] = None,
+                  enabled=None):
     """Batched one-two-sided lookup.
 
     key_lo/key_hi: (N_local, B) uint32.
+    enabled: optional (N_local, B) bool — disabled lanes issue nothing (no
+    one-sided read, no RPC, no wire bytes) and report found=False.
     Returns (state, cache, found (N,B), value (N,B,V), version (N,B) uint32,
-             owner (N,B) int32, slot_idx (N,B) uint32, HybridMetrics).
+             owner (N,B) int32, slot_idx (N,B) uint32, overflow (N,B) bool,
+             HybridMetrics).  `overflow` marks lanes whose lookup was DROPPED
+    by send-queue back-pressure (the RPC fallback overflowed) — for those,
+    found=False means "not delivered", NOT "key absent"; transactional
+    callers must abort-and-retry them rather than treat the read as a miss.
     """
     B = key_lo.shape[-1]
+    if enabled is None:
+        enabled = jnp.ones(key_lo.shape, bool)
     if cache is not None and cfg.cache_slots > 0:
         node, off, hit = jax.vmap(
             lambda c, kl, kh: ht.lookup_start(cfg, layout, kl, kh, c)
@@ -64,27 +73,32 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
 
     if use_onesided:
         buf, ovf, s_read = osd.remote_read(
-            t, state["arena"], node, off, length=read_words, capacity=capacity)
-        success, value, local_idx = ht.lookup_end(cfg, buf, key_lo, key_hi)
+            t, state["arena"], node, off, length=read_words, capacity=capacity,
+            enabled=enabled)
+        success, value, local_idx = ht.lookup_end(cfg, buf, key_lo, key_hi,
+                                                  cache_hit=hit)
         # version of the matched slot (for OCC validation bookkeeping)
         slots_v = buf.reshape(buf.shape[:-1] + (cfg.bucket_width, sl.SLOT_WORDS))
         version = jnp.take_along_axis(
             slots_v[..., sl.VERSION], local_idx[..., None].astype(jnp.int32),
             axis=-1)[..., 0]
-        # global slot idx of the hit (cache hits read the exact slot)
+        # global slot idx of the hit.  A cache hit reads the exact cached slot
+        # and lookup_end only accepts a match at window position 0, so the
+        # matched slot IS the cached one — never cached_idx + local_idx, which
+        # could cross a bucket (or region) boundary when bucket_width > 1.
         _, bucket = ht.home_of(cfg, key_lo, key_hi)
         base_idx = bucket * jnp.uint32(cfg.bucket_width) + local_idx
         cached_idx = (off - jnp.uint32(layout["slots"].base)) // jnp.uint32(sl.SLOT_WORDS)
-        slot_idx = jnp.where(hit, cached_idx + local_idx, base_idx)
-        success = success & ~ovf
-        need_rpc = ~success
+        slot_idx = jnp.where(hit, cached_idx, base_idx)
+        success = success & ~ovf & enabled
+        need_rpc = ~success & enabled
     else:
         success = jnp.zeros(key_lo.shape, bool)
         value = jnp.zeros(key_lo.shape + (sl.VALUE_WORDS,), jnp.uint32)
         version = jnp.zeros(key_lo.shape, jnp.uint32)
         slot_idx = jnp.zeros(key_lo.shape, jnp.uint32)
         s_read = WireStats.zero()
-        need_rpc = jnp.ones(key_lo.shape, bool)
+        need_rpc = enabled
 
     # ---- phase 2: write-based RPC for the failed lanes --------------------
     recs = ht.make_record(R.OP_LOOKUP, key_lo, key_hi)
@@ -97,6 +111,9 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
     version = jnp.where(rpc_ok, replies[..., 2], version)
     slot_idx = jnp.where(rpc_ok, replies[..., 1], slot_idx)
     found = success | rpc_ok
+    # a lane is undelivered (not a genuine miss) iff its final-resort RPC
+    # was dropped by capacity back-pressure
+    overflow = need_rpc & ovf2
 
     # ---- lookup_end caching duty ------------------------------------------
     if cache is not None and cfg.cache_slots > 0:
@@ -107,7 +124,7 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
     metrics = HybridMetrics(
         onesided_success=jnp.sum(success.astype(jnp.float32)),
         rpc_fallback=jnp.sum(need_rpc.astype(jnp.float32)),
-        total=jnp.asarray(success.size, jnp.float32),
+        total=jnp.sum(enabled.astype(jnp.float32)),
         wire=s_read + s_rpc,
     )
-    return state, cache, found, value, version, node, slot_idx, metrics
+    return state, cache, found, value, version, node, slot_idx, overflow, metrics

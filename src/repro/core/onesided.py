@@ -26,20 +26,28 @@ from repro.core.transport import (Transport, WireStats, pick_replies,
 @partial(jax.named_call, name="storm_remote_read")
 def remote_read(t: Transport, arenas, dest, offsets, *, length: int,
                 capacity: Optional[int] = None,
-                mode: rg.AddressMode | None = None, page_tables=None):
+                mode: rg.AddressMode | None = None, page_tables=None,
+                enabled=None):
     """Batched one-sided READ.
 
     arenas:  (N_local, arena_words) uint32 — this shard's node states
     dest:    (N_local, B) int32  — target node of each lane
     offsets: (N_local, B) uint32 — word offset inside the target arena
     length:  static words per read (e.g. a 128B slot = 32 words)
+    enabled: optional (N_local, B) bool — disabled lanes issue nothing and
+             read back zeros (no capacity, no wire bytes).
 
     Returns (data (N_local, B, length), overflow (N_local, B) bool, WireStats).
     """
     B = dest.shape[-1]
     cap = capacity or B
-    buf, mask, pos, ovf = jax.vmap(
-        lambda d, p: route_by_dest(d, p, t.n_nodes, cap))(dest, offsets[..., None])
+    if enabled is not None:
+        buf, mask, pos, ovf = jax.vmap(
+            lambda d, p, e: route_by_dest(d, p, t.n_nodes, cap, e)
+        )(dest, offsets[..., None], enabled)
+    else:
+        buf, mask, pos, ovf = jax.vmap(
+            lambda d, p: route_by_dest(d, p, t.n_nodes, cap))(dest, offsets[..., None])
     inbox = t.exchange(buf)          # (N_local, N_src, C, 1)
     # Owner side: translation + gather ONLY.
     if mode is not None and mode.kind == "paged":
@@ -71,13 +79,10 @@ def remote_write(t: Transport, arenas, dest, offsets, values, *,
         enabled = jnp.ones(dest.shape, bool)
     payload = jnp.concatenate(
         [offsets[..., None].astype(jnp.uint32), values.astype(jnp.uint32)], axis=-1)
+    # disabled lanes are parked at the routing layer: no cell, no capacity
     buf, mask, pos, ovf = jax.vmap(
-        lambda d, p: route_by_dest(d, p, t.n_nodes, cap))(dest, payload)
-    # suppress disabled lanes at the source: clear their mask cells
-    live = enabled & ~ovf
-    srcmask = jnp.zeros_like(mask)
-    srcmask = jax.vmap(lambda m, d, p, l: m.at[d, p].set(l))(srcmask, dest, pos, live)
-    mask = mask & srcmask
+        lambda d, p, e: route_by_dest(d, p, t.n_nodes, cap, e)
+    )(dest, payload, enabled)
     inbox = t.exchange(buf)
     inbox_mask = t.exchange(mask)
 

@@ -47,8 +47,11 @@ OP_READ_VERSION = 8   # validation re-read by RPC (fallback path)
 ST_OK = 0
 ST_NOT_FOUND = 1
 ST_LOCK_FAIL = 2
-ST_NO_SPACE = 3
+ST_NO_SPACE = 3   # handler-returned: storage full (request WAS delivered)
 ST_BAD_OP = 4
+ST_DROPPED = 5    # transport-level: request never delivered (send-queue
+                  # overflow or parked lane) — retryable back-pressure,
+                  # distinct from the permanent ST_NO_SPACE
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,24 +96,24 @@ def rpc_call(t: Transport, state, dest, records, handler: Handler, *,
     dest:    (N_local, B) int32
     records: (N_local, B, W) uint32 (word 0 must be the opcode)
     enabled: optional (N_local, B) bool — lanes that actually issue the RPC.
-             Disabled lanes still occupy a cell (shape static) but carry
-             OP_NOP and are masked out of the handler and the wire stats.
+             Disabled lanes are parked by route_by_dest (no send-queue cell,
+             no capacity consumed, no wire bytes).
 
-    Returns (state, replies (N_local, B, R), overflow (N_local, B), WireStats)
+    Returns (state, replies (N_local, B, R), overflow (N_local, B), WireStats).
+    Overflowed and parked lanes carry ST_DROPPED in reply word 0 so a lane
+    that issued no request can never be mistaken for success — or for a
+    handler-returned ST_NO_SPACE, which means the request WAS delivered but
+    storage is full (not retryable).
     """
     B = dest.shape[-1]
     cap = capacity or B
     if enabled is not None:
-        nop = records.at[..., 0].set(jnp.uint32(OP_NOP))
-        records = jnp.where(enabled[..., None], records, nop)
-    buf, mask, pos, ovf = jax.vmap(
-        lambda d, p: route_by_dest(d, p, t.n_nodes, cap))(dest, records)
-    if enabled is not None:
-        live = enabled & ~ovf
-        srcmask = jnp.zeros_like(mask)
-        srcmask = jax.vmap(lambda m, d, p, l: m.at[d, p].set(l))(
-            srcmask, dest, pos, live)
-        mask = mask & srcmask
+        buf, mask, pos, ovf = jax.vmap(
+            lambda d, p, e: route_by_dest(d, p, t.n_nodes, cap, e)
+        )(dest, records, enabled)
+    else:
+        buf, mask, pos, ovf = jax.vmap(
+            lambda d, p: route_by_dest(d, p, t.n_nodes, cap))(dest, records)
     inbox = t.exchange(buf)
     inbox_mask = t.exchange(mask)
 
@@ -122,6 +125,12 @@ def rpc_call(t: Transport, state, dest, records, handler: Handler, *,
     state, replies = jax.vmap(per_node)(state, inbox, inbox_mask)
     back = t.exchange(replies)
     out = jax.vmap(pick_replies)(back, dest, pos, ovf)
+    # Lanes that issued no request must not alias ST_OK: a zeroed reply's
+    # word 0 reads as success, so stamp the status word with ST_DROPPED for
+    # overflowed AND parked (disabled) lanes.
+    no_reply = ovf if enabled is None else (ovf | ~enabled)
+    out = out.at[..., 0].set(
+        jnp.where(no_reply, jnp.uint32(ST_DROPPED), out[..., 0]))
     stats = wire_for(mask, req_words=records.shape[-1],
                      reply_words=handler.reply_words)
     return state, out, ovf, stats

@@ -98,39 +98,55 @@ class MeshTransport(Transport):
 # This is the coroutine scheduler's doorbell batching: B outstanding lanes per
 # node, sorted by destination, with a fixed per-destination capacity C
 # (overflowed lanes report failure and retry at the app level — the same
-# back-pressure a real send queue applies).
+# back-pressure a real send queue applies).  Everything headed for one
+# destination shares ONE contiguous buffer chunk, so the exchange puts one
+# coalesced message per live (src, dst) pair on the wire (Storm's doorbell
+# batching); wire_for accounts accordingly.
 # ---------------------------------------------------------------------------
 @partial(jax.jit, static_argnums=(2, 3))
-def route_by_dest(dest, payload, n_dst: int, capacity: int):
+def route_by_dest(dest, payload, n_dst: int, capacity: int, enabled=None):
     """dest: (B,) int32 in [0, n_dst); payload: (B, W) uint32.
+
+    enabled: optional (B,) bool — lanes that actually issue a request this
+    round.  Disabled lanes are parked in the trash column and, crucially, do
+    NOT consume destination capacity, so a retry round that re-enables only
+    the previously-overflowed lanes can always make progress.
 
     Returns:
       buf      (n_dst, capacity, W) uint32 — dest-major send buffer
       mask     (n_dst, capacity)    bool   — which cells hold live requests
-      pos      (B,)                 int32  — cell index of each lane (for reply pickup)
-      overflow (B,)                 bool   — lanes dropped by capacity
+      pos      (B,)                 int32  — cell index of each lane (for reply
+                                            pickup; == capacity for parked lanes)
+      overflow (B,)                 bool   — enabled lanes dropped by capacity
     """
     B = dest.shape[0]
     dest = dest.astype(jnp.int32)
-    # rank of each lane within its destination group (stable order)
-    onehot = (dest[:, None] == jnp.arange(n_dst, dtype=jnp.int32)[None, :])
+    live = jnp.ones((B,), bool) if enabled is None else enabled
+    # rank of each lane within its destination group (stable order, live only)
+    onehot = ((dest[:, None] == jnp.arange(n_dst, dtype=jnp.int32)[None, :])
+              & live[:, None])
     pos = (jnp.cumsum(onehot.astype(jnp.int32), axis=0) - 1)[jnp.arange(B), dest]
-    overflow = pos >= capacity
-    # overflowed lanes land in a trash column that is sliced off, so they can
-    # never clobber live cells (the send queue's back-pressure drop).
-    pos_c = jnp.where(overflow, capacity, pos)
+    overflow = live & (pos >= capacity)
+    # overflowed and disabled lanes land in a trash column that is sliced off,
+    # so they can never clobber live cells (the send queue's back-pressure
+    # drop).  pick_replies recognizes pos == capacity as "no cell".
+    pos = jnp.where(live & ~overflow, pos, capacity)
     buf = jnp.zeros((n_dst, capacity + 1, payload.shape[-1]), jnp.uint32)
-    buf = buf.at[dest, pos_c].set(payload.astype(jnp.uint32))
+    buf = buf.at[dest, pos].set(payload.astype(jnp.uint32))
     mask = jnp.zeros((n_dst, capacity + 1), bool)
-    mask = mask.at[dest, pos_c].set(True)
+    mask = mask.at[dest, pos].set(live)
     return buf[:, :capacity], mask[:, :capacity], pos, overflow
 
 
 def pick_replies(replies, dest, pos, overflow):
     """replies: (n_dst, C, W) dest-major reply buffer (post-exchange);
-    returns per-lane replies (B, W)."""
-    out = replies[dest, jnp.where(overflow, 0, pos)]
-    return jnp.where(overflow[:, None], jnp.zeros_like(out), out)
+    returns per-lane replies (B, W).  Lanes without a live cell (overflowed or
+    parked at pos >= C) read back zeros — callers are responsible for not
+    treating those as real replies (rpc.rpc_call stamps ST_DROPPED)."""
+    C = replies.shape[1]
+    invalid = overflow | (pos >= C)
+    out = replies[dest, jnp.where(invalid, 0, pos)]
+    return jnp.where(invalid[:, None], jnp.zeros_like(out), out)
 
 
 # ---------------------------------------------------------------------------
@@ -142,18 +158,20 @@ def pick_replies(replies, dest, pos, overflow):
 @dataclasses.dataclass
 class WireStats:
     round_trips: jnp.ndarray   # scalar f32 — network round trips issued
-    messages: jnp.ndarray      # scalar f32 — discrete messages on the wire
+    messages: jnp.ndarray      # scalar f32 — coalesced messages on the wire
+    ops: jnp.ndarray           # scalar f32 — application-level requests (IOPS)
     req_bytes: jnp.ndarray     # scalar f32
     reply_bytes: jnp.ndarray   # scalar f32
 
     @staticmethod
     def zero():
         z = jnp.zeros((), jnp.float32)
-        return WireStats(z, z, z, z)
+        return WireStats(z, z, z, z, z)
 
     def __add__(self, o):
         return WireStats(self.round_trips + o.round_trips,
                          self.messages + o.messages,
+                         self.ops + o.ops,
                          self.req_bytes + o.req_bytes,
                          self.reply_bytes + o.reply_bytes)
 
@@ -163,13 +181,21 @@ class WireStats:
 
 
 def wire_for(mask, req_words: int, reply_words: int, header_words: int = 1):
-    """Stats for one exchange round given the live-cell mask (..., n_dst, C)."""
+    """Stats for one exchange round given the live-cell mask (..., n_dst, C).
+
+    Requests headed for the same destination ride ONE coalesced wire message
+    per live (src, dst) pair — Storm's doorbell batching — and likewise for
+    the replies coming back, so `messages` counts live pairs (both ways) while
+    `ops` keeps the per-request count the paper reports as IOPS.  Each
+    coalesced message pays the header once; each record pays its payload.
+    """
     live = jnp.sum(mask.astype(jnp.float32))
-    # messages: one per live cell each way (requests coalesced per (src,dst)
-    # pair would be fewer; we count per-op messages like the paper's IOPS).
+    pairs = jnp.sum(jnp.any(mask, axis=-1).astype(jnp.float32))
+    reply_pairs = pairs if reply_words > 0 else jnp.zeros((), jnp.float32)
     return WireStats(
         round_trips=jnp.asarray(1.0, jnp.float32),
-        messages=2.0 * live,
-        req_bytes=live * 4.0 * (req_words + header_words),
-        reply_bytes=live * 4.0 * (reply_words + header_words),
+        messages=pairs + reply_pairs,
+        ops=live,
+        req_bytes=live * 4.0 * req_words + pairs * 4.0 * header_words,
+        reply_bytes=live * 4.0 * reply_words + reply_pairs * 4.0 * header_words,
     )

@@ -15,6 +15,13 @@ Shapes are static: each lane has exactly R read keys and W write keys; lanes
 are batched B per node ("coroutines"), so a full transaction costs the same
 FIVE pipeline rounds the paper's Figure 3 shows, independent of B:
     read (1-2 RTs: read + masked RPC) + lock (1) + validate (1) + commit (1).
+
+The protocol is factored into per-phase functions (execute_read_set /
+lock_write_set / validate_read_set / commit_or_abort) so that
+``run_transactions`` (single shot) and ``txloop.tx_loop`` (bounded-retry
+engine) share one implementation of every phase.  Aborts are classified by
+cause — lock conflict, validation conflict, or overflow/back-pressure — which
+is what the retry loop and the contention benchmarks report.
 """
 from __future__ import annotations
 
@@ -39,15 +46,130 @@ class TxResult:
     read_found: jnp.ndarray       # (N, B, R) bool
     read_values: jnp.ndarray      # (N, B, R, VALUE_WORDS)
     locked_values: jnp.ndarray    # (N, B, W, VALUE_WORDS) read-for-update values
+    aborted_lock: jnp.ndarray     # (N, B) bool — lost a lock race
+    aborted_validate: jnp.ndarray  # (N, B) bool — read-set changed underfoot
+    aborted_overflow: jnp.ndarray  # (N, B) bool — back-pressure / no space
     metrics: hy.HybridMetrics
     round_trips: jnp.ndarray      # scalar
+
+
+# ---------------------------------------------------------------------------
+# Phase functions.  Each takes/returns cluster state plus a plain dict of
+# per-item arrays; lane axes are flattened to (N, B*K) like the wire sees them.
+# ---------------------------------------------------------------------------
+def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
+                     read_keys, read_enabled, cache=None,
+                     use_onesided: bool = True, capacity: Optional[int] = None):
+    """EXECUTE phase, read half: one-two-sided lookups of the read set.
+
+    read_keys: (N, B, Rd, 2); read_enabled: (N, B, Rd) bool.
+    Returns (state, cache, ctx) where ctx holds the flattened (N, B*Rd)
+    found/values/versions/owner/slot arrays the later phases need.
+    """
+    N, B, Rd = read_keys.shape[:3]
+    rk_lo = read_keys[..., 0].reshape(N, B * Rd)
+    rk_hi = read_keys[..., 1].reshape(N, B * Rd)
+    en = read_enabled.reshape(N, B * Rd)
+    state, cache, found, rvals, rvers, rnode, rslot, rovf, m = hy.hybrid_lookup(
+        t, state, rk_lo, rk_hi, cfg, layout, cache=cache,
+        use_onesided=use_onesided, rpc_serial=False, capacity=capacity,
+        enabled=en)
+    return state, cache, dict(
+        key_lo=rk_lo, key_hi=rk_hi, enabled=en, found=found, values=rvals,
+        versions=rvers, node=rnode, slot=rslot, overflow=rovf, metrics=m)
+
+
+def lock_write_set(t: Transport, state, cfg: ht.HashTableConfig, layout,
+                   serial_h, *, write_keys, write_enabled,
+                   capacity: Optional[int] = None):
+    """EXECUTE phase, write half: LOCK + read-for-update the write set.
+
+    write_keys: (N, B, Wr, 2); write_enabled: (N, B, Wr) bool.
+    """
+    N, B, Wr = write_keys.shape[:3]
+    wk_lo = write_keys[..., 0].reshape(N, B * Wr)
+    wk_hi = write_keys[..., 1].reshape(N, B * Wr)
+    en = write_enabled.reshape(N, B * Wr)
+    wnode, _, _ = ht.lookup_start(cfg, layout, wk_lo, wk_hi, None)
+    # unique nonzero lock tag per (node, lane)
+    lane = jnp.arange(B * Wr, dtype=jnp.uint32) // jnp.uint32(max(Wr, 1))
+    tag = (t.node_ids().astype(jnp.uint32)[:, None] * jnp.uint32(B)
+           + lane[None, :] + jnp.uint32(1))
+    lock_recs = ht.make_record(R.OP_LOCK, wk_lo, wk_hi, aux=tag)
+    state, lrep, lovf, s_lock = R.rpc_call(
+        t, state, wnode, lock_recs, serial_h, capacity=capacity, enabled=en)
+    status = lrep[..., 0]
+    lock_ok = (status == R.ST_OK) & ~lovf & en
+    return state, dict(
+        key_lo=wk_lo, key_hi=wk_hi, enabled=en, node=wnode,
+        lock_ok=lock_ok, lock_slot=lrep[..., 1],
+        locked_values=lrep[..., 3:].reshape(N, B, Wr, sl.VALUE_WORDS),
+        lock_fail=(status == R.ST_LOCK_FAIL) & en,
+        # overflow-class outcomes: dropped by back-pressure (retryable) or
+        # table full (ST_NO_SPACE, delivered) — both abort with cause overflow
+        no_space=((status == R.ST_NO_SPACE) | (status == R.ST_DROPPED)
+                  | lovf) & en,
+        overflow=lovf & en, wire=s_lock)
+
+
+def validate_read_set(t: Transport, state, layout, read_ctx, *,
+                      capacity: Optional[int] = None):
+    """VALIDATE phase: one-sided re-read of every read-set slot version.
+
+    Returns a dict with per-item `valid` plus the overflow mask and wire
+    stats.  Absent reads validate trivially (repeatable-read of a miss is NOT
+    guaranteed — documented limitation, same as the paper's protocol sketch).
+    """
+    # absent reads validate trivially, so only found reads are re-read — dead
+    # validation reads would waste per-destination send-queue capacity and
+    # could overflow a found lane's re-read for nothing
+    issued = read_ctx["enabled"] & read_ctx["found"]
+    voff = ht.slot_idx_offset(layout, read_ctx["slot"])
+    vbuf, vovf, s_val = osd.remote_read(
+        t, state["arena"], read_ctx["node"], voff, length=sl.SLOT_WORDS,
+        capacity=capacity, enabled=issued)
+    cur_ver = vbuf[..., sl.VERSION]
+    cur_klo = vbuf[..., sl.KEY_LO]
+    cur_lock = vbuf[..., sl.LOCK]
+    unchanged = ((cur_ver == read_ctx["versions"])
+                 & (cur_klo == read_ctx["key_lo"]) & (cur_lock == 0) & ~vovf)
+    valid = unchanged | ~read_ctx["found"]
+    return dict(valid=valid, overflow=vovf & issued, wire=s_val)
+
+
+def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
+                    write_values, capacity: Optional[int] = None):
+    """COMMIT / ABORT phase: lanes that hold locks either install their values
+    (version += 2, unlock) or roll back.  commit_lane: (N, B) bool;
+    write_values: anything reshapeable to (N, B*Wr, VALUE_WORDS).
+
+    This round cannot overflow: its enabled set (lock holders) is a subset of
+    the lanes the lock round DELIVERED, to the same destinations in the same
+    lane order at the same capacity, so every enabled lane's send-queue rank
+    can only shrink.  That invariant is what guarantees an acquired lock is
+    always released — run_transactions still folds the returned overflow into
+    the abort classification as defense in depth."""
+    N, B = commit_lane.shape
+    Wr = lock_ctx["key_lo"].shape[1] // max(B, 1)
+    commit_item = jnp.repeat(commit_lane, Wr, axis=-1)  # (N, B*Wr)
+    op = jnp.where(commit_item, jnp.uint32(R.OP_COMMIT_UNLOCK),
+                   jnp.uint32(R.OP_ABORT_UNLOCK))
+    cm_recs = ht.make_record(
+        op, lock_ctx["key_lo"], lock_ctx["key_hi"], aux=lock_ctx["lock_slot"],
+        value=write_values.reshape(N, B * Wr, sl.VALUE_WORDS))
+    # only lanes that actually HOLD a lock must unlock/commit
+    state, crep, covf, s_cm = R.rpc_call(
+        t, state, lock_ctx["node"], cm_recs, serial_h, capacity=capacity,
+        enabled=lock_ctx["lock_ok"])
+    return state, dict(overflow=covf & lock_ctx["lock_ok"], wire=s_cm)
 
 
 def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                      read_keys, write_keys, write_values, write_enabled=None,
                      read_enabled=None, cache=None, use_onesided: bool = True,
                      capacity: Optional[int] = None):
-    """Execute a batch of transactions, one per lane.
+    """Execute a batch of transactions, one per lane (single shot — aborted
+    lanes report their cause and stop; see txloop.tx_loop for bounded retry).
 
     read_keys:    (N, B, Rd, 2) uint32 (lo, hi)
     write_keys:   (N, B, Wr, 2) uint32
@@ -64,80 +186,71 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
     if write_enabled is None:
         write_enabled = jnp.ones((N, B, Wr), bool)
     serial_h = ht.make_rpc_handler(cfg, layout)
-    wire = WireStats.zero()
 
     # ---------------- EXECUTE: read set (hybrid one-two-sided) -------------
-    rk_lo = read_keys[..., 0].reshape(N, B * Rd)
-    rk_hi = read_keys[..., 1].reshape(N, B * Rd)
-    state, cache, found, rvals, rvers, rnode, rslot, m = hy.hybrid_lookup(
-        t, state, rk_lo, rk_hi, cfg, layout, cache=cache,
-        use_onesided=use_onesided, rpc_serial=False, capacity=capacity)
-    wire = wire + m.wire
-    read_found = (found & read_enabled.reshape(N, B * Rd)).reshape(N, B, Rd)
+    state, cache, rctx = execute_read_set(
+        t, state, cfg, layout, read_keys=read_keys, read_enabled=read_enabled,
+        cache=cache, use_onesided=use_onesided, capacity=capacity)
+    m = rctx["metrics"]
+    read_found = rctx["found"].reshape(N, B, Rd)
 
     # ---------------- EXECUTE: lock + read-for-update the write set --------
-    wk_lo = write_keys[..., 0].reshape(N, B * Wr)
-    wk_hi = write_keys[..., 1].reshape(N, B * Wr)
-    wnode, _, _ = ht.lookup_start(cfg, layout, wk_lo, wk_hi, None)
-    # unique nonzero lock tag per (node, lane)
-    lane = jnp.arange(B * Wr, dtype=jnp.uint32) // jnp.uint32(Wr)
-    tag = (t.node_ids().astype(jnp.uint32)[:, None] * jnp.uint32(B)
-           + lane[None, :] + jnp.uint32(1))
-    lock_recs = ht.make_record(R.OP_LOCK, wk_lo, wk_hi, aux=tag)
-    state, lrep, lovf, s_lock = R.rpc_call(
-        t, state, wnode, lock_recs, serial_h, capacity=capacity,
-        enabled=write_enabled.reshape(N, B * Wr))
-    wire = wire + s_lock
-    lock_ok = (lrep[..., 0] == R.ST_OK) & ~lovf
-    lock_slot = lrep[..., 1]
-    locked_values = lrep[..., 3:].reshape(N, B, Wr, sl.VALUE_WORDS)
+    state, lctx = lock_write_set(
+        t, state, cfg, layout, serial_h, write_keys=write_keys,
+        write_enabled=write_enabled, capacity=capacity)
     lane_locks_ok = jnp.all(
-        (lock_ok | ~write_enabled.reshape(N, B * Wr)).reshape(N, B, Wr), axis=-1)
+        (lctx["lock_ok"] | ~lctx["enabled"]).reshape(N, B, Wr), axis=-1)
 
     # ---------------- VALIDATE: one-sided re-read of read-set versions -----
-    voff = ht.slot_idx_offset(layout, rslot)
-    vbuf, vovf, s_val = osd.remote_read(
-        t, state["arena"], rnode, voff, length=sl.SLOT_WORDS, capacity=capacity)
-    cur_ver = vbuf[..., sl.VERSION]
-    cur_klo = vbuf[..., sl.KEY_LO]
-    cur_lock = vbuf[..., sl.LOCK]
-    unchanged = (cur_ver == rvers) & (cur_klo == rk_lo) & (cur_lock == 0) & ~vovf
-    # absent reads validate trivially (repeatable-read of a miss is NOT
-    # guaranteed — documented limitation, same as the paper's protocol sketch)
-    read_valid = unchanged | ~found
-    wire = wire + s_val
+    vctx = validate_read_set(t, state, layout, rctx, capacity=capacity)
     lane_valid = jnp.all(
-        (read_valid | ~read_enabled.reshape(N, B * Rd)).reshape(N, B, Rd), axis=-1)
+        (vctx["valid"] | ~rctx["enabled"]).reshape(N, B, Rd), axis=-1)
+
+    # a read dropped by back-pressure is NOT a miss: the lane must abort
+    # (cause: overflow) and retry, never commit against an unread read set
+    lane_reads_ok = ~jnp.any(rctx["overflow"].reshape(N, B, Rd), axis=-1)
 
     # ---------------- COMMIT / ABORT (write-based RPCs) --------------------
-    commit_lane = lane_locks_ok & lane_valid            # (N, B)
-    commit_item = jnp.repeat(commit_lane, Wr, axis=-1)  # (N, B*Wr)
-    op = jnp.where(commit_item, jnp.uint32(R.OP_COMMIT_UNLOCK),
-                   jnp.uint32(R.OP_ABORT_UNLOCK))
-    cm_recs = ht.make_record(
-        op, wk_lo, wk_hi, aux=lock_slot,
-        value=write_values.reshape(N, B * Wr, sl.VALUE_WORDS))
-    # only lanes that actually HOLD a lock must unlock/commit
-    state, crep, covf, s_cm = R.rpc_call(
-        t, state, wnode, cm_recs, serial_h, capacity=capacity,
-        enabled=lock_ok & write_enabled.reshape(N, B * Wr))
-    wire = wire + s_cm
+    commit_lane = lane_locks_ok & lane_valid & lane_reads_ok    # (N, B)
+    state, cctx = commit_or_abort(
+        t, state, serial_h, lctx, commit_lane=commit_lane,
+        write_values=write_values, capacity=capacity)
 
     has_writes = jnp.any(write_enabled, axis=-1)
-    committed = jnp.where(has_writes, commit_lane, lane_valid)
+    # commit RPCs provably never overflow (see commit_or_abort); the gate is
+    # defense in depth so a lost commit could never masquerade as success
+    commit_delivered = ~jnp.any(cctx["overflow"].reshape(N, B, Wr), axis=-1)
+    committed = jnp.where(has_writes, commit_lane & commit_delivered,
+                          lane_valid & lane_reads_ok)
 
+    # ---------------- abort causes (priority: overflow > lock > validate) --
+    lane_ovf = (~lane_reads_ok
+                | jnp.any(lctx["no_space"].reshape(N, B, Wr), axis=-1)
+                | jnp.any(vctx["overflow"].reshape(N, B, Rd), axis=-1)
+                | jnp.any(cctx["overflow"].reshape(N, B, Wr), axis=-1))
+    lane_lock_fail = jnp.any(lctx["lock_fail"].reshape(N, B, Wr), axis=-1)
+    aborted = ~committed
+    aborted_overflow = aborted & lane_ovf
+    aborted_lock = aborted & ~lane_ovf & lane_lock_fail
+    aborted_validate = aborted & ~lane_ovf & ~lane_lock_fail & ~lane_valid
+
+    wire = (m.wire + lctx["wire"] + vctx["wire"] + cctx["wire"])
     metrics = hy.HybridMetrics(
         onesided_success=m.onesided_success,
         rpc_fallback=m.rpc_fallback,
         total=m.total,
         wire=wire,
     )
-    rts = m.wire.round_trips + s_lock.round_trips + s_val.round_trips + s_cm.round_trips
+    rts = (m.wire.round_trips + lctx["wire"].round_trips
+           + vctx["wire"].round_trips + cctx["wire"].round_trips)
     return state, cache, TxResult(
         committed=committed,
         read_found=read_found,
-        read_values=rvals.reshape(N, B, Rd, sl.VALUE_WORDS),
-        locked_values=locked_values,
+        read_values=rctx["values"].reshape(N, B, Rd, sl.VALUE_WORDS),
+        locked_values=lctx["locked_values"],
+        aborted_lock=aborted_lock,
+        aborted_validate=aborted_validate,
+        aborted_overflow=aborted_overflow,
         metrics=metrics,
         round_trips=rts,
     )

@@ -1,0 +1,150 @@
+"""Multi-round transaction engine: bounded retry with backoff (Storm §5.4).
+
+``tx.run_transactions`` is single shot: a lane that loses a lock race, fails
+OCC validation, or is dropped by send-queue back-pressure simply reports
+failure.  Storm's dataplane instead *retries* aborted transactions — under
+contention the batch converges instead of silently dropping work.  ``tx_loop``
+drives that retry:
+
+  * a ``lax.scan`` over ``max_rounds`` protocol rounds, all shapes static;
+  * per-round lane re-enable masks: lanes that committed are parked (their
+    reads/writes are disabled, so they cost no handler work, no send-queue
+    capacity and no wire bytes — see transport.route_by_dest's enabled mask);
+    lanes that aborted for ANY cause (lock conflict, validation conflict,
+    overflow) stay live and re-execute the full OCC protocol;
+  * randomized-slot backoff: each round >= 1 permutes the surviving lanes'
+    send-queue slots with a per-round PRNG draw, which re-randomizes the lock
+    serialization order so one pathological ordering cannot starve the same
+    lane round after round (the batched analogue of randomized exponential
+    backoff).
+
+Because committed lanes release send-queue capacity, a workload that
+overflows a small per-destination capacity drains across rounds — every lane
+is eventually delivered (see tests/test_txloop.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import hybrid as hy
+from repro.core import slots as sl
+from repro.core import tx as txm
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import Transport
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TxLoopResult:
+    committed: jnp.ndarray            # (N, B) bool — committed in ANY round
+    commit_round: jnp.ndarray         # (N, B) int32 — round of commit, -1 if never
+    read_found: jnp.ndarray           # (N, B, R) bool — from the lane's last attempt
+    read_values: jnp.ndarray          # (N, B, R, VALUE_WORDS)
+    # --- per-round metrics, each (max_rounds,) int32 -----------------------
+    round_committed: jnp.ndarray      # lanes that committed in round r
+    round_attempts: jnp.ndarray       # live lanes entering round r
+    round_retries: jnp.ndarray        # live lanes in round r > 0 (re-attempts)
+    round_abort_lock: jnp.ndarray     # aborts by cause, per round
+    round_abort_validate: jnp.ndarray
+    round_abort_overflow: jnp.ndarray
+    metrics: hy.HybridMetrics         # totals across all rounds
+    round_trips: jnp.ndarray          # scalar
+
+
+def _perm_lanes(x, perm):
+    """Permute the lane axis (axis 1) of (N, B, ...) by perm (N, B)."""
+    idx = perm.reshape(perm.shape + (1,) * (x.ndim - 2))
+    return jnp.take_along_axis(x, idx, axis=1)
+
+
+def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
+            read_keys, write_keys, write_values, read_enabled=None,
+            write_enabled=None, cache=None, use_onesided: bool = True,
+            capacity: Optional[int] = None, max_rounds: int = 4, key=None):
+    """Run a batch of transactions to convergence (bounded by max_rounds).
+
+    Arguments mirror tx.run_transactions; additionally:
+      max_rounds: static retry bound (>= 1).  Round 0 is identical to the
+                  single-shot protocol; each later round re-runs only the
+                  still-aborted lanes with permuted send-queue slots.
+      key:        optional jax PRNG key for the backoff permutation.
+
+    Returns (state, cache, TxLoopResult).
+    """
+    N, B, Rd = read_keys.shape[:3]
+    if read_enabled is None:
+        read_enabled = jnp.ones(read_keys.shape[:3], bool)
+    if write_enabled is None:
+        write_enabled = jnp.ones(write_keys.shape[:3], bool)
+    if key is None:
+        key = jax.random.PRNGKey(0x5707)
+    ident = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None], (N, B))
+
+    def body(carry, rnd):
+        state, cache, done, commit_round, rfound, rvals, key = carry
+        key, sub = jax.random.split(key)
+        perm = jax.vmap(lambda k: jax.random.permutation(k, B))(
+            jax.random.split(sub, N)).astype(jnp.int32)
+        perm = jnp.where(rnd == 0, ident, perm)     # round 0 == single shot
+        inv = jnp.argsort(perm, axis=1)
+        active = ~done
+        p = lambda x: _perm_lanes(x, perm)
+        u = lambda x: _perm_lanes(x, inv)
+        act_p = p(active)
+        state, cache, res = txm.run_transactions(
+            t, state, cfg, layout,
+            read_keys=p(read_keys), write_keys=p(write_keys),
+            write_values=p(write_values),
+            read_enabled=p(read_enabled) & act_p[..., None],
+            write_enabled=p(write_enabled) & act_p[..., None],
+            cache=cache, use_onesided=use_onesided, capacity=capacity)
+        # fully-masked (parked) lanes report committed=True — gate on active
+        newly = u(res.committed) & active
+        done = done | newly
+        commit_round = jnp.where(newly, rnd.astype(jnp.int32), commit_round)
+        rfound = jnp.where(active[..., None], u(res.read_found), rfound)
+        rvals = jnp.where(active[..., None, None], u(res.read_values), rvals)
+        count = lambda x: jnp.sum(x.astype(jnp.int32))
+        stats = dict(
+            committed=count(newly),
+            attempts=count(active),
+            retries=jnp.where(rnd > 0, count(active), 0),
+            abort_lock=count(u(res.aborted_lock) & active),
+            abort_validate=count(u(res.aborted_validate) & active),
+            abort_overflow=count(u(res.aborted_overflow) & active),
+            metrics=res.metrics,
+            round_trips=res.round_trips,
+        )
+        return (state, cache, done, commit_round, rfound, rvals, key), stats
+
+    init = (
+        state, cache,
+        jnp.zeros((N, B), bool),
+        jnp.full((N, B), -1, jnp.int32),
+        jnp.zeros(read_enabled.shape, bool),
+        jnp.zeros(read_enabled.shape + (sl.VALUE_WORDS,), jnp.uint32),
+        key,
+    )
+    (state, cache, done, commit_round, rfound, rvals, _), ys = lax.scan(
+        body, init, jnp.arange(max_rounds))
+
+    metrics = jax.tree.map(lambda x: jnp.sum(x, axis=0), ys["metrics"])
+    return state, cache, TxLoopResult(
+        committed=done,
+        commit_round=commit_round,
+        read_found=rfound,
+        read_values=rvals,
+        round_committed=ys["committed"],
+        round_attempts=ys["attempts"],
+        round_retries=ys["retries"],
+        round_abort_lock=ys["abort_lock"],
+        round_abort_validate=ys["abort_validate"],
+        round_abort_overflow=ys["abort_overflow"],
+        metrics=metrics,
+        round_trips=jnp.sum(ys["round_trips"]),
+    )

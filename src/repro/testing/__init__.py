@@ -1,0 +1,5 @@
+# Test-support utilities (not part of the dataplane).
+#   hypothesis_stub — fixed-sample fallback for the hypothesis API so the
+#                     property suites still execute where hypothesis is absent
+#   workloads       — synthetic workload generators shared by benchmarks/tests
+from repro.testing import hypothesis_stub, workloads  # noqa: F401

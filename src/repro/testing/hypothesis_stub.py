@@ -1,0 +1,88 @@
+"""Minimal fixed-sample stand-in for the tiny slice of the `hypothesis` API
+this repo's property tests use (given / settings / strategies.integers,
+sampled_from, booleans).
+
+Why: the tier-1 suite must collect and run even on machines where hypothesis
+is not installed (the container image does not bake it in, and installing
+packages is off-limits).  Rather than skipping the property suites wholesale,
+each `@given` test degrades to a deterministic sweep over a small, fixed
+sample per strategy — bounds, midpoints, and a couple of pseudo-random
+interior points — zipped positionally across strategies.  With hypothesis
+present, the real library is used and this module is never imported (see the
+try/except import in tests/test_property_storm.py and tests/test_kernels.py).
+
+This is NOT a property-testing framework: no shrinking, no example database,
+no stateful testing.  It exists so invariants keep being exercised everywhere.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, samples):
+        self.samples = list(samples)
+
+
+def _dedup(xs):
+    seen, out = set(), []
+    for x in xs:
+        k = (type(x).__name__, x)
+        if k not in seen:
+            seen.add(k)
+            out.append(x)
+    return out
+
+
+class strategies:
+    """Fixed-sample counterparts of the strategies the tests use."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=100):
+        rng = random.Random(min_value * 1000003 + max_value)
+        span = max_value - min_value
+        picks = [min_value, max_value, min_value + span // 2]
+        picks += [min_value + rng.randrange(span + 1) for _ in range(2)]
+        return _Strategy(_dedup(picks))
+
+    @staticmethod
+    def sampled_from(elements):
+        return _Strategy(list(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy([False, True])
+
+
+st = strategies
+
+
+def settings(*args, **kwargs):
+    """Accepts and ignores hypothesis settings (max_examples, deadline, ...)."""
+    if args and callable(args[0]) and not kwargs:
+        return args[0]          # bare @settings usage
+    return lambda fn: fn
+
+
+def given(**named_strategies):
+    """Run the test once per positional slice across the strategies' fixed
+    samples (shorter sample lists wrap around)."""
+    names = list(named_strategies)
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = max(len(named_strategies[k].samples) for k in names)
+            for i in range(n):
+                drawn = {k: named_strategies[k].samples[i % len(named_strategies[k].samples)]
+                         for k in names}
+                fn(*args, **drawn, **kwargs)
+        # hide the strategy-filled parameters from pytest's fixture resolver
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in names])
+        return wrapper
+
+    return deco

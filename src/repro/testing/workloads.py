@@ -1,0 +1,33 @@
+"""Shared synthetic workload generators used by both the benchmarks and the
+test suite, so the acceptance tests and the benchmarks they guard cannot
+silently diverge."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import slots as sl
+
+
+def value_for(key_lo):
+    """Deterministic per-key slot value (VALUE_WORDS uint32 words)."""
+    i = jnp.arange(sl.VALUE_WORDS, dtype=jnp.uint32)
+    return sl._mix32(jnp.asarray(key_lo, jnp.uint32)[..., None] + i)
+
+
+def zipf_write_keys(n_nodes: int, lanes: int, *, n_hot: int = 4,
+                    theta: float = 1.5, seed: int = 0, stride: int = 7919):
+    """One write key per lane, Zipf(theta)-distributed over n_hot hot keys:
+    a few keys absorb most of the write traffic, so lock races abound
+    (Storm's contention regime).
+
+    Returns (hot (n_hot,), key_lo (n_nodes, lanes, 1), key_hi same) uint32.
+    """
+    rng = np.random.RandomState(seed)
+    hot = (np.arange(n_hot, dtype=np.uint32) + 1) * np.uint32(stride)
+    rank = np.arange(1, n_hot + 1, dtype=np.float64)
+    p = 1.0 / rank ** theta
+    p /= p.sum()
+    pick = rng.choice(n_hot, size=(n_nodes, lanes, 1), p=p)
+    klo = jnp.asarray(hot[pick], jnp.uint32)
+    return jnp.asarray(hot), klo, jnp.zeros_like(klo)

@@ -157,7 +157,7 @@ def test_hybrid_lookup_one_two_sided(cfg, layout):
         t, state, node, ht.make_record(R.OP_INSERT, klo, khi, value=vals), h)
     assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
 
-    state, cache, found, value, ver, onode, sidx, m = hy.hybrid_lookup(
+    state, cache, found, value, ver, onode, sidx, _, m = hy.hybrid_lookup(
         t, state, klo, khi, cfg, layout, use_onesided=True)
     assert bool(found.all())
     np.testing.assert_array_equal(np.asarray(value), np.asarray(vals))
@@ -178,9 +178,9 @@ def test_hybrid_lookup_rpc_only_matches(cfg, layout):
     h = ht.make_rpc_handler(cfg, layout)
     state, _, _, _ = R.rpc_call(
         t, state, node, ht.make_record(R.OP_INSERT, klo, khi, value=vals), h)
-    s1, _, f1, v1, _, _, _, _ = hy.hybrid_lookup(
+    s1, _, f1, v1, *_ = hy.hybrid_lookup(
         t, state, klo, khi, cfg, layout, use_onesided=True)
-    s2, _, f2, v2, _, _, _, _ = hy.hybrid_lookup(
+    s2, _, f2, v2, *_ = hy.hybrid_lookup(
         t, state, klo, khi, cfg, layout, use_onesided=False)
     np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
     np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
@@ -203,7 +203,7 @@ def test_overflow_chain_walk():
         t, state, node, ht.make_record(R.OP_INSERT, klo, khi, value=vals), h)
     assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
     # all but one key lives in the chain -> hybrid must still find all
-    state, _, found, value, _, _, _, m = hy.hybrid_lookup(
+    state, _, found, value, _, _, _, _, m = hy.hybrid_lookup(
         t, state, klo, khi, cfg, layout, use_onesided=True)
     assert bool(found.all())
     np.testing.assert_array_equal(np.asarray(value), np.asarray(vals))

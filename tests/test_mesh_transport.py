@@ -53,10 +53,15 @@ SCRIPT = textwrap.dedent("""
             tm, state, klo, khi, cfg, layout)
         return rep, found, value
 
-    fn = jax.jit(jax.shard_map(
+    if hasattr(jax, "shard_map"):          # jax >= 0.6: check_vma
+        smap, smap_kw = jax.shard_map, {"check_vma": False}
+    else:                                  # older jax: experimental, check_rep
+        from jax.experimental.shard_map import shard_map as smap
+        smap_kw = {"check_rep": False}
+    fn = jax.jit(smap(
         run, mesh=mesh,
         in_specs=(P("node"), P("node"), P("node"), P("node"), P("node")),
-        out_specs=(P("node"), P("node"), P("node")), check_vma=False))
+        out_specs=(P("node"), P("node"), P("node")), **smap_kw))
     s_mesh = put(ht.init_cluster_state(cfg))
     rep_m, f_m, v_m = fn(s_mesh, put(node), put(klo), put(khi), put(vals))
 

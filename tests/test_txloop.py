@@ -1,0 +1,273 @@
+"""Multi-round transaction engine (txloop), coalesced wire accounting, the
+rpc overflow-status regression, and the hybrid cache-hit slot regression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hybrid as hy
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core import tx as txm
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport
+from repro.core.txloop import tx_loop
+from repro.testing.workloads import value_for, zipf_write_keys
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ht.HashTableConfig(n_nodes=N, n_buckets=64, bucket_width=2,
+                              n_overflow=64, max_chain=6)
+
+
+@pytest.fixture(scope="module")
+def layout(cfg):
+    return ht.build_layout(cfg)
+
+
+def insert_keys(t, state, cfg, layout, klo, khi):
+    h = ht.make_rpc_handler(cfg, layout)
+    node, _, _ = ht.lookup_start(cfg, layout, klo, khi)
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_INSERT, klo, khi,
+                                       value=value_for(klo)), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: tx_loop beats single-shot under skew, with coherent metrics
+# ---------------------------------------------------------------------------
+def test_txloop_converges_on_skewed_writes(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 8
+    hot, klo, khi = zipf_write_keys(N, B, seed=1)
+    state = insert_keys(t, state, cfg, layout, jnp.tile(hot[None], (N, 1)),
+                        jnp.zeros((N, hot.shape[0]), jnp.uint32))
+    rk = jnp.zeros((N, B, 0, 2), jnp.uint32)
+    wk = jnp.stack([klo, khi], -1)
+    wv = value_for(klo + jnp.uint32(5))
+
+    s1, _, single = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv)
+    n_single = int(np.asarray(single.committed).sum())
+
+    s2, _, res = tx_loop(t, state, cfg, layout, read_keys=rk, write_keys=wk,
+                         write_values=wv, max_rounds=6)
+    n_loop = int(np.asarray(res.committed).sum())
+
+    # the whole point: retries commit strictly more work under contention
+    assert n_loop > n_single, (n_loop, n_single)
+    # per-round accounting is exact: every attempt commits or aborts with
+    # exactly one cause
+    com = np.asarray(res.round_committed)
+    att = np.asarray(res.round_attempts)
+    a_l = np.asarray(res.round_abort_lock)
+    a_v = np.asarray(res.round_abort_validate)
+    a_o = np.asarray(res.round_abort_overflow)
+    np.testing.assert_array_equal(att, com + a_l + a_v + a_o)
+    assert com.sum() == n_loop
+    # round 0 is the single-shot protocol; later rounds only retry survivors
+    assert com[0] == n_single
+    assert int(np.asarray(res.round_retries)[0]) == 0
+    assert int(np.asarray(res.round_retries)[1]) == att[1] == att[0] - com[0]
+    assert a_l[0] > 0, "skewed writes must produce lock-race aborts"
+    # commit_round is consistent with the committed mask
+    cr = np.asarray(res.commit_round)
+    assert ((cr >= 0) == np.asarray(res.committed)).all()
+    # coalesced wire: strictly fewer messages than the per-op count (every
+    # round sends many lanes to few destinations)
+    msgs = float(res.metrics.wire.messages)
+    ops = float(res.metrics.wire.ops)
+    assert msgs <= 2.0 * ops
+    assert msgs < 2.0 * ops, "trace has multiple lanes per (src,dst) pair"
+
+
+def test_txloop_single_round_matches_single_shot(cfg, layout):
+    """Round 0 uses the identity slot order, so max_rounds=1 IS run_transactions."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 6
+    rng = np.random.RandomState(3)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    rk = jnp.zeros((N, B, 0, 2), jnp.uint32)
+    wk = jnp.stack([klo, khi], -1)
+    wv = value_for(klo)
+    s1, _, single = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv)
+    s2, _, loop = tx_loop(t, state, cfg, layout, read_keys=rk, write_keys=wk,
+                          write_values=wv, max_rounds=1)
+    np.testing.assert_array_equal(np.asarray(single.committed),
+                                  np.asarray(loop.committed))
+    np.testing.assert_array_equal(np.asarray(s1["arena"]), np.asarray(s2["arena"]))
+
+
+def test_txloop_drains_backpressure(cfg, layout):
+    """Distinct keys + tiny per-destination capacity: single shot drops lanes
+    with ST_NO_SPACE aborts; the loop re-enables them and every lane lands."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 8
+    rng = np.random.RandomState(4)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    rk = jnp.zeros((N, B, 0, 2), jnp.uint32)
+    wk = jnp.stack([klo, khi], -1)
+    wv = value_for(klo)
+    s1, _, single = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        capacity=2)
+    assert int(np.asarray(single.aborted_overflow).sum()) > 0
+    s2, _, res = tx_loop(t, state, cfg, layout, read_keys=rk, write_keys=wk,
+                         write_values=wv, capacity=2, max_rounds=8)
+    assert bool(np.asarray(res.committed).all()), np.asarray(res.committed)
+    assert int(np.asarray(res.round_abort_overflow)[0]) > 0
+
+
+def test_txloop_reads_and_writes(cfg, layout):
+    """Mixed read+write lanes: reads from the committing round are returned."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B, Rd = 4, 2
+    rng = np.random.RandomState(5)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B, Rd + 1)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, B, Rd + 1)), jnp.uint32)
+    state = insert_keys(t, state, cfg, layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    rk = jnp.stack([klo[..., :Rd], khi[..., :Rd]], -1)
+    wk = jnp.stack([klo[..., Rd:], khi[..., Rd:]], -1)
+    wv = value_for(klo[..., Rd:] + jnp.uint32(9))
+    state, _, res = tx_loop(t, state, cfg, layout, read_keys=rk, write_keys=wk,
+                            write_values=wv, max_rounds=4)
+    assert bool(np.asarray(res.committed).all())
+    assert bool(np.asarray(res.read_found).all())
+    np.testing.assert_array_equal(np.asarray(res.read_values),
+                                  np.asarray(value_for(klo[..., :Rd])))
+
+
+def test_txloop_never_commits_undelivered_reads(cfg, layout):
+    """Read-only transactions whose read-set lookup was DROPPED by capacity
+    back-pressure must abort (cause: overflow) and retry — never report
+    committed with a zeroed read of a key that exists."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 8
+    rng = np.random.RandomState(8)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    state = insert_keys(t, state, cfg, layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    rk = jnp.stack([klo, khi], -1)
+    wk = jnp.zeros((N, B, 0, 2), jnp.uint32)
+    wv = jnp.zeros((N, B, 0, sl.VALUE_WORDS), jnp.uint32)
+    # single shot at capacity=1: committed lanes must all have real reads
+    s1, _, single = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        capacity=1)
+    com = np.asarray(single.committed)
+    found = np.asarray(single.read_found)[..., 0]
+    assert not com.all(), "capacity=1 must drop some lookups"
+    assert found[com].all(), "a committed lane must have its read delivered"
+    assert np.asarray(single.aborted_overflow)[~com].all()
+    # the loop retries the dropped lanes until every read lands
+    s2, _, res = tx_loop(t, state, cfg, layout, read_keys=rk, write_keys=wk,
+                         write_values=wv, capacity=1, max_rounds=10)
+    assert bool(np.asarray(res.committed).all())
+    assert bool(np.asarray(res.read_found).all())
+
+
+# ---------------------------------------------------------------------------
+# Regression: dropped RPCs must not alias success (satellite 2)
+# ---------------------------------------------------------------------------
+def test_rpc_overflow_reports_dropped(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B, cap = 6, 2
+    rng = np.random.RandomState(6)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, B)), jnp.uint32)
+    dest = jnp.zeros((N, B), jnp.int32)          # everyone hammers node 0
+    h = ht.make_rpc_handler(cfg, layout)
+    recs = ht.make_record(R.OP_INSERT, klo, khi, value=value_for(klo))
+    state, rep, ovf, _ = R.rpc_call(t, state, dest, recs, h, capacity=cap)
+    ovf_np = np.asarray(ovf)
+    assert ovf_np.sum() == N * (B - cap)
+    # delivered lanes succeeded; dropped lanes say ST_DROPPED — never ST_OK,
+    # and never the handler's delivered-but-full ST_NO_SPACE
+    st_word = np.asarray(rep[..., 0])
+    np.testing.assert_array_equal(st_word[~ovf_np], R.ST_OK)
+    np.testing.assert_array_equal(st_word[ovf_np], R.ST_DROPPED)
+    # parked lanes are stamped the same way
+    state, rep2, _, _ = R.rpc_call(t, state, dest, recs, h, capacity=B,
+                                   enabled=jnp.zeros((N, B), bool))
+    np.testing.assert_array_equal(np.asarray(rep2[..., 0]), R.ST_DROPPED)
+
+
+# ---------------------------------------------------------------------------
+# Regression: cache-hit reads accept only the exact cached slot (satellite 3)
+# ---------------------------------------------------------------------------
+def test_lookup_end_cache_hit_exact_slot_only():
+    cfg2 = ht.HashTableConfig(n_nodes=1, n_buckets=4, bucket_width=2,
+                              n_overflow=8)
+    val = jnp.arange(sl.VALUE_WORDS, dtype=jnp.uint32)
+    hit_slot = sl.pack_slot(7, 9, 4, 0, sl.NULL_PTR, val)
+    other = sl.make_empty_slot()
+    # cached slot (window pos 0) stale/empty; the NEIGHBOUR slot — which
+    # belongs to a different bucket — happens to hold the key
+    buf = jnp.concatenate([other, hit_slot])[None]
+    klo, khi = jnp.uint32([7]), jnp.uint32([9])
+    ok_miss, _, idx_miss = ht.lookup_end(cfg2, buf, klo, khi)
+    assert bool(ok_miss[0]) and int(idx_miss[0]) == 1  # bucket read: fine
+    ok_hit, _, _ = ht.lookup_end(cfg2, buf, klo, khi,
+                                 cache_hit=jnp.asarray([True]))
+    assert not bool(ok_hit[0]), \
+        "cache-hit window must not match beyond the exact cached slot"
+    # the exact slot matching is still accepted on a hit
+    buf2 = jnp.concatenate([hit_slot, other])[None]
+    ok2, val2, idx2 = ht.lookup_end(cfg2, buf2, klo, khi,
+                                    cache_hit=jnp.asarray([True]))
+    assert bool(ok2[0]) and int(idx2[0]) == 0
+    np.testing.assert_array_equal(np.asarray(val2[0]), np.asarray(val))
+
+
+def test_hybrid_cached_lookup_pins_slot_idx():
+    """Cache-hit and cache-miss lookups must agree on slot_idx (and values),
+    including overflow-chained keys whose cached slot sits near the region
+    boundary with bucket_width > 1."""
+    cfg2 = ht.HashTableConfig(n_nodes=1, n_buckets=1, bucket_width=2,
+                              n_overflow=16, max_chain=18, cache_slots=256)
+    layout2 = ht.build_layout(cfg2)
+    t = SimTransport(1)
+    state = ht.init_cluster_state(cfg2)
+    B = 10   # one bucket of width 2 -> 8 keys live in the overflow chain
+    rng = np.random.RandomState(7)
+    klo = jnp.asarray(rng.randint(0, 2**31, (1, B)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (1, B)), jnp.uint32)
+    state = insert_keys(t, state, cfg2, layout2, klo, khi)
+
+    cache = jax.tree.map(lambda x: x[None].repeat(1, 0),
+                         ht.init_cache(cfg2))
+    # cold pass learns exact addresses (mostly via RPC fallback)
+    state, cache, f0, v0, _, _, sidx0, _, m0 = hy.hybrid_lookup(
+        t, state, klo, khi, cfg2, layout2, cache=cache)
+    assert bool(f0.all())
+    # warm pass: cache hits serve the exact slot one-sided
+    state, cache, f1, v1, _, _, sidx1, _, m1 = hy.hybrid_lookup(
+        t, state, klo, khi, cfg2, layout2, cache=cache)
+    assert bool(f1.all())
+    np.testing.assert_array_equal(np.asarray(sidx1), np.asarray(sidx0))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v0))
+    # cached (exact-slot) reads beat the cold pass's one-sided success rate
+    assert float(m1.onesided_success) > float(m0.onesided_success)
+    # and every slot index stays inside the slots region
+    assert int(np.asarray(sidx1).max()) < cfg2.n_slots
+    # uncached truth agrees
+    state, _, f2, v2, _, _, sidx2, *_ = hy.hybrid_lookup(
+        t, state, klo, khi, cfg2, layout2, cache=None)
+    np.testing.assert_array_equal(np.asarray(sidx2), np.asarray(sidx1))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v1))
