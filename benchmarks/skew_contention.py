@@ -68,10 +68,16 @@ def run_config(theta: float, max_rounds: int, *, lanes=LANES, seed=11):
     ab_ovf = int(jnp.sum(res.round_abort_overflow))
     msgs = float(res.metrics.wire.messages)
     ops = float(res.metrics.wire.ops)
+    # fused schedule: write-only tx -> lock round + commit round, ≤ 2
+    # exchanges per attempted protocol round (parked rounds cost none)
+    rounds_attempted = int((np.asarray(res.round_attempts) > 0).sum())
+    rt_round = float(res.round_trips) / max(rounds_attempted, 1)
+    assert rt_round <= 2.0, rt_round
     csv_line(f"skew/theta{theta}/r{max_rounds}", dt / n_tx * 1e6,
              f"commit_rate={committed / n_tx:.3f};retries={retries};"
              f"aborts_lock/val/ovf={ab_lock}/{ab_val}/{ab_ovf};"
-             f"coalesced_msgs={msgs:.0f};per_op_msgs={2 * ops:.0f}")
+             f"coalesced_msgs={msgs:.0f};per_op_msgs={2 * ops:.0f};"
+             f"rt_round={rt_round:.2f}")
     return committed
 
 

@@ -4,10 +4,13 @@
 #   regions    — contiguous arenas + flat/paged addressing (physical segments)
 #   transport  — RC-fabric analogue: dest-major exchange on sim or mesh
 #   onesided   — one-sided READ/WRITE (owner does address translation only)
+#   roundsched — multi-class fused round scheduler (doorbell batching: many
+#                traffic classes, ONE all-to-all each way)
 #   rpc        — write-based RPC: inbox + single completion mask + handlers
 #   hybrid     — one-two-sided operations (Algorithm 1)
-#   tx         — OCC transactions (execute/lock/validate/commit, Fig. 3)
+#   tx         — OCC transactions (execute/lock/validate/commit, Fig. 3) on a
+#                fused 3-4-round schedule (5-round per-phase reference kept)
 #   txloop     — bounded-retry transaction engine (re-enable masks + backoff)
 #   cost_model — the bytes/round-trip napkin math behind every hybrid choice
-from repro.core import (cost_model, hybrid, onesided, regions, rpc, slots,  # noqa: F401
-                        transport, tx, txloop)
+from repro.core import (cost_model, hybrid, onesided, regions, roundsched,  # noqa: F401
+                        rpc, slots, transport, tx, txloop)

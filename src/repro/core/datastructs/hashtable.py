@@ -215,13 +215,19 @@ def _write_slot(cfg, layout, arena, slot_idx, slot, enabled):
 def find(cfg: HashTableConfig, layout: rg.RegionTable, arena, key_lo, key_hi):
     """Bounded bucket + chain walk.  Returns a dict with:
     found, slot_idx, slot, tail_idx (last probed chain slot),
-    free_idx (first empty in-bucket slot), has_free.
+    free_idx / has_free (first empty slot anywhere on the probe path —
+    bucket slot OR linked chain slot, so deleted slots are reclaimed by
+    inserts instead of the bump allocator growing forever), and
+    free_next / free_ver (that slot's next_ptr and version, which a reuse
+    MUST preserve: the next_ptr may carry an overflow chain, and the version
+    must stay monotone so a re-inserted key cannot ABA past a validator).
     """
     _, bucket = home_of(cfg, key_lo, key_hi)
     first = (bucket * jnp.uint32(cfg.bucket_width)).astype(jnp.uint32)
 
     def body(step, st):
-        (cur, found, fidx, fslot, tail, free_idx, has_free, alive) = st
+        (cur, found, fidx, fslot, tail, free_idx, free_next, free_ver,
+         has_free, alive) = st
         slot = _read_slot(cfg, layout, arena, cur)
         is_match = sl.slot_key_lo(slot) == key_lo
         is_match &= sl.slot_key_hi(slot) == key_hi
@@ -229,26 +235,32 @@ def find(cfg: HashTableConfig, layout: rg.RegionTable, arena, key_lo, key_hi):
         new_found = found | (is_match & alive)
         fidx = jnp.where(is_match & alive & ~found, cur, fidx)
         fslot = jnp.where(is_match & alive & ~found, slot, fslot)
-        in_bucket = step < cfg.bucket_width
-        has_free_new = has_free | (is_empty & in_bucket & alive)
-        free_idx = jnp.where(is_empty & in_bucket & alive & ~has_free, cur, free_idx)
+        take_free = is_empty & alive & ~has_free
+        free_idx = jnp.where(take_free, cur, free_idx)
+        free_next = jnp.where(take_free, sl.slot_next(slot), free_next)
+        free_ver = jnp.where(take_free, sl.slot_version(slot), free_ver)
+        has_free_new = has_free | (is_empty & alive)
         tail = jnp.where(alive, cur, tail)
         nxt = jnp.where(step < cfg.bucket_width - 1, cur + 1, sl.slot_next(slot))
         alive_next = alive & (nxt != sl.NULL_PTR)
         return (jnp.where(alive_next, nxt, cur), new_found, fidx, fslot,
-                tail, free_idx, has_free_new, alive_next)
+                tail, free_idx, free_next, free_ver, has_free_new, alive_next)
 
     init = (first, jnp.asarray(False), jnp.uint32(0), jnp.zeros((sl.SLOT_WORDS,), jnp.uint32),
-            first, jnp.uint32(0), jnp.asarray(False), jnp.asarray(True))
-    cur, found, fidx, fslot, tail, free_idx, has_free, _ = lax.fori_loop(
-        0, cfg.max_probe, body, init)
+            first, jnp.uint32(0), sl.NULL_PTR, jnp.uint32(0),
+            jnp.asarray(False), jnp.asarray(True))
+    (cur, found, fidx, fslot, tail, free_idx, free_next, free_ver, has_free,
+     _) = lax.fori_loop(0, cfg.max_probe, body, init)
     return dict(found=found, slot_idx=fidx, slot=fslot, tail_idx=tail,
-                free_idx=free_idx, has_free=has_free)
+                free_idx=free_idx, free_next=free_next, free_ver=free_ver,
+                has_free=has_free)
 
 
 def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
     """The serial (mutating-capable) rpc_handler.  Record layout:
-    [op, key_lo, key_hi, aux, value...]; reply [status, aux, value...]."""
+    [op, key_lo, key_hi, aux, value...]; reply [status, aux, value...].
+    COMMIT_UNLOCK/ABORT_UNLOCK records repurpose the key_lo word to carry the
+    caller's lock tag (the slot is addressed directly by aux = slot idx)."""
     alloc_off = layout["alloc"].base
     ovf_base = cfg.n_bucket_slots
 
@@ -290,11 +302,20 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         upd_ok = f["found"] & ~locked_other
         new_ver = sl.slot_version(slot) + 2
         upd_slot = sl.pack_slot(key_lo, key_hi, new_ver, 0, sl.slot_next(slot), val)
-        # fresh insert: in-bucket free slot, else overflow alloc + link
+        # fresh insert: reuse the first empty slot on the probe path (bucket
+        # OR chain — deleted slots are reclaimed), else overflow alloc + link.
+        # A reused slot keeps its next_ptr (it may carry the overflow chain a
+        # delete left behind — writing NULL_PTR would sever the chain and
+        # orphan every key hanging off it) and its version (the delete
+        # already bumped it; resetting to 0 would let a deleted-then-
+        # re-inserted key ABA past a concurrent validator).
         can_ovf = alloc < jnp.uint32(cfg.n_overflow)
-        ins_idx = jnp.where(f["has_free"], f["free_idx"], ovf_base + alloc)
-        ins_possible = f["has_free"] | can_ovf
-        ins_slot = sl.pack_slot(key_lo, key_hi, 0, 0, sl.NULL_PTR, val)
+        reuse = f["has_free"]
+        ins_idx = jnp.where(reuse, f["free_idx"], ovf_base + alloc)
+        ins_possible = reuse | can_ovf
+        ins_next = jnp.where(reuse, f["free_next"], sl.NULL_PTR)
+        ins_ver = jnp.where(reuse, f["free_ver"], jnp.uint32(0))
+        ins_slot = sl.pack_slot(key_lo, key_hi, ins_ver, 0, ins_next, val)
 
         ins_found = is_ins & f["found"]
         ins_fresh = is_ins & ~f["found"]
@@ -334,8 +355,11 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         lock_free = sl.slot_lock(slot) == 0
         lock_ok = f["found"] & lock_free
         lk_slot = slot.at[sl.LOCK].set(tag)
-        # lock-insert for new keys: a locked, odd-version placeholder
-        ph_slot = sl.pack_slot(key_lo, key_hi, 1, tag, sl.NULL_PTR,
+        # lock-insert for new keys: a locked, odd-version placeholder.  Like
+        # ins_slot it preserves a reused slot's next_ptr and builds its odd
+        # version on top of the slot's current (even) one.
+        ph_slot = sl.pack_slot(key_lo, key_hi, ins_ver + jnp.uint32(1), tag,
+                               ins_next,
                                jnp.zeros((sl.VALUE_WORDS,), jnp.uint32))
         lock_ins = is_lock & ~f["found"] & ins_possible
         status = jnp.where(is_lock, jnp.where(
@@ -355,11 +379,17 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         out_val = jnp.where(is_lock & lock_ok, sl.slot_value(slot), out_val)
 
         # ---- COMMIT_UNLOCK / ABORT_UNLOCK (direct slot addressing) ---------
+        # record layout here: [op, lock_tag, key_hi, slot_idx, value...] —
+        # the key_lo word carries the caller's lock tag instead of a key (the
+        # slot is addressed directly via aux, so no key walk is needed).
         is_commit = op == R.OP_COMMIT_UNLOCK
         is_abort = op == R.OP_ABORT_UNLOCK
         tgt = aux  # slot idx from the LOCK reply
+        unlock_tag = key_lo
         tslot = _read_slot(cfg, layout, arena, tgt)
-        own = sl.slot_lock(tslot) != 0  # trust protocol: tag check relaxed to nonzero
+        # ownership requires the EXACT tag that acquired the lock: a retried
+        # or misrouted unlock must never release another lane's lock
+        own = (sl.slot_lock(tslot) != 0) & (sl.slot_lock(tslot) == unlock_tag)
         cm_ver = (sl.slot_version(tslot) | jnp.uint32(1)) + jnp.uint32(1)  # -> even, bumped
         cm_slot = sl.pack_slot(sl.slot_key_lo(tslot), sl.slot_key_hi(tslot),
                                cm_ver, 0, sl.slot_next(tslot), val)

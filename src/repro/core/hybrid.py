@@ -44,23 +44,19 @@ class HybridMetrics:
         return HybridMetrics(z, z, z, WireStats.zero())
 
 
-def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
-                  layout, *, cache=None, use_onesided: bool = True,
-                  rpc_serial: bool = False, capacity: Optional[int] = None,
-                  enabled=None):
-    """Batched one-two-sided lookup.
+def onesided_probe(t: Transport, state, key_lo, key_hi,
+                   cfg: ht.HashTableConfig, layout, *, cache=None,
+                   use_onesided: bool = True, capacity: Optional[int] = None,
+                   enabled=None):
+    """Phase 1 of Algorithm 1: lookup_start + one-sided read + lookup_end.
 
-    key_lo/key_hi: (N_local, B) uint32.
-    enabled: optional (N_local, B) bool — disabled lanes issue nothing (no
-    one-sided read, no RPC, no wire bytes) and report found=False.
-    Returns (state, cache, found (N,B), value (N,B,V), version (N,B) uint32,
-             owner (N,B) int32, slot_idx (N,B) uint32, overflow (N,B) bool,
-             HybridMetrics).  `overflow` marks lanes whose lookup was DROPPED
-    by send-queue back-pressure (the RPC fallback overflowed) — for those,
-    found=False means "not delivered", NOT "key absent"; transactional
-    callers must abort-and-retry them rather than treat the read as a miss.
-    """
-    B = key_lo.shape[-1]
+    Returns a dict with the per-lane probe outcome: node, cache `hit`,
+    one-sided `success` (validated hit), value/version/slot_idx of the hit,
+    `need_rpc` (enabled lanes the one-sided read did not satisfy), `enabled`,
+    and the read round's WireStats.  The RPC fallback for the `need_rpc`
+    lanes can then ride any later exchange round (hybrid_lookup issues it
+    immediately; tx's fused protocol piggybacks it on the LOCK round) and be
+    folded in with merge_rpc_fallback."""
     if enabled is None:
         enabled = jnp.ones(key_lo.shape, bool)
     if cache is not None and cfg.cache_slots > 0:
@@ -100,31 +96,77 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
         s_read = WireStats.zero()
         need_rpc = enabled
 
+    return dict(node=node, hit=hit, success=success, value=value,
+                version=version, slot_idx=slot_idx, need_rpc=need_rpc,
+                enabled=enabled, wire=s_read)
+
+
+def merge_rpc_fallback(probe, replies, rpc_ovf):
+    """Fold the RPC-fallback replies for `probe["need_rpc"]` lanes into the
+    one-sided probe outcome (phase 5 of Algorithm 1).
+
+    Returns dict(found, value, version, slot_idx, rpc_ok, overflow) where
+    `overflow` marks lanes whose final-resort RPC was DROPPED by send-queue
+    back-pressure — for those, found=False means "not delivered", NOT "key
+    absent"."""
+    need = probe["need_rpc"]
+    rpc_ok = need & (replies[..., 0] == R.ST_OK) & ~rpc_ovf
+    value = jnp.where(rpc_ok[..., None], replies[..., 3:], probe["value"])
+    version = jnp.where(rpc_ok, replies[..., 2], probe["version"])
+    slot_idx = jnp.where(rpc_ok, replies[..., 1], probe["slot_idx"])
+    return dict(found=probe["success"] | rpc_ok, value=value, version=version,
+                slot_idx=slot_idx, rpc_ok=rpc_ok, overflow=need & rpc_ovf)
+
+
+def update_lookup_cache(cfg: ht.HashTableConfig, cache, key_lo, key_hi, node,
+                        slot_idx, found):
+    """lookup_end's caching duty: remember exact addresses for future
+    one-sided reads (no-op when caching is off)."""
+    if cache is None or cfg.cache_slots == 0:
+        return cache
+    return jax.vmap(
+        lambda c, kl, kh, nd, si, v: ht.cache_update(cfg, c, kl, kh, nd, si, v)
+    )(cache, key_lo, key_hi, node, slot_idx, found)
+
+
+def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
+                  layout, *, cache=None, use_onesided: bool = True,
+                  rpc_serial: bool = False, capacity: Optional[int] = None,
+                  enabled=None):
+    """Batched one-two-sided lookup.
+
+    key_lo/key_hi: (N_local, B) uint32.
+    enabled: optional (N_local, B) bool — disabled lanes issue nothing (no
+    one-sided read, no RPC, no wire bytes) and report found=False.
+    Returns (state, cache, found (N,B), value (N,B,V), version (N,B) uint32,
+             owner (N,B) int32, slot_idx (N,B) uint32, overflow (N,B) bool,
+             HybridMetrics).  `overflow` marks lanes whose lookup was DROPPED
+    by send-queue back-pressure (the RPC fallback overflowed) — for those,
+    found=False means "not delivered", NOT "key absent"; transactional
+    callers must abort-and-retry them rather than treat the read as a miss.
+    """
+    probe = onesided_probe(t, state, key_lo, key_hi, cfg, layout, cache=cache,
+                           use_onesided=use_onesided, capacity=capacity,
+                           enabled=enabled)
+
     # ---- phase 2: write-based RPC for the failed lanes --------------------
     recs = ht.make_record(R.OP_LOOKUP, key_lo, key_hi)
     handler = (ht.make_rpc_handler(cfg, layout) if rpc_serial
                else ht.make_lookup_handler_vector(cfg, layout))
     state, replies, ovf2, s_rpc = R.rpc_call(
-        t, state, node, recs, handler, capacity=capacity, enabled=need_rpc)
-    rpc_ok = need_rpc & (replies[..., 0] == R.ST_OK) & ~ovf2
-    value = jnp.where(rpc_ok[..., None], replies[..., 3:], value)
-    version = jnp.where(rpc_ok, replies[..., 2], version)
-    slot_idx = jnp.where(rpc_ok, replies[..., 1], slot_idx)
-    found = success | rpc_ok
-    # a lane is undelivered (not a genuine miss) iff its final-resort RPC
-    # was dropped by capacity back-pressure
-    overflow = need_rpc & ovf2
+        t, state, probe["node"], recs, handler, capacity=capacity,
+        enabled=probe["need_rpc"])
+    mg = merge_rpc_fallback(probe, replies, ovf2)
 
     # ---- lookup_end caching duty ------------------------------------------
-    if cache is not None and cfg.cache_slots > 0:
-        cache = jax.vmap(
-            lambda c, kl, kh, nd, si, v: ht.cache_update(cfg, c, kl, kh, nd, si, v)
-        )(cache, key_lo, key_hi, node, slot_idx, found)
+    cache = update_lookup_cache(cfg, cache, key_lo, key_hi, probe["node"],
+                                mg["slot_idx"], mg["found"])
 
     metrics = HybridMetrics(
-        onesided_success=jnp.sum(success.astype(jnp.float32)),
-        rpc_fallback=jnp.sum(need_rpc.astype(jnp.float32)),
-        total=jnp.sum(enabled.astype(jnp.float32)),
-        wire=s_read + s_rpc,
+        onesided_success=jnp.sum(probe["success"].astype(jnp.float32)),
+        rpc_fallback=jnp.sum(probe["need_rpc"].astype(jnp.float32)),
+        total=jnp.sum(probe["enabled"].astype(jnp.float32)),
+        wire=probe["wire"] + s_rpc,
     )
-    return state, cache, found, value, version, node, slot_idx, overflow, metrics
+    return (state, cache, mg["found"], mg["value"], mg["version"],
+            probe["node"], mg["slot_idx"], mg["overflow"], metrics)

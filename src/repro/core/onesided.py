@@ -19,8 +19,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import regions as rg
-from repro.core.transport import (Transport, WireStats, pick_replies,
-                                  route_by_dest, wire_for)
+from repro.core import roundsched as rs
+from repro.core.transport import (Transport, WireStats, route_by_dest,
+                                  wire_for)
 
 
 @partial(jax.named_call, name="storm_remote_read")
@@ -28,7 +29,8 @@ def remote_read(t: Transport, arenas, dest, offsets, *, length: int,
                 capacity: Optional[int] = None,
                 mode: rg.AddressMode | None = None, page_tables=None,
                 enabled=None):
-    """Batched one-sided READ.
+    """Batched one-sided READ — a single-class fused round (see
+    roundsched.fused_round; the owner side is translation + gather ONLY).
 
     arenas:  (N_local, arena_words) uint32 — this shard's node states
     dest:    (N_local, B) int32  — target node of each lane
@@ -36,29 +38,15 @@ def remote_read(t: Transport, arenas, dest, offsets, *, length: int,
     length:  static words per read (e.g. a 128B slot = 32 words)
     enabled: optional (N_local, B) bool — disabled lanes issue nothing and
              read back zeros (no capacity, no wire bytes).
+    capacity: per-destination budget; ``None`` means B, 0 back-pressures
+             every lane, negative values are rejected.
 
     Returns (data (N_local, B, length), overflow (N_local, B) bool, WireStats).
     """
-    B = dest.shape[-1]
-    cap = capacity or B
-    if enabled is not None:
-        buf, mask, pos, ovf = jax.vmap(
-            lambda d, p, e: route_by_dest(d, p, t.n_nodes, cap, e)
-        )(dest, offsets[..., None], enabled)
-    else:
-        buf, mask, pos, ovf = jax.vmap(
-            lambda d, p: route_by_dest(d, p, t.n_nodes, cap))(dest, offsets[..., None])
-    inbox = t.exchange(buf)          # (N_local, N_src, C, 1)
-    # Owner side: translation + gather ONLY.
-    if mode is not None and mode.kind == "paged":
-        gather = jax.vmap(lambda a, pt, off: rg.arena_read(a, off, length, mode, pt))
-        data = gather(arenas, page_tables, inbox[..., 0])
-    else:
-        gather = jax.vmap(lambda a, off: rg.arena_read(a, off, length))
-        data = gather(arenas, inbox[..., 0])
-    back = t.exchange(data)          # (N_local, N_dst, C, length) dest-major
-    out = jax.vmap(pick_replies)(back, dest, pos, ovf)
-    stats = wire_for(mask, req_words=1, reply_words=length)
+    _, ((out, ovf),), stats = rs.fused_round(
+        t, {"arena": arenas},
+        [rs.read_class(dest, offsets, length=length, enabled=enabled,
+                       capacity=capacity, mode=mode, page_tables=page_tables)])
     return out, ovf, stats
 
 
@@ -74,7 +62,10 @@ def remote_write(t: Transport, arenas, dest, offsets, values, *,
     """
     B = dest.shape[-1]
     L = values.shape[-1]
-    cap = capacity or B
+    # capacity=0 must mean "deliver nothing", never silently "unbounded"
+    cap = B if capacity is None else int(capacity)
+    if cap < 0:
+        raise ValueError(f"per-destination capacity must be >= 0, got {cap}")
     if enabled is None:
         enabled = jnp.ones(dest.shape, bool)
     payload = jnp.concatenate(

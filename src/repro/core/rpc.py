@@ -27,10 +27,10 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core.transport import (Transport, WireStats, pick_replies,
-                                  route_by_dest, wire_for)
+from repro.core import roundsched as rs
+from repro.core.roundsched import serial_apply, vector_apply  # noqa: F401  (re-export)
+from repro.core.transport import Transport, WireStats  # noqa: F401  (re-export)
 
 # Well-known opcodes (data structures may extend >= 16)
 OP_NOP = 0
@@ -49,48 +49,24 @@ ST_NOT_FOUND = 1
 ST_LOCK_FAIL = 2
 ST_NO_SPACE = 3   # handler-returned: storage full (request WAS delivered)
 ST_BAD_OP = 4
-ST_DROPPED = 5    # transport-level: request never delivered (send-queue
-                  # overflow or parked lane) — retryable back-pressure,
-                  # distinct from the permanent ST_NO_SPACE
+ST_DROPPED = rs.ST_DROPPED  # transport-level: request never delivered
+                  # (send-queue overflow or parked lane) — retryable
+                  # back-pressure, distinct from the permanent ST_NO_SPACE
 
 
 @dataclasses.dataclass(frozen=True)
 class Handler:
     """A registered rpc_handler (Storm Table 3)."""
-    fn: Callable            # see serial/vector signatures below
+    fn: Callable            # see roundsched serial/vector signatures
     reply_words: int
     serial: bool = True
-
-
-def serial_apply(handler_fn, state, records, mask, reply_words: int):
-    """Fold records through node state in a fixed serialization order.
-
-    handler_fn(state, record (W,), valid) -> (state, reply (reply_words,))
-    records: (S, C, W); mask: (S, C) -> replies (S, C, reply_words)
-    """
-    S, C, W = records.shape
-    flat_r = records.reshape(S * C, W)
-    flat_m = mask.reshape(S * C)
-
-    def step(st, rm):
-        rec, valid = rm
-        st, rep = handler_fn(st, rec, valid)
-        return st, rep
-
-    state, flat_rep = lax.scan(step, state, (flat_r, flat_m))
-    return state, flat_rep.reshape(S, C, reply_words)
-
-
-def vector_apply(handler_fn, state, records, mask, reply_words: int):
-    """handler_fn(state, records (S,C,W), mask) -> replies (S,C,reply_words).
-    State is read-only on this path."""
-    return state, handler_fn(state, records, mask)
 
 
 @partial(jax.named_call, name="storm_rpc")
 def rpc_call(t: Transport, state, dest, records, handler: Handler, *,
              capacity: Optional[int] = None, enabled=None):
-    """Batched write-based RPC round (one round trip for B lanes/node).
+    """Batched write-based RPC round (one round trip for B lanes/node) — a
+    single-class fused round (see roundsched.fused_round).
 
     state:   pytree with leading node axis (N_local, ...)
     dest:    (N_local, B) int32
@@ -98,6 +74,9 @@ def rpc_call(t: Transport, state, dest, records, handler: Handler, *,
     enabled: optional (N_local, B) bool — lanes that actually issue the RPC.
              Disabled lanes are parked by route_by_dest (no send-queue cell,
              no capacity consumed, no wire bytes).
+    capacity: per-destination send-queue budget.  ``None`` means B (a full
+             batch always fits); 0 is honoured as "deliver nothing" (every
+             enabled lane back-pressured), negative values are rejected.
 
     Returns (state, replies (N_local, B, R), overflow (N_local, B), WireStats).
     Overflowed and parked lanes carry ST_DROPPED in reply word 0 so a lane
@@ -105,32 +84,8 @@ def rpc_call(t: Transport, state, dest, records, handler: Handler, *,
     handler-returned ST_NO_SPACE, which means the request WAS delivered but
     storage is full (not retryable).
     """
-    B = dest.shape[-1]
-    cap = capacity or B
-    if enabled is not None:
-        buf, mask, pos, ovf = jax.vmap(
-            lambda d, p, e: route_by_dest(d, p, t.n_nodes, cap, e)
-        )(dest, records, enabled)
-    else:
-        buf, mask, pos, ovf = jax.vmap(
-            lambda d, p: route_by_dest(d, p, t.n_nodes, cap))(dest, records)
-    inbox = t.exchange(buf)
-    inbox_mask = t.exchange(mask)
-
-    apply_fn = serial_apply if handler.serial else vector_apply
-
-    def per_node(st, recs, msk):
-        return apply_fn(handler.fn, st, recs, msk, handler.reply_words)
-
-    state, replies = jax.vmap(per_node)(state, inbox, inbox_mask)
-    back = t.exchange(replies)
-    out = jax.vmap(pick_replies)(back, dest, pos, ovf)
-    # Lanes that issued no request must not alias ST_OK: a zeroed reply's
-    # word 0 reads as success, so stamp the status word with ST_DROPPED for
-    # overflowed AND parked (disabled) lanes.
-    no_reply = ovf if enabled is None else (ovf | ~enabled)
-    out = out.at[..., 0].set(
-        jnp.where(no_reply, jnp.uint32(ST_DROPPED), out[..., 0]))
-    stats = wire_for(mask, req_words=records.shape[-1],
-                     reply_words=handler.reply_words)
+    state, ((out, ovf),), stats = rs.fused_round(
+        t, state,
+        [rs.rpc_class(dest, records, handler, enabled=enabled,
+                      capacity=capacity)])
     return state, out, ovf, stats

@@ -144,6 +144,10 @@ def pick_replies(replies, dest, pos, overflow):
     parked at pos >= C) read back zeros — callers are responsible for not
     treating those as real replies (rpc.rpc_call stamps ST_DROPPED)."""
     C = replies.shape[1]
+    if C == 0:
+        # zero-capacity round: no cell was ever live, every lane reads zeros
+        # (a capacity=0 configuration back-pressures everything, not nothing)
+        return jnp.zeros(dest.shape + (replies.shape[-1],), replies.dtype)
     invalid = overflow | (pos >= C)
     out = replies[dest, jnp.where(invalid, 0, pos)]
     return jnp.where(invalid[:, None], jnp.zeros_like(out), out)
@@ -193,9 +197,47 @@ def wire_for(mask, req_words: int, reply_words: int, header_words: int = 1):
     pairs = jnp.sum(jnp.any(mask, axis=-1).astype(jnp.float32))
     reply_pairs = pairs if reply_words > 0 else jnp.zeros((), jnp.float32)
     return WireStats(
-        round_trips=jnp.asarray(1.0, jnp.float32),
+        # a round with no live (src, dst) pair puts nothing on the wire and
+        # therefore costs no round trip (e.g. a fully-parked retry round)
+        round_trips=(pairs > 0).astype(jnp.float32),
         messages=pairs + reply_pairs,
         ops=live,
         req_bytes=live * 4.0 * req_words + pairs * 4.0 * header_words,
         reply_bytes=live * 4.0 * reply_words + reply_pairs * 4.0 * header_words,
+    )
+
+
+def wire_for_classes(masks, req_words, reply_words, header_words: int = 1):
+    """Coalesced stats for ONE fused exchange round carrying several traffic
+    classes (roundsched.fused_round).
+
+    masks: list of live-cell masks, each (..., n_dst, C_k); req_words /
+    reply_words: per-class word counts.  All classes headed for one
+    destination ride the SAME coalesced wire message — a (src, dst) pair is
+    counted ONCE no matter how many classes it carries (the true
+    doorbell-batching accounting), while `ops` still counts every delivered
+    application-level request.
+    """
+    f32 = jnp.float32
+    zero = jnp.zeros((), f32)
+    live = [jnp.sum(m.astype(f32)) for m in masks]
+    ops = sum(live, zero)
+    pair_live = None
+    reply_pair_live = None
+    for m, rw in zip(masks, reply_words):
+        a = jnp.any(m, axis=-1)
+        pair_live = a if pair_live is None else (pair_live | a)
+        if rw > 0:
+            reply_pair_live = a if reply_pair_live is None else (reply_pair_live | a)
+    pairs = zero if pair_live is None else jnp.sum(pair_live.astype(f32))
+    reply_pairs = (zero if reply_pair_live is None
+                   else jnp.sum(reply_pair_live.astype(f32)))
+    req_bytes = sum((l * 4.0 * w for l, w in zip(live, req_words)), zero)
+    reply_bytes = sum((l * 4.0 * w for l, w in zip(live, reply_words)), zero)
+    return WireStats(
+        round_trips=(pairs > 0).astype(f32),
+        messages=pairs + reply_pairs,
+        ops=ops,
+        req_bytes=req_bytes + pairs * 4.0 * header_words,
+        reply_bytes=reply_bytes + reply_pairs * 4.0 * header_words,
     )

@@ -12,16 +12,33 @@ Per transaction lane:
             failed or whose validation detected a concurrent writer.
 
 Shapes are static: each lane has exactly R read keys and W write keys; lanes
-are batched B per node ("coroutines"), so a full transaction costs the same
-FIVE pipeline rounds the paper's Figure 3 shows, independent of B:
-    read (1-2 RTs: read + masked RPC) + lock (1) + validate (1) + commit (1).
+are batched B per node ("coroutines").
 
-The protocol is factored into per-phase functions (execute_read_set /
-lock_write_set / validate_read_set / commit_or_abort) so that
-``run_transactions`` (single shot) and ``txloop.tx_loop`` (bounded-retry
-engine) share one implementation of every phase.  Aborts are classified by
-cause — lock conflict, validation conflict, or overflow/back-pressure — which
-is what the retry loop and the contention benchmarks report.
+Two schedules share every phase's records, handlers and decision logic:
+
+  * ``run_transactions(fused=False)`` — the per-phase reference: FIVE
+    exchange rounds (one-sided read, RPC fallback, lock, validate, commit),
+    one phase per all-to-all, exactly Figure 3 drawn naively.
+  * ``run_transactions(fused=True)`` (default) — the fused schedule built on
+    roundsched.fused_round.  The read-set RPC fallback is independent of
+    LOCK, and the validate re-read of every lane whose slot address the
+    one-sided read already learned only needs to observe the post-lock
+    state — so both ride the lock round:
+
+        round 1  one-sided read of the read set
+        round 2  fallback lookups ∥ LOCK ∥ validate(one-sided hits)
+        round 3  validate(addresses learned via RPC)      [empty on the
+                 one-sided fast path — costs no round trip]
+        round 4  commit / abort
+
+    i.e. **4 exchange rounds in the general case, 3 when every read-set
+    lookup is satisfied one-sided** — versus 5 for the reference, with
+    bit-identical committed state, abort causes and delivered-request counts
+    (see tests/test_tx_fused_equivalence.py).
+
+Aborts are classified by cause — lock conflict, validation conflict, or
+overflow/back-pressure — which is what the retry loop (txloop.tx_loop) and
+the contention benchmarks report.
 """
 from __future__ import annotations
 
@@ -33,10 +50,11 @@ import jax.numpy as jnp
 
 from repro.core import hybrid as hy
 from repro.core import onesided as osd
+from repro.core import roundsched as rs
 from repro.core import rpc as R
 from repro.core import slots as sl
 from repro.core.datastructs import hashtable as ht
-from repro.core.transport import Transport, WireStats
+from repro.core.transport import Transport
 
 
 @jax.tree_util.register_dataclass
@@ -54,8 +72,61 @@ class TxResult:
 
 
 # ---------------------------------------------------------------------------
-# Phase functions.  Each takes/returns cluster state plus a plain dict of
-# per-item arrays; lane axes are flattened to (N, B*K) like the wire sees them.
+# Shared request construction / reply parsing.  Both schedules build records
+# and decode replies through these helpers, so they are equivalent by
+# construction at the record level.
+# ---------------------------------------------------------------------------
+def _lock_requests(t: Transport, cfg: ht.HashTableConfig, layout, *,
+                   write_keys, write_enabled):
+    """Flatten the write set and build the OP_LOCK records (+ unique tags)."""
+    N, B, Wr = write_keys.shape[:3]
+    wk_lo = write_keys[..., 0].reshape(N, B * Wr)
+    wk_hi = write_keys[..., 1].reshape(N, B * Wr)
+    en = write_enabled.reshape(N, B * Wr)
+    wnode, _, _ = ht.lookup_start(cfg, layout, wk_lo, wk_hi, None)
+    # unique nonzero lock tag per (node, lane)
+    lane = jnp.arange(B * Wr, dtype=jnp.uint32) // jnp.uint32(max(Wr, 1))
+    tag = (t.node_ids().astype(jnp.uint32)[:, None] * jnp.uint32(B)
+           + lane[None, :] + jnp.uint32(1))
+    recs = ht.make_record(R.OP_LOCK, wk_lo, wk_hi, aux=tag)
+    return dict(key_lo=wk_lo, key_hi=wk_hi, enabled=en, node=wnode, tag=tag), recs
+
+
+def _parse_lock_replies(lk, lrep, lovf, N, B, Wr):
+    """Decode the LOCK round's replies into the lock context dict."""
+    status = lrep[..., 0]
+    en = lk["enabled"]
+    lock_ok = (status == R.ST_OK) & ~lovf & en
+    return dict(
+        lk,
+        lock_ok=lock_ok, lock_slot=lrep[..., 1],
+        locked_values=lrep[..., 3:].reshape(N, B, Wr, sl.VALUE_WORDS),
+        lock_fail=(status == R.ST_LOCK_FAIL) & en,
+        # overflow-class outcomes: dropped by back-pressure (retryable) or
+        # table full (ST_NO_SPACE, delivered) — both abort with cause overflow
+        no_space=((status == R.ST_NO_SPACE) | (status == R.ST_DROPPED)
+                  | lovf) & en,
+        overflow=lovf & en)
+
+
+def _validate_from_bytes(read_ctx, vbuf, vovf):
+    """Shared VALIDATE decision: compare re-read slot bytes against the
+    execute-phase observation.  Absent reads validate trivially
+    (repeatable-read of a miss is NOT guaranteed — documented limitation,
+    same as the paper's protocol sketch)."""
+    cur_ver = vbuf[..., sl.VERSION]
+    cur_klo = vbuf[..., sl.KEY_LO]
+    cur_lock = vbuf[..., sl.LOCK]
+    unchanged = ((cur_ver == read_ctx["versions"])
+                 & (cur_klo == read_ctx["key_lo"]) & (cur_lock == 0) & ~vovf)
+    issued = read_ctx["enabled"] & read_ctx["found"]
+    return dict(valid=unchanged | ~read_ctx["found"], overflow=vovf & issued)
+
+
+# ---------------------------------------------------------------------------
+# Phase functions (the per-phase reference schedule).  Each takes/returns
+# cluster state plus a plain dict of per-item arrays; lane axes are flattened
+# to (N, B*K) like the wire sees them.
 # ---------------------------------------------------------------------------
 def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                      read_keys, read_enabled, cache=None,
@@ -87,29 +158,14 @@ def lock_write_set(t: Transport, state, cfg: ht.HashTableConfig, layout,
     write_keys: (N, B, Wr, 2); write_enabled: (N, B, Wr) bool.
     """
     N, B, Wr = write_keys.shape[:3]
-    wk_lo = write_keys[..., 0].reshape(N, B * Wr)
-    wk_hi = write_keys[..., 1].reshape(N, B * Wr)
-    en = write_enabled.reshape(N, B * Wr)
-    wnode, _, _ = ht.lookup_start(cfg, layout, wk_lo, wk_hi, None)
-    # unique nonzero lock tag per (node, lane)
-    lane = jnp.arange(B * Wr, dtype=jnp.uint32) // jnp.uint32(max(Wr, 1))
-    tag = (t.node_ids().astype(jnp.uint32)[:, None] * jnp.uint32(B)
-           + lane[None, :] + jnp.uint32(1))
-    lock_recs = ht.make_record(R.OP_LOCK, wk_lo, wk_hi, aux=tag)
+    lk, lock_recs = _lock_requests(t, cfg, layout, write_keys=write_keys,
+                                   write_enabled=write_enabled)
     state, lrep, lovf, s_lock = R.rpc_call(
-        t, state, wnode, lock_recs, serial_h, capacity=capacity, enabled=en)
-    status = lrep[..., 0]
-    lock_ok = (status == R.ST_OK) & ~lovf & en
-    return state, dict(
-        key_lo=wk_lo, key_hi=wk_hi, enabled=en, node=wnode,
-        lock_ok=lock_ok, lock_slot=lrep[..., 1],
-        locked_values=lrep[..., 3:].reshape(N, B, Wr, sl.VALUE_WORDS),
-        lock_fail=(status == R.ST_LOCK_FAIL) & en,
-        # overflow-class outcomes: dropped by back-pressure (retryable) or
-        # table full (ST_NO_SPACE, delivered) — both abort with cause overflow
-        no_space=((status == R.ST_NO_SPACE) | (status == R.ST_DROPPED)
-                  | lovf) & en,
-        overflow=lovf & en, wire=s_lock)
+        t, state, lk["node"], lock_recs, serial_h, capacity=capacity,
+        enabled=lk["enabled"])
+    lctx = _parse_lock_replies(lk, lrep, lovf, N, B, Wr)
+    lctx["wire"] = s_lock
+    return state, lctx
 
 
 def validate_read_set(t: Transport, state, layout, read_ctx, *,
@@ -117,9 +173,7 @@ def validate_read_set(t: Transport, state, layout, read_ctx, *,
     """VALIDATE phase: one-sided re-read of every read-set slot version.
 
     Returns a dict with per-item `valid` plus the overflow mask and wire
-    stats.  Absent reads validate trivially (repeatable-read of a miss is NOT
-    guaranteed — documented limitation, same as the paper's protocol sketch).
-    """
+    stats."""
     # absent reads validate trivially, so only found reads are re-read — dead
     # validation reads would waste per-destination send-queue capacity and
     # could overflow a found lane's re-read for nothing
@@ -128,13 +182,9 @@ def validate_read_set(t: Transport, state, layout, read_ctx, *,
     vbuf, vovf, s_val = osd.remote_read(
         t, state["arena"], read_ctx["node"], voff, length=sl.SLOT_WORDS,
         capacity=capacity, enabled=issued)
-    cur_ver = vbuf[..., sl.VERSION]
-    cur_klo = vbuf[..., sl.KEY_LO]
-    cur_lock = vbuf[..., sl.LOCK]
-    unchanged = ((cur_ver == read_ctx["versions"])
-                 & (cur_klo == read_ctx["key_lo"]) & (cur_lock == 0) & ~vovf)
-    valid = unchanged | ~read_ctx["found"]
-    return dict(valid=valid, overflow=vovf & issued, wire=s_val)
+    vctx = _validate_from_bytes(read_ctx, vbuf, vovf)
+    vctx["wire"] = s_val
+    return vctx
 
 
 def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
@@ -154,8 +204,10 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
     commit_item = jnp.repeat(commit_lane, Wr, axis=-1)  # (N, B*Wr)
     op = jnp.where(commit_item, jnp.uint32(R.OP_COMMIT_UNLOCK),
                    jnp.uint32(R.OP_ABORT_UNLOCK))
+    # the key_lo word carries the lock tag: the owner releases a lock only
+    # for the exact tag that acquired it (hashtable's unlock ownership check)
     cm_recs = ht.make_record(
-        op, lock_ctx["key_lo"], lock_ctx["key_hi"], aux=lock_ctx["lock_slot"],
+        op, lock_ctx["tag"], lock_ctx["key_hi"], aux=lock_ctx["lock_slot"],
         value=write_values.reshape(N, B * Wr, sl.VALUE_WORDS))
     # only lanes that actually HOLD a lock must unlock/commit
     state, crep, covf, s_cm = R.rpc_call(
@@ -164,48 +216,17 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
     return state, dict(overflow=covf & lock_ctx["lock_ok"], wire=s_cm)
 
 
-def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
-                     read_keys, write_keys, write_values, write_enabled=None,
-                     read_enabled=None, cache=None, use_onesided: bool = True,
-                     capacity: Optional[int] = None):
-    """Execute a batch of transactions, one per lane (single shot — aborted
-    lanes report their cause and stop; see txloop.tx_loop for bounded retry).
-
-    read_keys:    (N, B, Rd, 2) uint32 (lo, hi)
-    write_keys:   (N, B, Wr, 2) uint32
-    write_values: (N, B, Wr, VALUE_WORDS) uint32
-    *_enabled:    optional masks (N, B, Rd/Wr) for ragged sets.
-
-    Read/write sets are assumed disjoint per lane (read-for-update goes in the
-    write set — its LOCK reply returns the current value, Fig. 3).
-    """
-    N, B, Rd = read_keys.shape[:3]
-    Wr = write_keys.shape[2]
-    if read_enabled is None:
-        read_enabled = jnp.ones((N, B, Rd), bool)
-    if write_enabled is None:
-        write_enabled = jnp.ones((N, B, Wr), bool)
-    serial_h = ht.make_rpc_handler(cfg, layout)
-
-    # ---------------- EXECUTE: read set (hybrid one-two-sided) -------------
-    state, cache, rctx = execute_read_set(
-        t, state, cfg, layout, read_keys=read_keys, read_enabled=read_enabled,
-        cache=cache, use_onesided=use_onesided, capacity=capacity)
-    m = rctx["metrics"]
-    read_found = rctx["found"].reshape(N, B, Rd)
-
-    # ---------------- EXECUTE: lock + read-for-update the write set --------
-    state, lctx = lock_write_set(
-        t, state, cfg, layout, serial_h, write_keys=write_keys,
-        write_enabled=write_enabled, capacity=capacity)
+# ---------------------------------------------------------------------------
+# Shared tail: commit decision, abort classification, result packing.
+# ---------------------------------------------------------------------------
+def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
+                       write_values, rctx, lctx, vctx, read_wire,
+                       onesided_success, rpc_fallback, total,
+                       capacity):
     lane_locks_ok = jnp.all(
         (lctx["lock_ok"] | ~lctx["enabled"]).reshape(N, B, Wr), axis=-1)
-
-    # ---------------- VALIDATE: one-sided re-read of read-set versions -----
-    vctx = validate_read_set(t, state, layout, rctx, capacity=capacity)
     lane_valid = jnp.all(
         (vctx["valid"] | ~rctx["enabled"]).reshape(N, B, Rd), axis=-1)
-
     # a read dropped by back-pressure is NOT a miss: the lane must abort
     # (cause: overflow) and retry, never commit against an unread read set
     lane_reads_ok = ~jnp.any(rctx["overflow"].reshape(N, B, Rd), axis=-1)
@@ -234,18 +255,18 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
     aborted_lock = aborted & ~lane_ovf & lane_lock_fail
     aborted_validate = aborted & ~lane_ovf & ~lane_lock_fail & ~lane_valid
 
-    wire = (m.wire + lctx["wire"] + vctx["wire"] + cctx["wire"])
+    wire = read_wire + lctx["wire"] + vctx["wire"] + cctx["wire"]
     metrics = hy.HybridMetrics(
-        onesided_success=m.onesided_success,
-        rpc_fallback=m.rpc_fallback,
-        total=m.total,
+        onesided_success=onesided_success,
+        rpc_fallback=rpc_fallback,
+        total=total,
         wire=wire,
     )
-    rts = (m.wire.round_trips + lctx["wire"].round_trips
+    rts = (read_wire.round_trips + lctx["wire"].round_trips
            + vctx["wire"].round_trips + cctx["wire"].round_trips)
-    return state, cache, TxResult(
+    return state, TxResult(
         committed=committed,
-        read_found=read_found,
+        read_found=rctx["found"].reshape(N, B, Rd),
         read_values=rctx["values"].reshape(N, B, Rd, sl.VALUE_WORDS),
         locked_values=lctx["locked_values"],
         aborted_lock=aborted_lock,
@@ -254,3 +275,146 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         metrics=metrics,
         round_trips=rts,
     )
+
+
+# ---------------------------------------------------------------------------
+# The fused schedule (roundsched.fused_round): 3-4 exchange rounds.
+# ---------------------------------------------------------------------------
+def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
+                            write_keys, write_values, write_enabled,
+                            read_enabled, cache, use_onesided, capacity):
+    N, B, Rd = read_keys.shape[:3]
+    Wr = write_keys.shape[2]
+    serial_h = ht.make_rpc_handler(cfg, layout)
+    rk_lo = read_keys[..., 0].reshape(N, B * Rd)
+    rk_hi = read_keys[..., 1].reshape(N, B * Rd)
+    ren = read_enabled.reshape(N, B * Rd)
+
+    # ---- round 1: one-sided read of the read set --------------------------
+    probe = hy.onesided_probe(t, state, rk_lo, rk_hi, cfg, layout, cache=cache,
+                              use_onesided=use_onesided, capacity=capacity,
+                              enabled=ren)
+
+    # ---- round 2: read-set RPC fallback ∥ LOCK ∥ validate(one-sided hits) -
+    # The fallback is independent of LOCK (different key sets, the lookup is
+    # read-only and observes the round's pre-handler state); the validate
+    # re-read of a lane whose slot address round 1 already learned only needs
+    # to observe the post-lock state, which the fused round's gather-last
+    # ordering provides.  Under an explicit capacity bound the validate phase
+    # keeps its own round instead, so its send-queue back-pressure policy
+    # stays bit-identical to the reference's single validate round.
+    lk, lock_recs = _lock_requests(t, cfg, layout, write_keys=write_keys,
+                                   write_enabled=write_enabled)
+    lookup_recs = ht.make_record(R.OP_LOOKUP, rk_lo, rk_hi)
+    vector_h = ht.make_lookup_handler_vector(cfg, layout)
+    classes = [
+        rs.rpc_class(probe["node"], lookup_recs, vector_h,
+                     enabled=probe["need_rpc"], capacity=capacity),
+        rs.rpc_class(lk["node"], lock_recs, serial_h, enabled=lk["enabled"],
+                     capacity=capacity),
+    ]
+    fuse_v1 = capacity is None and Rd > 0
+    if fuse_v1:
+        classes.append(rs.read_class(
+            probe["node"], ht.slot_idx_offset(layout, probe["slot_idx"]),
+            length=sl.SLOT_WORDS, enabled=ren & probe["success"]))
+    state, results, s2 = rs.fused_round(t, state, classes)
+    lookup_rep, lookup_ovf = results[0]
+    lrep, lovf = results[1]
+
+    lctx = _parse_lock_replies(lk, lrep, lovf, N, B, Wr)
+    mg = hy.merge_rpc_fallback(probe, lookup_rep, lookup_ovf)
+    cache = hy.update_lookup_cache(cfg, cache, rk_lo, rk_hi, probe["node"],
+                                   mg["slot_idx"], mg["found"])
+    rctx = dict(key_lo=rk_lo, key_hi=rk_hi, enabled=ren, found=mg["found"],
+                values=mg["value"], versions=mg["version"],
+                node=probe["node"], slot=mg["slot_idx"],
+                overflow=mg["overflow"])
+
+    # ---- round 3: validate re-reads whose address came from the RPC -------
+    # (empty — and therefore free of wire cost — on the one-sided fast path)
+    if fuse_v1:
+        v1buf = results[2][0]
+        v2buf, _, s3 = osd.remote_read(
+            t, state["arena"], probe["node"],
+            ht.slot_idx_offset(layout, mg["slot_idx"]), length=sl.SLOT_WORDS,
+            enabled=ren & mg["rpc_ok"])
+        vbuf = jnp.where(probe["success"][..., None], v1buf, v2buf)
+        # without a capacity bound neither validate sub-round can overflow
+        vctx = _validate_from_bytes(rctx, vbuf, jnp.zeros((N, B * Rd), bool))
+        vctx["wire"] = s3
+    else:
+        vctx = validate_read_set(t, state, layout, rctx, capacity=capacity)
+
+    # the lock round's wire is fused into s2; attribute the whole fused round
+    # to the lock slot of the accounting so totals stay exact
+    lctx["wire"] = s2
+
+    state, res = _decide_and_finish(
+        t, state, serial_h, N=N, B=B, Rd=Rd, Wr=Wr,
+        write_enabled=write_enabled, write_values=write_values,
+        rctx=rctx, lctx=lctx, vctx=vctx, read_wire=probe["wire"],
+        onesided_success=jnp.sum(probe["success"].astype(jnp.float32)),
+        rpc_fallback=jnp.sum(probe["need_rpc"].astype(jnp.float32)),
+        total=jnp.sum(ren.astype(jnp.float32)),
+        capacity=capacity)
+    return state, cache, res
+
+
+def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
+                     read_keys, write_keys, write_values, write_enabled=None,
+                     read_enabled=None, cache=None, use_onesided: bool = True,
+                     capacity: Optional[int] = None, fused: bool = True):
+    """Execute a batch of transactions, one per lane (single shot — aborted
+    lanes report their cause and stop; see txloop.tx_loop for bounded retry).
+
+    read_keys:    (N, B, Rd, 2) uint32 (lo, hi)
+    write_keys:   (N, B, Wr, 2) uint32
+    write_values: (N, B, Wr, VALUE_WORDS) uint32
+    *_enabled:    optional masks (N, B, Rd/Wr) for ragged sets.
+    fused:        True (default) runs the fused 3-4-round schedule;
+                  False runs the per-phase 5-round reference.  Both produce
+                  identical committed state, abort causes and delivered
+                  request counts — the fused schedule just puts fewer
+                  exchanges on the wire.
+
+    Read/write sets are assumed disjoint per lane (read-for-update goes in the
+    write set — its LOCK reply returns the current value, Fig. 3).
+    """
+    N, B, Rd = read_keys.shape[:3]
+    Wr = write_keys.shape[2]
+    if read_enabled is None:
+        read_enabled = jnp.ones((N, B, Rd), bool)
+    if write_enabled is None:
+        write_enabled = jnp.ones((N, B, Wr), bool)
+
+    if fused:
+        return _run_transactions_fused(
+            t, state, cfg, layout, read_keys=read_keys, write_keys=write_keys,
+            write_values=write_values, write_enabled=write_enabled,
+            read_enabled=read_enabled, cache=cache, use_onesided=use_onesided,
+            capacity=capacity)
+
+    serial_h = ht.make_rpc_handler(cfg, layout)
+
+    # ---------------- EXECUTE: read set (hybrid one-two-sided) -------------
+    state, cache, rctx = execute_read_set(
+        t, state, cfg, layout, read_keys=read_keys, read_enabled=read_enabled,
+        cache=cache, use_onesided=use_onesided, capacity=capacity)
+    m = rctx["metrics"]
+
+    # ---------------- EXECUTE: lock + read-for-update the write set --------
+    state, lctx = lock_write_set(
+        t, state, cfg, layout, serial_h, write_keys=write_keys,
+        write_enabled=write_enabled, capacity=capacity)
+
+    # ---------------- VALIDATE: one-sided re-read of read-set versions -----
+    vctx = validate_read_set(t, state, layout, rctx, capacity=capacity)
+
+    state, res = _decide_and_finish(
+        t, state, serial_h, N=N, B=B, Rd=Rd, Wr=Wr,
+        write_enabled=write_enabled, write_values=write_values,
+        rctx=rctx, lctx=lctx, vctx=vctx, read_wire=m.wire,
+        onesided_success=m.onesided_success, rpc_fallback=m.rpc_fallback,
+        total=m.total, capacity=capacity)
+    return state, cache, res

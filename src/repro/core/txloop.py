@@ -65,7 +65,8 @@ def _perm_lanes(x, perm):
 def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             read_keys, write_keys, write_values, read_enabled=None,
             write_enabled=None, cache=None, use_onesided: bool = True,
-            capacity: Optional[int] = None, max_rounds: int = 4, key=None):
+            capacity: Optional[int] = None, max_rounds: int = 4, key=None,
+            fused: bool = True):
     """Run a batch of transactions to convergence (bounded by max_rounds).
 
     Arguments mirror tx.run_transactions; additionally:
@@ -73,6 +74,8 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                   single-shot protocol; each later round re-runs only the
                   still-aborted lanes with permuted send-queue slots.
       key:        optional jax PRNG key for the backoff permutation.
+      fused:      run each protocol round on the fused 3-4-exchange schedule
+                  (default) or the per-phase 5-round reference.
 
     Returns (state, cache, TxLoopResult).
     """
@@ -102,7 +105,8 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             write_values=p(write_values),
             read_enabled=p(read_enabled) & act_p[..., None],
             write_enabled=p(write_enabled) & act_p[..., None],
-            cache=cache, use_onesided=use_onesided, capacity=capacity)
+            cache=cache, use_onesided=use_onesided, capacity=capacity,
+            fused=fused)
         # fully-masked (parked) lanes report committed=True — gate on active
         newly = u(res.committed) & active
         done = done | newly

@@ -1,0 +1,225 @@
+"""Regressions for the hash-table repair satellites: chain-preserving slot
+reuse, deleted-slot reclamation (bump allocator no longer grows forever),
+exact-tag unlock ownership, and honest non-positive send-queue capacities."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from repro.testing.hypothesis_stub import given, settings, st
+
+from repro.core import onesided as osd
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport
+
+
+def one_node_table(n_overflow=8, bucket_width=1, max_chain=12):
+    cfg = ht.HashTableConfig(n_nodes=1, n_buckets=1,
+                             bucket_width=bucket_width,
+                             n_overflow=n_overflow, max_chain=max_chain)
+    layout = ht.build_layout(cfg)
+    return cfg, layout, SimTransport(1), ht.init_cluster_state(cfg)
+
+
+def call(t, state, h, op, keys, aux=None, values=None):
+    klo = jnp.asarray([keys], jnp.uint32)
+    khi = jnp.zeros_like(klo)
+    node = jnp.zeros(klo.shape, jnp.int32)
+    aux = None if aux is None else jnp.asarray([aux], jnp.uint32)
+    values = None if values is None else jnp.asarray([values], jnp.uint32)
+    recs = ht.make_record(op, klo, khi, aux=aux, value=values)
+    state, rep, _, _ = R.rpc_call(t, state, node, recs, h)
+    return state, np.asarray(rep[0])
+
+
+def vals_for(keys):
+    return np.asarray(
+        sl._mix32(jnp.asarray(keys, jnp.uint32)[:, None]
+                  + jnp.arange(sl.VALUE_WORDS, dtype=jnp.uint32)))
+
+
+# ---------------------------------------------------------------------------
+# Satellite: a fresh insert into a freed in-bucket slot must preserve the
+# slot's next_ptr — severing it orphans every key on the overflow chain.
+# ---------------------------------------------------------------------------
+def test_reinsert_into_freed_bucket_slot_keeps_chain():
+    cfg, layout, t, state = one_node_table()
+    h = ht.make_rpc_handler(cfg, layout)
+    # one bucket of width 1: key 10 lands in the bucket slot, 20/30 chain
+    state, rep = call(t, state, h, R.OP_INSERT, [10, 20, 30],
+                      values=vals_for([10, 20, 30]))
+    assert (rep[:, 0] == R.ST_OK).all()
+    # delete the chain ANCHOR (in-bucket slot), then insert a fresh key —
+    # which reuses that freed slot
+    state, rep = call(t, state, h, R.OP_DELETE, [10])
+    assert (rep[:, 0] == R.ST_OK).all()
+    state, rep = call(t, state, h, R.OP_INSERT, [40], values=vals_for([40]))
+    assert (rep[:, 0] == R.ST_OK).all()
+    # every chained key must still round-trip (the old code wrote NULL_PTR
+    # into the reused slot and orphaned 20 and 30)
+    state, rep = call(t, state, h, R.OP_LOOKUP, [40, 20, 30])
+    assert (rep[:, 0] == R.ST_OK).all(), rep[:, 0]
+    np.testing.assert_array_equal(rep[:, 3:], vals_for([40, 20, 30]))
+
+
+def test_reinsert_into_freed_chain_slot_keeps_suffix():
+    cfg, layout, t, state = one_node_table()
+    h = ht.make_rpc_handler(cfg, layout)
+    state, rep = call(t, state, h, R.OP_INSERT, [10, 20, 30],
+                      values=vals_for([10, 20, 30]))
+    assert (rep[:, 0] == R.ST_OK).all()
+    # delete the MIDDLE chain node; reuse must keep its link to 30
+    state, rep = call(t, state, h, R.OP_DELETE, [20])
+    assert (rep[:, 0] == R.ST_OK).all()
+    state, rep = call(t, state, h, R.OP_INSERT, [50], values=vals_for([50]))
+    assert (rep[:, 0] == R.ST_OK).all()
+    state, rep = call(t, state, h, R.OP_LOOKUP, [10, 50, 30])
+    assert (rep[:, 0] == R.ST_OK).all(), rep[:, 0]
+
+
+def test_lock_insert_placeholder_preserves_chain():
+    """The lock-insert placeholder takes the same reuse path as OP_INSERT:
+    locking a NEW key into a freed anchor slot must not sever the chain,
+    and aborting it must leave the chain intact."""
+    cfg, layout, t, state = one_node_table()
+    h = ht.make_rpc_handler(cfg, layout)
+    state, rep = call(t, state, h, R.OP_INSERT, [10, 20, 30],
+                      values=vals_for([10, 20, 30]))
+    state, rep = call(t, state, h, R.OP_DELETE, [10])
+    state, rep = call(t, state, h, R.OP_LOCK, [60], aux=[7])
+    assert (rep[:, 0] == R.ST_OK).all()
+    slot_idx = rep[0, 1]
+    state, rep = call(t, state, h, R.OP_LOOKUP, [20, 30])
+    assert (rep[:, 0] == R.ST_OK).all(), rep[:, 0]
+    # roll the placeholder back (tag 7) and re-check the chain
+    state, rep = call(t, state, h, R.OP_ABORT_UNLOCK, [7], aux=[slot_idx])
+    assert (rep[:, 0] == R.ST_OK).all()
+    state, rep = call(t, state, h, R.OP_LOOKUP, [20, 30])
+    assert (rep[:, 0] == R.ST_OK).all(), rep[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Satellite: deleted slots are reclaimed — churn at fixed occupancy must
+# never exhaust the overflow allocator.
+# ---------------------------------------------------------------------------
+@settings(max_examples=2, deadline=None)
+@given(seed=st.sampled_from([3, 11]), width=st.sampled_from([1, 2]))
+def test_churn_at_fixed_occupancy_never_no_space(seed, width):
+    n_overflow = 5
+    cfg, layout, t, state = one_node_table(n_overflow=n_overflow,
+                                           bucket_width=width,
+                                           max_chain=n_overflow + 4)
+    h = ht.make_rpc_handler(cfg, layout)
+    occupancy = width + n_overflow  # table completely full
+    rng = np.random.RandomState(seed)
+    keys = list(range(100, 100 + occupancy))
+    state, rep = call(t, state, h, R.OP_INSERT, keys, values=vals_for(keys))
+    assert (rep[:, 0] == R.ST_OK).all()
+    next_key = 1000
+    for _ in range(occupancy + 3):
+        victim = keys.pop(rng.randint(len(keys)))
+        state, rep = call(t, state, h, R.OP_DELETE, [victim])
+        assert (rep[:, 0] == R.ST_OK).all()
+        state, rep = call(t, state, h, R.OP_INSERT, [next_key],
+                          values=vals_for([next_key]))
+        # the old bump-only allocator hits ST_NO_SPACE on the first iteration
+        # (the table started full); reclamation must always find the slot
+        assert (rep[:, 0] == R.ST_OK).all(), rep[:, 0]
+        keys.append(next_key)
+        next_key += 1
+    state, rep = call(t, state, h, R.OP_LOOKUP, keys)
+    assert (rep[:, 0] == R.ST_OK).all(), rep[:, 0]
+    np.testing.assert_array_equal(rep[:, 3:], vals_for(keys))
+
+
+def test_reused_slot_version_stays_monotone():
+    """Reuse must not reset the slot version: a delete -> re-insert of the
+    SAME key must present a version different from the pre-delete one, or a
+    concurrent validator could ABA past the change."""
+    cfg, layout, t, state = one_node_table()
+    h = ht.make_rpc_handler(cfg, layout)
+    state, rep = call(t, state, h, R.OP_INSERT, [10], values=vals_for([10]))
+    state, rep = call(t, state, h, R.OP_LOOKUP, [10])
+    v0 = int(rep[0, 2])
+    state, _ = call(t, state, h, R.OP_DELETE, [10])
+    state, rep = call(t, state, h, R.OP_INSERT, [10], values=vals_for([10]))
+    state, rep = call(t, state, h, R.OP_LOOKUP, [10])
+    v1 = int(rep[0, 2])
+    assert v1 != v0 and v1 % 2 == 0, (v0, v1)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: COMMIT/ABORT_UNLOCK must verify the exact lock tag.
+# ---------------------------------------------------------------------------
+def test_unlock_requires_exact_tag():
+    cfg, layout, t, state = one_node_table()
+    h = ht.make_rpc_handler(cfg, layout)
+    state, rep = call(t, state, h, R.OP_INSERT, [10], values=vals_for([10]))
+    state, rep = call(t, state, h, R.OP_LOCK, [10], aux=[77])
+    assert (rep[:, 0] == R.ST_OK).all()
+    slot_idx = rep[0, 1]
+    # a misrouted/retried unlock carrying another lane's tag must NOT release
+    for op in (R.OP_ABORT_UNLOCK, R.OP_COMMIT_UNLOCK):
+        state, rep = call(t, state, h, op, [88], aux=[slot_idx],
+                          values=vals_for([10]))
+        assert (rep[:, 0] == R.ST_LOCK_FAIL).all(), rep[:, 0]
+    # the lock is still held: a second locker still loses
+    state, rep = call(t, state, h, R.OP_LOCK, [10], aux=[99])
+    assert (rep[:, 0] == R.ST_LOCK_FAIL).all()
+    # the true owner releases fine
+    state, rep = call(t, state, h, R.OP_ABORT_UNLOCK, [77], aux=[slot_idx])
+    assert (rep[:, 0] == R.ST_OK).all()
+    state, rep = call(t, state, h, R.OP_LOCK, [10], aux=[99])
+    assert (rep[:, 0] == R.ST_OK).all()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: capacity=0 back-pressures EVERYTHING (never "unbounded");
+# negative capacities are rejected loudly.
+# ---------------------------------------------------------------------------
+def test_capacity_zero_backpressures_everything():
+    cfg, layout, t, state = one_node_table()
+    h = ht.make_rpc_handler(cfg, layout)
+    klo = jnp.asarray([[1, 2, 3]], jnp.uint32)
+    khi = jnp.zeros_like(klo)
+    node = jnp.zeros(klo.shape, jnp.int32)
+    recs = ht.make_record(R.OP_INSERT, klo, khi, value=vals_for([1, 2, 3])[None])
+    state2, rep, ovf, stats = R.rpc_call(t, state, node, recs, h, capacity=0)
+    assert bool(np.asarray(ovf).all())
+    np.testing.assert_array_equal(np.asarray(rep[..., 0]), R.ST_DROPPED)
+    assert float(stats.ops) == 0.0 and float(stats.round_trips) == 0.0
+    # nothing was delivered: the arena is untouched
+    np.testing.assert_array_equal(np.asarray(state2["arena"]),
+                                  np.asarray(state["arena"]))
+
+    offs = jnp.zeros((1, 3), jnp.uint32)
+    data, ovf, _ = osd.remote_read(t, state["arena"], node, offs, length=4,
+                                   capacity=0)
+    assert bool(np.asarray(ovf).all()) and not np.asarray(data).any()
+    arenas, ovf, _ = osd.remote_write(t, state["arena"], node, offs,
+                                      jnp.ones((1, 3, 4), jnp.uint32),
+                                      capacity=0)
+    assert bool(np.asarray(ovf).all())
+    np.testing.assert_array_equal(np.asarray(arenas),
+                                  np.asarray(state["arena"]))
+
+
+def test_negative_capacity_rejected():
+    cfg, layout, t, state = one_node_table()
+    h = ht.make_rpc_handler(cfg, layout)
+    klo = jnp.asarray([[1]], jnp.uint32)
+    khi = jnp.zeros_like(klo)
+    node = jnp.zeros(klo.shape, jnp.int32)
+    recs = ht.make_record(R.OP_LOOKUP, klo, khi)
+    offs = jnp.zeros((1, 1), jnp.uint32)
+    with pytest.raises(ValueError):
+        R.rpc_call(t, state, node, recs, h, capacity=-1)
+    with pytest.raises(ValueError):
+        osd.remote_read(t, state["arena"], node, offs, length=4, capacity=-1)
+    with pytest.raises(ValueError):
+        osd.remote_write(t, state["arena"], node, offs,
+                         jnp.ones((1, 1, 4), jnp.uint32), capacity=-2)

@@ -1,0 +1,231 @@
+"""Equivalence suite: the fused 3-4-round schedule must produce IDENTICAL
+committed state, abort causes, read results, and delivered-request counts
+(WireStats.ops) as the per-phase 5-round reference — across the property-test
+workloads, under capacity back-pressure, and through max_rounds > 1 retries.
+The only things allowed to differ are round_trips/messages/bytes (that is the
+whole point of fusing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core import tx as txm
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport
+from repro.core.txloop import tx_loop
+from repro.testing.workloads import value_for, zipf_write_keys
+
+N = 2
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ht.HashTableConfig(n_nodes=N, n_buckets=16, bucket_width=2,
+                              n_overflow=32, max_chain=10)
+
+
+@pytest.fixture(scope="module")
+def layout(cfg):
+    return ht.build_layout(cfg)
+
+
+def insert_keys(t, state, cfg, layout, klo, khi):
+    h = ht.make_rpc_handler(cfg, layout)
+    node, _, _ = ht.lookup_start(cfg, layout, klo, khi)
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_INSERT, klo, khi,
+                                       value=value_for(klo)), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+    return state
+
+
+RESULT_FIELDS = ("committed", "read_found", "read_values", "locked_values",
+                 "aborted_lock", "aborted_validate", "aborted_overflow")
+
+
+def assert_equivalent(t, state, cfg, layout, rk, wk, wv, **kw):
+    """Run both schedules from the same state and compare everything the
+    satellite demands; returns (ref, fused) results for extra assertions."""
+    s_ref, _, ref = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        fused=False, **kw)
+    s_fus, _, fus = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        fused=True, **kw)
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ref, f)), np.asarray(getattr(fus, f)),
+            err_msg=f"fused/reference mismatch in {f}")
+    np.testing.assert_array_equal(np.asarray(s_ref["arena"]),
+                                  np.asarray(s_fus["arena"]),
+                                  err_msg="committed state differs")
+    assert float(ref.metrics.wire.ops) == float(fus.metrics.wire.ops), \
+        "delivered-request counts must match"
+    # the fused schedule must actually save exchanges whenever the reference
+    # issued the full 5 (read / fallback / lock / validate / commit)
+    assert float(fus.round_trips) <= float(ref.round_trips)
+    return ref, fus
+
+
+def make_tx_workload(seed, B=4, Rd=2, Wr=1):
+    rng = np.random.RandomState(seed)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B, Rd + Wr)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, B, Rd + Wr)), jnp.uint32)
+    rk = jnp.stack([klo[..., :Rd], khi[..., :Rd]], -1)
+    wk = jnp.stack([klo[..., Rd:], khi[..., Rd:]], -1)
+    wv = value_for(klo[..., Rd:] + jnp.uint32(9))
+    return klo, khi, rk, wk, wv
+
+
+def test_disjoint_commit_equivalence(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    klo, khi, rk, wk, wv = make_tx_workload(seed=0)
+    state = insert_keys(t, state, cfg, layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    ref, fus = assert_equivalent(t, state, cfg, layout, rk, wk, wv)
+    assert bool(np.asarray(ref.committed).all())
+    # reference = 5 rounds (read + fallback + lock + validate + commit, the
+    # fallback only live if some read chained); fused = 4 general / 3 when
+    # every read-set lookup was satisfied one-sided
+    assert float(ref.round_trips) in (4.0, 5.0)
+    assert float(fus.round_trips) == float(ref.round_trips) - 1.0
+
+
+def test_fast_path_is_three_rounds(cfg, layout):
+    """All read-set lookups satisfied one-sided -> exactly 3 exchange rounds
+    (read ∥ lock+validate ∥ commit)."""
+    big = ht.HashTableConfig(n_nodes=N, n_buckets=256, bucket_width=1,
+                             n_overflow=8, max_chain=4)
+    big_layout = ht.build_layout(big)
+    t = SimTransport(N)
+    state = ht.init_cluster_state(big)
+    klo, khi, rk, wk, wv = make_tx_workload(seed=1)
+    state = insert_keys(t, state, big, big_layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    _, _, fus = txm.run_transactions(
+        t, state, big, big_layout, read_keys=rk, write_keys=wk,
+        write_values=wv, fused=True)
+    m = fus.metrics
+    if float(m.rpc_fallback) == 0.0:
+        assert float(fus.round_trips) == 3.0
+    else:  # an unlucky chain: still within the general-case bound
+        assert float(fus.round_trips) == 4.0
+    assert bool(np.asarray(fus.committed).all())
+
+
+def test_contended_key_equivalence(cfg, layout):
+    """Every lane writes the SAME key: the fused lock round must elect the
+    same single winner as the reference (scan order preserved)."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 4
+    key = jnp.full((N, B, 1), 4242, jnp.uint32)
+    khi = jnp.zeros_like(key)
+    state = insert_keys(t, state, cfg, layout,
+                        key.reshape(N, -1), khi.reshape(N, -1))
+    rk = jnp.zeros((N, B, 0, 2), jnp.uint32)
+    wk = jnp.stack([key, khi], -1)
+    wv = value_for(key + jnp.uint32(5))
+    ref, fus = assert_equivalent(t, state, cfg, layout, rk, wk, wv)
+    assert int(np.asarray(ref.committed).sum()) == 1
+    assert int(np.asarray(ref.aborted_lock).sum()) == N * B - 1
+
+
+def test_backpressure_equivalence(cfg, layout):
+    """Tiny per-destination capacity: identical overflow aborts, identical
+    delivered counts, identical committed state."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    klo, khi, rk, wk, wv = make_tx_workload(seed=2, B=6)
+    state = insert_keys(t, state, cfg, layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    for cap in (1, 2):
+        ref, fus = assert_equivalent(t, state, cfg, layout, rk, wk, wv,
+                                     capacity=cap)
+    # capacity=1 must actually produce overflow aborts for this shape,
+    # otherwise the test is vacuous
+    _, _, ref1 = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        fused=False, capacity=1)
+    assert int(np.asarray(ref1.aborted_overflow).sum()) > 0
+
+
+def test_rpc_only_mode_equivalence(cfg, layout):
+    """use_onesided=False: every read goes through the fused fallback+lock
+    round; the reference needs separate rounds for each."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    klo, khi, rk, wk, wv = make_tx_workload(seed=3)
+    state = insert_keys(t, state, cfg, layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    ref, fus = assert_equivalent(t, state, cfg, layout, rk, wk, wv,
+                                 use_onesided=False)
+    # reference: fallback + lock + validate + commit; fused: fallback∥lock,
+    # validate, commit
+    assert float(ref.round_trips) == 4.0
+    assert float(fus.round_trips) == 3.0
+
+
+def test_txloop_retry_equivalence(cfg, layout):
+    """Bounded retry under skewed contention + back-pressure: the whole loop
+    (same PRNG, same permutations) must converge identically."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 6
+    hot, klo, khi = zipf_write_keys(N, B, seed=4)
+    state = insert_keys(t, state, cfg, layout, jnp.tile(hot[None], (N, 1)),
+                        jnp.zeros((N, hot.shape[0]), jnp.uint32))
+    rk = jnp.zeros((N, B, 0, 2), jnp.uint32)
+    wk = jnp.stack([klo, khi], -1)
+    wv = value_for(klo + jnp.uint32(5))
+    s_ref, _, ref = tx_loop(t, state, cfg, layout, read_keys=rk, write_keys=wk,
+                            write_values=wv, capacity=2, max_rounds=4,
+                            fused=False)
+    s_fus, _, fus = tx_loop(t, state, cfg, layout, read_keys=rk, write_keys=wk,
+                            write_values=wv, capacity=2, max_rounds=4,
+                            fused=True)
+    np.testing.assert_array_equal(np.asarray(ref.committed),
+                                  np.asarray(fus.committed))
+    np.testing.assert_array_equal(np.asarray(ref.commit_round),
+                                  np.asarray(fus.commit_round))
+    for f in ("round_committed", "round_attempts", "round_abort_lock",
+              "round_abort_validate", "round_abort_overflow"):
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(fus, f)),
+                                      err_msg=f"loop metric mismatch: {f}")
+    np.testing.assert_array_equal(np.asarray(s_ref["arena"]),
+                                  np.asarray(s_fus["arena"]))
+    assert float(ref.metrics.wire.ops) == float(fus.metrics.wire.ops)
+    # write-only lanes need only lock + commit on both schedules, so the
+    # fused loop matches (and never exceeds) the reference here
+    assert float(fus.round_trips) <= float(ref.round_trips)
+
+
+def test_address_cache_equivalence():
+    """With the client address cache on, both schedules must learn the same
+    cache entries and agree on a warm second batch."""
+    cfgc = ht.HashTableConfig(n_nodes=N, n_buckets=4, bucket_width=1,
+                              n_overflow=32, max_chain=20, cache_slots=128)
+    layoutc = ht.build_layout(cfgc)
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfgc)
+    klo, khi, rk, wk, wv = make_tx_workload(seed=5)
+    state = insert_keys(t, state, cfgc, layoutc,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    cache0 = jax.tree.map(lambda x: jnp.tile(x[None], (N,) + (1,) * x.ndim),
+                          ht.init_cache(cfgc))
+    _, cache_ref, ref = txm.run_transactions(
+        t, state, cfgc, layoutc, read_keys=rk, write_keys=wk, write_values=wv,
+        cache=cache0, fused=False)
+    _, cache_fus, fus = txm.run_transactions(
+        t, state, cfgc, layoutc, read_keys=rk, write_keys=wk, write_values=wv,
+        cache=cache0, fused=True)
+    np.testing.assert_array_equal(np.asarray(ref.committed),
+                                  np.asarray(fus.committed))
+    for k in cache_ref:
+        np.testing.assert_array_equal(np.asarray(cache_ref[k]),
+                                      np.asarray(cache_fus[k]),
+                                      err_msg=f"cache field mismatch: {k}")
