@@ -1,0 +1,140 @@
+"""Bench gate: machine-readable perf snapshot + CI regression gate.
+
+Collects the protocol's headline numbers into a JSON snapshot:
+
+  * ``round_trips`` / ``rt_round`` — exchange rounds issued by a fixed,
+    deterministic fused OCC workload (the quantity PR 2's fusion cut 5 -> 3-4;
+    ANY increase is a regression);
+  * ``tx_latency_us`` — the modeled unloaded transaction latencies of the
+    three schedules (table5);
+  * ``mops_node`` — modeled Mops/node per connection mode at 32 and 96
+    emulated nodes, 20 threads (the core/nic model conn_scaling sweeps).
+
+CI runs this twice: ``--out BENCH_PR.json`` on the PR (uploaded as an
+artifact) and compares against the checked-in ``BENCH_BASELINE.json``:
+>5% modeled-latency growth, >5% modeled-throughput drop, or any
+round-trips increase fails the job.  ``--write-baseline`` refreshes the
+baseline after an intentional protocol change.
+
+    PYTHONPATH=src python benchmarks/bench_gate.py --out BENCH_PR.json \
+        --baseline benchmarks/BENCH_BASELINE.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+LAT_TOL = 1.05    # >5% modeled latency growth fails
+TPUT_TOL = 0.95   # >5% modeled throughput drop fails
+
+
+def _tx_smoke():
+    """Deterministic fused tx_loop workload; returns wire-level counts."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from common import make_tx_workload
+    from repro.core import txloop as txl
+    from repro.core.datastructs import hashtable as ht
+    from repro.core.transport import SimTransport
+
+    n_nodes, lanes, max_rounds = 4, 8, 2
+    cfg = ht.HashTableConfig(n_nodes=n_nodes, n_buckets=256, bucket_width=1,
+                             n_overflow=64, max_chain=8)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(n_nodes)
+    state = ht.init_cluster_state(cfg)
+    state, rk, wk, wv = make_tx_workload(t, cfg, layout, state, lanes=lanes,
+                                         n_keys=64, seed=5)
+    _, _, res = jax.jit(lambda st: txl.tx_loop(
+        t, st, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        max_rounds=max_rounds))(state)
+    rounds_attempted = int((np.asarray(res.round_attempts) > 0).sum())
+    return dict(
+        round_trips=float(res.round_trips),
+        rt_round=float(res.round_trips) / max(rounds_attempted, 1),
+        commit_rate=float(jnp.mean(res.committed)),
+        wire_bytes_tx=float(res.metrics.wire.total_bytes) / (n_nodes * lanes),
+    )
+
+
+def collect() -> dict:
+    import conn_scaling
+    import table5_latency
+    from repro.core import nic as qn
+
+    mops = {}
+    for mode in qn.MODES:
+        mops[mode] = {str(m): round(conn_scaling.modeled(m, 20, mode)[0], 4)
+                      for m in (32, 96)}
+    tx = _tx_smoke()
+    return {
+        "round_trips": tx["round_trips"],
+        "rt_round": round(tx["rt_round"], 4),
+        "commit_rate": round(tx["commit_rate"], 4),
+        "wire_bytes_tx": round(tx["wire_bytes_tx"], 2),
+        "tx_latency_us": {k: round(v, 4)
+                          for k, v in table5_latency.modeled_tx_latencies().items()},
+        "mops_node": mops,
+    }
+
+
+def compare(pr: dict, base: dict) -> list[str]:
+    """Return the list of regressions of `pr` vs `base` (empty = gate green)."""
+    fails = []
+    if pr["round_trips"] > base["round_trips"]:
+        fails.append(f"round_trips increased: {base['round_trips']} -> "
+                     f"{pr['round_trips']} (any increase fails)")
+    for k, b in base["tx_latency_us"].items():
+        p = pr["tx_latency_us"].get(k)
+        if p is None or p > b * LAT_TOL:
+            fails.append(f"tx_latency_us.{k} regressed: {b} -> {p} "
+                         f"(>{LAT_TOL:.0%} of baseline)")
+    for mode, per_m in base["mops_node"].items():
+        for m, b in per_m.items():
+            p = pr["mops_node"].get(mode, {}).get(m)
+            if p is None or p < b * TPUT_TOL:
+                fails.append(f"mops_node.{mode}.{m} regressed: {b} -> {p} "
+                             f"(<{TPUT_TOL:.0%} of baseline)")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_PR.json")
+    ap.add_argument("--baseline",
+                    default=str(pathlib.Path(__file__).parent / "BENCH_BASELINE.json"))
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the snapshot to --baseline instead of gating")
+    args = ap.parse_args()
+
+    snap = collect()
+    out = pathlib.Path(args.baseline if args.write_baseline else args.out)
+    out.write_text(json.dumps(snap, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {out}")
+    if args.write_baseline:
+        return 0
+
+    base_path = pathlib.Path(args.baseline)
+    if not base_path.exists():
+        # the baseline is checked in: absence means it was deleted/renamed,
+        # and silently skipping would disable the gate for every later PR
+        print(f"BENCH-GATE FAIL: no baseline at {base_path} "
+              f"(seed one with --write-baseline)")
+        return 1
+    fails = compare(snap, json.loads(base_path.read_text()))
+    for f in fails:
+        print(f"BENCH-GATE FAIL: {f}")
+    if not fails:
+        print("# bench gate green: no regression vs baseline")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -29,7 +29,6 @@ import numpy as np
 from repro.core import rpc as R
 from repro.core import slots as sl
 from repro.core.datastructs import hashtable as ht
-from repro.core.transport import SimTransport
 
 
 # --- modeled fabric (CX4 Infiniband EDR) -------------------------------------
@@ -58,14 +57,21 @@ class ModelFabric:
 def modeled_throughput_per_node(*, reads_per_op: float, rpcs_per_op: float,
                                 wire_bytes_per_op: float, lanes: int,
                                 fabric: ModelFabric = ModelFabric(),
-                                extra_cpu_us_per_op: float = 0.0):
+                                extra_cpu_us_per_op: float = 0.0,
+                                nic=None):
     """Million ops/s/node for a pipelined (lanes deep) workload: the per-op
     serialization cost (NIC slots + wire bytes + CPU terms), floored by the
-    latency/lanes term."""
+    latency/lanes term.
+
+    nic: optional repro.core.nic.ConnTable — adds the modeled per-op
+    connection-state penalty (NIC-cache misses of QP state, QP-sharing locks,
+    DC reconnects) of that connection mode / emulated cluster scale."""
     wire_us = wire_bytes_per_op * 8 / (fabric.link_gbps * 1e3)
     slot_us = reads_per_op * fabric.t_read_us + rpcs_per_op * fabric.t_rpc_us
     rt_us = (reads_per_op * fabric.rt_onesided_us
              + rpcs_per_op * fabric.rt_rpc_us)
+    if nic is not None:
+        extra_cpu_us_per_op += nic.penalty_us_per_op
     per_op_us = max(slot_us + wire_us + extra_cpu_us_per_op,
                     rt_us / max(lanes, 1))
     return 1.0 / per_op_us  # Mops/s
@@ -86,6 +92,24 @@ def populate(cfg, layout, t, state, n_keys_per_node, seed=0):
         state, rep, _, _ = R.rpc_call(
             t, state, node, ht.make_record(R.OP_INSERT, kl, kh, value=vals), h)
     return state, (klo, khi)
+
+
+def make_tx_workload(t, cfg, layout, state, *, lanes, n_keys, seed):
+    """Populate the table and draw a deterministic one-read/one-write
+    transaction batch per lane (shared by bench_gate and conn_scaling so the
+    gated workload and the benchmarked one can never diverge).
+
+    Returns (state, read_keys (N, lanes, 1, 2), write_keys, write_values)."""
+    state, (klo, khi) = populate(cfg, layout, t, state, n_keys, seed=seed)
+    rng = np.random.RandomState(seed + 1)
+    s = rng.randint(0, cfg.n_nodes, (cfg.n_nodes, lanes, 1))
+    i = rng.randint(0, n_keys, (cfg.n_nodes, lanes, 1))
+    rk = jnp.asarray(np.stack([np.asarray(klo)[s, i],
+                               np.asarray(khi)[s, i]], -1), jnp.uint32)
+    wk = rk ^ jnp.uint32(0x9E3779B9)    # disjoint write set
+    wv = sl._mix32(wk[..., 0] + jnp.uint32(seed + 11))[..., None] * \
+        jnp.ones((sl.VALUE_WORDS,), jnp.uint32)
+    return state, rk, wk, wv
 
 
 def time_jit(fn, *args, iters=3):

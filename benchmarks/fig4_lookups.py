@@ -13,7 +13,6 @@ plus CPU-sim wall time per op.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -24,7 +24,6 @@ import numpy as np
 from common import (ModelFabric, csv_line, modeled_throughput_per_node,
                     populate, time_jit)
 from repro.core import slots as sl
-from repro.core import tx as txm
 from repro.core import txloop as txl
 from repro.core.datastructs import hashtable as ht
 from repro.core.transport import SimTransport

@@ -1,49 +1,33 @@
 """Figure 7: beyond rack scale — NIC-cache pressure from connection state.
 
 The paper emulates 32..128 nodes by allocating the real connection count and
-buffers.  We reproduce the mechanism with (a) the protocol simulator at the
-emulated node counts for wire metrics, and (b) an explicit NIC-cache model:
+buffers.  We reproduce the mechanism through the core connection-state
+subsystem (``repro.core.nic``): a :class:`~repro.core.nic.ConnTable` models
+the per-node QP state (2·m·t sibling-thread RC), the NIC-cache hit rate and
+the per-op PCIe penalty of evicted state; this benchmark is a THIN SWEEP over
+that shared model — every calibration constant lives in ``core/nic.py``
+(single source of truth), and ``benchmarks/conn_scaling.py`` sweeps the same
+model across all three connection modes.
 
-    conns/node      = 2 * m * t                (sibling-thread RC, §3.4)
-    qp_state        = conns * 375 B            (§2.1)
-    hit             = min(1, qp_cache_eff / qp_state)
-    per-op penalty  = (1 - hit) * pcie_us      (DMA fetch of evicted state)
-
-Calibration (documented): qp_cache_eff = 1 MiB of the ~2 MiB NIC cache is
-available for QP state (the rest holds WQE/MTT/MPT), pcie_us = 0.15 —
-chosen so the 20-thread curve drops ~1.57x at 96 nodes (the paper's number)
-while the 10-thread curve stays flat to 128; both behaviours then EMERGE
-from the model at every other point.
+Calibrated behaviour (see NicModel): the 20-thread RC curve drops 1.57x at
+96 nodes (the paper's number) while the 10-thread curve stays flat to 128;
+both behaviours EMERGE from the model at every other sweep point.
 """
 from __future__ import annotations
 
-from common import ModelFabric, csv_line, modeled_throughput_per_node
-
-FAB = ModelFabric()
-QP_BYTES = 375
-QP_CACHE_EFF = 1.0 * 1024 * 1024
-PCIE_US = 0.15
-
-
-def modeled(m_nodes: int, threads: int):
-    conns = 2 * m_nodes * threads
-    state = conns * QP_BYTES
-    hit = min(1.0, QP_CACHE_EFF / max(state, 1))
-    penalty = (1 - hit) * PCIE_US
-    mops = modeled_throughput_per_node(
-        reads_per_op=1.0, rpcs_per_op=0.0, wire_bytes_per_op=140,
-        lanes=32, extra_cpu_us_per_op=penalty)
-    return mops, hit
+from common import csv_line
+from conn_scaling import modeled
 
 
 def main():
     base20, _ = modeled(32, 20)
     for t in (20, 10):
         for m in (32, 64, 96, 128):
-            mops, hit = modeled(m, t)
+            mops, ct = modeled(m, t)
             csv_line(f"fig7/t{t}/m{m}", 1.0 / mops,
-                     f"modeled_Mops_node={mops:.2f};qp_cache_hit={hit:.2f};"
-                     f"conns_node={2*m*t}")
+                     f"modeled_Mops_node={mops:.2f};"
+                     f"qp_cache_hit={ct.cache_hit:.2f};"
+                     f"conns_node={ct.conns_per_node}")
     drop96 = base20 / modeled(96, 20)[0]
     flat128 = modeled(32, 10)[0] / modeled(128, 10)[0]
     print(f"# 20-thread drop at 96 nodes: {drop96:.2f}x (paper 1.57x); "

@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig4 fig6  # a subset
+    PYTHONPATH=src python -m benchmarks.run --smoke    # CI: small node counts
 
 CSV lines: name,us_per_call,derived.  The roofline section reads the
 dry-run artifacts under benchmarks/results/ (produced by
@@ -15,35 +16,44 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-ALL = ["fig4", "fig5", "fig6", "table5", "fig7", "physseg", "hybrid",
+ALL = ["fig4", "fig5", "fig6", "table5", "fig7", "conn", "physseg", "hybrid",
        "roofline"]
 
 
 def main() -> None:
-    want = sys.argv[1:] or ALL
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    want = [a for a in args if not a.startswith("--")] or ALL
     print("name,us_per_call,derived")
     if "fig4" in want:
         import fig4_lookups
-        fig4_lookups.main(node_counts=(4, 8, 16))
+        fig4_lookups.main(node_counts=(4,) if smoke else (4, 8, 16))
     if "fig5" in want:
         import fig5_comparison
-        fig5_comparison.main(node_counts=(4, 8, 16))
+        fig5_comparison.main(node_counts=(4,) if smoke else (4, 8, 16))
     if "fig6" in want:
         import fig6_tatp
-        fig6_tatp.main(node_counts=(4, 8))
+        fig6_tatp.main(node_counts=(4,) if smoke else (4, 8))
     if "table5" in want:
         import table5_latency
         table5_latency.main()
     if "fig7" in want:
         import fig7_emulation
         fig7_emulation.main()
-    if "physseg" in want:
+    if "conn" in want:
+        import conn_scaling
+        conn_scaling.main(smoke=smoke)
+    if smoke:
+        for name in ("physseg", "hybrid", "roofline"):
+            if name in want:
+                print(f"{name}/SKIPPED,0,not part of the --smoke sweep")
+    if "physseg" in want and not smoke:
         import physseg
         physseg.main()
-    if "hybrid" in want:
+    if "hybrid" in want and not smoke:
         import hybrid_ablation
         hybrid_ablation.main()
-    if "roofline" in want:
+    if "roofline" in want and not smoke:
         results = pathlib.Path(__file__).resolve().parent / "results"
         if any(results.glob("*__*.json")):
             import roofline

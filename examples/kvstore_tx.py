@@ -11,7 +11,7 @@ per-round abort causes are printed so the contention is visible.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rpc, slots as sl, tx, txloop
+from repro.core import rpc, slots as sl, txloop
 from repro.core.datastructs import hashtable as ht
 from repro.core.transport import SimTransport
 

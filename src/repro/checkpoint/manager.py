@@ -25,7 +25,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import rpc as R
 from repro.core import slots as sl
 from repro.core import tx as txm
 from repro.core.datastructs import hashtable as ht

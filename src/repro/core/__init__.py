@@ -2,6 +2,8 @@
 # dataplane for remote (sharded) data structures.
 #   slots      — MICA-style 128B inline slot codec (key|version|lock|value)
 #   regions    — contiguous arenas + flat/paged addressing (physical segments)
+#   nic        — connection-state model: QP modes (RC-exclusive / RC-shared /
+#                DCT) + NIC-cache hit model (Fig. 7, single source of truth)
 #   transport  — RC-fabric analogue: dest-major exchange on sim or mesh
 #   onesided   — one-sided READ/WRITE (owner does address translation only)
 #   roundsched — multi-class fused round scheduler (doorbell batching: many
@@ -12,5 +14,5 @@
 #                fused 3-4-round schedule (5-round per-phase reference kept)
 #   txloop     — bounded-retry transaction engine (re-enable masks + backoff)
 #   cost_model — the bytes/round-trip napkin math behind every hybrid choice
-from repro.core import (cost_model, hybrid, onesided, regions, roundsched,  # noqa: F401
-                        rpc, slots, transport, tx, txloop)
+from repro.core import (cost_model, hybrid, nic, onesided, regions,  # noqa: F401
+                        roundsched, rpc, slots, transport, tx, txloop)

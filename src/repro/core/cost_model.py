@@ -25,6 +25,16 @@ class Fabric:
     hbm_bytes_per_s: float = 819e9
     flops_per_s: float = 197e12        # bf16
     rt_overhead_s: float = 1e-6        # per collective round fixed cost
+    # modeled per-op connection-state penalty (core.nic: NIC-cache misses +
+    # QP-sharing locks / DC reconnects).  0 = perfect NIC; use with_nic() to
+    # derive a Fabric priced for a concrete connection mode / cluster scale.
+    nic_penalty_s: float = 0.0
+
+    def with_nic(self, conn_table) -> "Fabric":
+        """A copy of this fabric paying `conn_table`'s per-op penalty
+        (conn_table: repro.core.nic.ConnTable)."""
+        return dataclasses.replace(
+            self, nic_penalty_s=conn_table.penalty_us_per_op * 1e-6)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,9 +54,13 @@ def choose(onesided_bytes: float, rpc_bytes: float,
            onesided_rounds: float = 1.0, rpc_rounds: float = 1.0,
            fabric: Fabric = Fabric(), rpc_compute_flops: float = 0.0) -> Choice:
     """Pick the cheaper primitive for one logical op (bytes on the wire +
-    round-trip overhead + any owner-side compute the RPC must run)."""
-    t1 = onesided_bytes / fabric.link_bytes_per_s + onesided_rounds * fabric.rt_overhead_s
-    t2 = (rpc_bytes / fabric.link_bytes_per_s + rpc_rounds * fabric.rt_overhead_s
+    round-trip overhead + any owner-side compute the RPC must run).  Both
+    sides pay the fabric's modeled connection-state penalty once per round
+    issued (every round touches the connection's QP/DC state)."""
+    t1 = (onesided_bytes / fabric.link_bytes_per_s
+          + onesided_rounds * (fabric.rt_overhead_s + fabric.nic_penalty_s))
+    t2 = (rpc_bytes / fabric.link_bytes_per_s
+          + rpc_rounds * (fabric.rt_overhead_s + fabric.nic_penalty_s)
           + rpc_compute_flops / fabric.flops_per_s)
     mode = "onesided" if t1 <= t2 else "rpc"
     return Choice(mode, onesided_bytes, rpc_bytes, t1, t2)

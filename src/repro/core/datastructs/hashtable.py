@@ -23,8 +23,6 @@ Knobs reproduce the paper's configurations:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -47,7 +47,7 @@ class HybridMetrics:
 def onesided_probe(t: Transport, state, key_lo, key_hi,
                    cfg: ht.HashTableConfig, layout, *, cache=None,
                    use_onesided: bool = True, capacity: Optional[int] = None,
-                   enabled=None):
+                   enabled=None, nic=None):
     """Phase 1 of Algorithm 1: lookup_start + one-sided read + lookup_end.
 
     Returns a dict with the per-lane probe outcome: node, cache `hit`,
@@ -70,7 +70,7 @@ def onesided_probe(t: Transport, state, key_lo, key_hi,
     if use_onesided:
         buf, ovf, s_read = osd.remote_read(
             t, state["arena"], node, off, length=read_words, capacity=capacity,
-            enabled=enabled)
+            enabled=enabled, nic=nic)
         success, value, local_idx = ht.lookup_end(cfg, buf, key_lo, key_hi,
                                                   cache_hit=hit)
         # version of the matched slot (for OCC validation bookkeeping)
@@ -132,7 +132,7 @@ def update_lookup_cache(cfg: ht.HashTableConfig, cache, key_lo, key_hi, node,
 def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
                   layout, *, cache=None, use_onesided: bool = True,
                   rpc_serial: bool = False, capacity: Optional[int] = None,
-                  enabled=None):
+                  enabled=None, nic=None):
     """Batched one-two-sided lookup.
 
     key_lo/key_hi: (N_local, B) uint32.
@@ -147,7 +147,7 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
     """
     probe = onesided_probe(t, state, key_lo, key_hi, cfg, layout, cache=cache,
                            use_onesided=use_onesided, capacity=capacity,
-                           enabled=enabled)
+                           enabled=enabled, nic=nic)
 
     # ---- phase 2: write-based RPC for the failed lanes --------------------
     recs = ht.make_record(R.OP_LOOKUP, key_lo, key_hi)
@@ -155,7 +155,7 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
                else ht.make_lookup_handler_vector(cfg, layout))
     state, replies, ovf2, s_rpc = R.rpc_call(
         t, state, probe["node"], recs, handler, capacity=capacity,
-        enabled=probe["need_rpc"])
+        enabled=probe["need_rpc"], nic=nic)
     mg = merge_rpc_fallback(probe, replies, ovf2)
 
     # ---- lookup_end caching duty ------------------------------------------

@@ -20,15 +20,14 @@ import jax.numpy as jnp
 
 from repro.core import regions as rg
 from repro.core import roundsched as rs
-from repro.core.transport import (Transport, WireStats, route_by_dest,
-                                  wire_for)
+from repro.core.transport import Transport, route_by_dest, wire_for
 
 
 @partial(jax.named_call, name="storm_remote_read")
 def remote_read(t: Transport, arenas, dest, offsets, *, length: int,
                 capacity: Optional[int] = None,
                 mode: rg.AddressMode | None = None, page_tables=None,
-                enabled=None):
+                enabled=None, nic=None):
     """Batched one-sided READ — a single-class fused round (see
     roundsched.fused_round; the owner side is translation + gather ONLY).
 
@@ -46,7 +45,8 @@ def remote_read(t: Transport, arenas, dest, offsets, *, length: int,
     _, ((out, ovf),), stats = rs.fused_round(
         t, {"arena": arenas},
         [rs.read_class(dest, offsets, length=length, enabled=enabled,
-                       capacity=capacity, mode=mode, page_tables=page_tables)])
+                       capacity=capacity, mode=mode, page_tables=page_tables)],
+        nic=nic)
     return out, ovf, stats
 
 
@@ -54,7 +54,7 @@ def remote_read(t: Transport, arenas, dest, offsets, *, length: int,
 def remote_write(t: Transport, arenas, dest, offsets, values, *,
                  capacity: Optional[int] = None,
                  mode: rg.AddressMode | None = None, page_tables=None,
-                 enabled=None):
+                 enabled=None, nic=None):
     """Batched one-sided WRITE (no reply payload — transport-level ack only).
 
     values: (N_local, B, L) uint32; enabled: optional (N_local, B) bool.
@@ -88,5 +88,5 @@ def remote_write(t: Transport, arenas, dest, offsets, values, *,
     else:
         arenas = jax.vmap(lambda a, r, m: owner_scatter(a, r, m, None))(
             arenas, inbox, inbox_mask)
-    stats = wire_for(mask, req_words=1 + L, reply_words=0)
+    stats = wire_for(mask, req_words=1 + L, reply_words=0, nic=nic)
     return arenas, ovf, stats

@@ -25,7 +25,7 @@ allocator state, RPC rings).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax.numpy as jnp
 
@@ -100,27 +100,53 @@ class AddressMode:
         return phys_page * self.page_words + within
 
 
+def in_region(region: Region, offsets, length: int = 1):
+    """True where the whole access [offset, offset + length) lies inside
+    `region` — the NIC's MPT bounds check.  offsets: (...,) -> (...,) bool.
+
+    The bound is computed in Python (static) and compared without any
+    arithmetic on the traced offsets, so a huge offset can never wrap uint32
+    addition and sneak past the check."""
+    off = jnp.asarray(offsets, jnp.uint32)
+    if length > region.size:
+        return jnp.zeros(off.shape, bool)
+    return (off >= jnp.uint32(region.base)) & (off <= jnp.uint32(region.end - length))
+
+
 def arena_read(arena, offsets, length: int, mode: AddressMode | None = None,
-               page_table=None):
+               page_table=None, region: Region | None = None):
     """Gather `length` consecutive words starting at each offset.
 
     This is the owner-side data movement of a one-sided READ: pure gather,
     no application logic.  offsets: (...,) uint32 -> (..., length).
+
+    region: optional bounds check (the MPT's protection role) — lanes whose
+    access falls outside the region are REJECTED and read back zeros, in both
+    addressing modes, instead of leaking adjacent regions' words.
     """
     idx = offsets[..., None].astype(jnp.uint32) + jnp.arange(length, dtype=jnp.uint32)
     if mode is not None and mode.kind == "paged":
         idx = mode.translate(page_table, idx)
-    return arena[idx]
+    out = arena[idx]
+    if region is not None:
+        ok = in_region(region, offsets, length)
+        out = jnp.where(ok[..., None], out, jnp.zeros_like(out))
+    return out
 
 
 def arena_write(arena, offsets, values, mode: AddressMode | None = None,
-                page_table=None, enabled=None):
+                page_table=None, enabled=None, region: Region | None = None):
     """Scatter consecutive words at each offset (one-sided WRITE).
 
     values: (..., L); enabled: optional (...,) bool mask (lanes whose write is
     suppressed — needed for the masked RPC fallback lanes).
+    region: optional bounds check — out-of-region writes are rejected (the
+    arena is untouched), in both addressing modes.
     """
     length = values.shape[-1]
+    if region is not None:
+        ok = in_region(region, offsets, length)
+        enabled = ok if enabled is None else (enabled & ok)
     idx = offsets[..., None].astype(jnp.uint32) + jnp.arange(length, dtype=jnp.uint32)
     if mode is not None and mode.kind == "paged":
         idx = mode.translate(page_table, idx)

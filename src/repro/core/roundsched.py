@@ -50,8 +50,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import regions as rg
-from repro.core.transport import (Transport, WireStats, pick_replies,
-                                  route_by_dest, wire_for_classes)
+from repro.core.transport import (Transport, pick_replies, route_by_dest,
+                                  wire_for_classes)
 
 # Transport-level "request never delivered" status stamped into reply word 0
 # of overflowed/parked RPC lanes.  rpc.py re-exports this as its ST_DROPPED.
@@ -115,7 +115,7 @@ def _pad_words(x, width):
 
 
 def fused_round(t: Transport, state, classes: Sequence[dict], *,
-                arena_key: str = "arena"):
+                arena_key: str = "arena", nic=None):
     """Run one fused exchange round carrying several traffic classes.
 
     state: pytree with leading node axis; read classes gather from
@@ -126,7 +126,10 @@ def fused_round(t: Transport, state, classes: Sequence[dict], *,
     Returns ``(state, results, stats)`` where ``results[k]`` is a
     ``(reply (N_local, B_k, R_k), overflow (N_local, B_k))`` pair aligned with
     ``classes`` and ``stats`` is ONE coalesced :class:`WireStats` for the
-    whole round.  Overflowed/parked rpc lanes carry ST_DROPPED in reply word 0
+    whole round.  ``nic`` (an optional :class:`repro.core.nic.ConnTable`)
+    stamps the modeled NIC-cache hit rate / connection-state penalty of the
+    transport configuration into the stats (None = perfect NIC).
+    Overflowed/parked rpc lanes carry ST_DROPPED in reply word 0
     (never aliasing ST_OK or a handler-returned status); overflowed/parked
     read lanes read back zeros.
     """
@@ -157,7 +160,7 @@ def fused_round(t: Transport, state, classes: Sequence[dict], *,
         # nothing can be delivered this round: no exchange, no wire traffic
         stats = wire_for_classes([s["mask"] for s in specs],
                                  [s["W"] for s in specs],
-                                 [s["R"] for s in specs])
+                                 [s["R"] for s in specs], nic=nic)
         results = [(_dropped_replies(s), s["ovf"]) for s in specs]
         return state, results, stats
 
@@ -238,7 +241,7 @@ def fused_round(t: Transport, state, classes: Sequence[dict], *,
 
     stats = wire_for_classes([s["mask"] for s in specs],
                              [s["W"] for s in specs],
-                             [s["R"] for s in specs])
+                             [s["R"] for s in specs], nic=nic)
     return state, results, stats
 
 

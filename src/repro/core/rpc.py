@@ -26,7 +26,6 @@ from functools import partial
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import roundsched as rs
 from repro.core.roundsched import serial_apply, vector_apply  # noqa: F401  (re-export)
@@ -64,7 +63,7 @@ class Handler:
 
 @partial(jax.named_call, name="storm_rpc")
 def rpc_call(t: Transport, state, dest, records, handler: Handler, *,
-             capacity: Optional[int] = None, enabled=None):
+             capacity: Optional[int] = None, enabled=None, nic=None):
     """Batched write-based RPC round (one round trip for B lanes/node) — a
     single-class fused round (see roundsched.fused_round).
 
@@ -87,5 +86,5 @@ def rpc_call(t: Transport, state, dest, records, handler: Handler, *,
     state, ((out, ovf),), stats = rs.fused_round(
         t, state,
         [rs.rpc_class(dest, records, handler, enabled=enabled,
-                      capacity=capacity)])
+                      capacity=capacity)], nic=nic)
     return state, out, ovf, stats

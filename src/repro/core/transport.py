@@ -156,7 +156,10 @@ def pick_replies(replies, dest, pos, overflow):
 # ---------------------------------------------------------------------------
 # Wire accounting — the hardware-independent metrics the benchmarks report
 # (round trips / messages / bytes per op), mirroring the quantities Storm
-# reasons about in §4.4-4.5.
+# reasons about in §4.4-4.5.  When a connection table (core.nic.ConnTable) is
+# supplied, every round additionally carries the modeled NIC-cache hit rate
+# and per-op connection-state penalty of the transport configuration it ran
+# under (§2.2/Fig. 7) — both stored ops-weighted so stats stay additive.
 # ---------------------------------------------------------------------------
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
@@ -166,25 +169,54 @@ class WireStats:
     ops: jnp.ndarray           # scalar f32 — application-level requests (IOPS)
     req_bytes: jnp.ndarray     # scalar f32
     reply_bytes: jnp.ndarray   # scalar f32
+    # NIC connection-state model (ops-weighted so `+` stays exact):
+    nic_hit_ops: jnp.ndarray = dataclasses.field(     # sum(ops * cache_hit)
+        default_factory=lambda: jnp.zeros((), jnp.float32))
+    nic_penalty_us: jnp.ndarray = dataclasses.field(  # sum(ops * penalty_us)
+        default_factory=lambda: jnp.zeros((), jnp.float32))
 
     @staticmethod
     def zero():
         z = jnp.zeros((), jnp.float32)
-        return WireStats(z, z, z, z, z)
+        return WireStats(z, z, z, z, z, z, z)
 
     def __add__(self, o):
         return WireStats(self.round_trips + o.round_trips,
                          self.messages + o.messages,
                          self.ops + o.ops,
                          self.req_bytes + o.req_bytes,
-                         self.reply_bytes + o.reply_bytes)
+                         self.reply_bytes + o.reply_bytes,
+                         self.nic_hit_ops + o.nic_hit_ops,
+                         self.nic_penalty_us + o.nic_penalty_us)
 
     @property
     def total_bytes(self):
         return self.req_bytes + self.reply_bytes
 
+    @property
+    def nic_hit_rate(self):
+        """Ops-weighted modeled NIC-cache hit rate (1.0 when no ConnTable
+        was threaded through — an un-modeled fabric misses nothing)."""
+        return jnp.where(self.ops > 0,
+                         self.nic_hit_ops / jnp.maximum(self.ops, 1.0), 1.0)
 
-def wire_for(mask, req_words: int, reply_words: int, header_words: int = 1):
+    @property
+    def nic_penalty_us_per_op(self):
+        """Ops-weighted modeled per-op connection-state penalty (us)."""
+        return jnp.where(self.ops > 0,
+                         self.nic_penalty_us / jnp.maximum(self.ops, 1.0), 0.0)
+
+
+def _nic_terms(ops, nic):
+    """ops-weighted (hit, penalty) terms for one round; nic is a static
+    core.nic.ConnTable (or None = perfect, penalty-free NIC)."""
+    if nic is None:
+        return ops, jnp.zeros((), jnp.float32)
+    return ops * nic.cache_hit, ops * nic.penalty_us_per_op
+
+
+def wire_for(mask, req_words: int, reply_words: int, header_words: int = 1,
+             nic=None):
     """Stats for one exchange round given the live-cell mask (..., n_dst, C).
 
     Requests headed for the same destination ride ONE coalesced wire message
@@ -196,6 +228,7 @@ def wire_for(mask, req_words: int, reply_words: int, header_words: int = 1):
     live = jnp.sum(mask.astype(jnp.float32))
     pairs = jnp.sum(jnp.any(mask, axis=-1).astype(jnp.float32))
     reply_pairs = pairs if reply_words > 0 else jnp.zeros((), jnp.float32)
+    hit_ops, penalty_us = _nic_terms(live, nic)
     return WireStats(
         # a round with no live (src, dst) pair puts nothing on the wire and
         # therefore costs no round trip (e.g. a fully-parked retry round)
@@ -204,10 +237,13 @@ def wire_for(mask, req_words: int, reply_words: int, header_words: int = 1):
         ops=live,
         req_bytes=live * 4.0 * req_words + pairs * 4.0 * header_words,
         reply_bytes=live * 4.0 * reply_words + reply_pairs * 4.0 * header_words,
+        nic_hit_ops=hit_ops,
+        nic_penalty_us=penalty_us,
     )
 
 
-def wire_for_classes(masks, req_words, reply_words, header_words: int = 1):
+def wire_for_classes(masks, req_words, reply_words, header_words: int = 1,
+                     nic=None):
     """Coalesced stats for ONE fused exchange round carrying several traffic
     classes (roundsched.fused_round).
 
@@ -234,10 +270,13 @@ def wire_for_classes(masks, req_words, reply_words, header_words: int = 1):
                    else jnp.sum(reply_pair_live.astype(f32)))
     req_bytes = sum((l * 4.0 * w for l, w in zip(live, req_words)), zero)
     reply_bytes = sum((l * 4.0 * w for l, w in zip(live, reply_words)), zero)
+    hit_ops, penalty_us = _nic_terms(ops, nic)
     return WireStats(
         round_trips=(pairs > 0).astype(f32),
         messages=pairs + reply_pairs,
         ops=ops,
         req_bytes=req_bytes + pairs * 4.0 * header_words,
         reply_bytes=reply_bytes + reply_pairs * 4.0 * header_words,
+        nic_hit_ops=hit_ops,
+        nic_penalty_us=penalty_us,
     )

@@ -130,7 +130,8 @@ def _validate_from_bytes(read_ctx, vbuf, vovf):
 # ---------------------------------------------------------------------------
 def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                      read_keys, read_enabled, cache=None,
-                     use_onesided: bool = True, capacity: Optional[int] = None):
+                     use_onesided: bool = True, capacity: Optional[int] = None,
+                     nic=None):
     """EXECUTE phase, read half: one-two-sided lookups of the read set.
 
     read_keys: (N, B, Rd, 2); read_enabled: (N, B, Rd) bool.
@@ -144,7 +145,7 @@ def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
     state, cache, found, rvals, rvers, rnode, rslot, rovf, m = hy.hybrid_lookup(
         t, state, rk_lo, rk_hi, cfg, layout, cache=cache,
         use_onesided=use_onesided, rpc_serial=False, capacity=capacity,
-        enabled=en)
+        enabled=en, nic=nic)
     return state, cache, dict(
         key_lo=rk_lo, key_hi=rk_hi, enabled=en, found=found, values=rvals,
         versions=rvers, node=rnode, slot=rslot, overflow=rovf, metrics=m)
@@ -152,7 +153,7 @@ def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
 
 def lock_write_set(t: Transport, state, cfg: ht.HashTableConfig, layout,
                    serial_h, *, write_keys, write_enabled,
-                   capacity: Optional[int] = None):
+                   capacity: Optional[int] = None, nic=None):
     """EXECUTE phase, write half: LOCK + read-for-update the write set.
 
     write_keys: (N, B, Wr, 2); write_enabled: (N, B, Wr) bool.
@@ -162,14 +163,14 @@ def lock_write_set(t: Transport, state, cfg: ht.HashTableConfig, layout,
                                    write_enabled=write_enabled)
     state, lrep, lovf, s_lock = R.rpc_call(
         t, state, lk["node"], lock_recs, serial_h, capacity=capacity,
-        enabled=lk["enabled"])
+        enabled=lk["enabled"], nic=nic)
     lctx = _parse_lock_replies(lk, lrep, lovf, N, B, Wr)
     lctx["wire"] = s_lock
     return state, lctx
 
 
 def validate_read_set(t: Transport, state, layout, read_ctx, *,
-                      capacity: Optional[int] = None):
+                      capacity: Optional[int] = None, nic=None):
     """VALIDATE phase: one-sided re-read of every read-set slot version.
 
     Returns a dict with per-item `valid` plus the overflow mask and wire
@@ -181,14 +182,14 @@ def validate_read_set(t: Transport, state, layout, read_ctx, *,
     voff = ht.slot_idx_offset(layout, read_ctx["slot"])
     vbuf, vovf, s_val = osd.remote_read(
         t, state["arena"], read_ctx["node"], voff, length=sl.SLOT_WORDS,
-        capacity=capacity, enabled=issued)
+        capacity=capacity, enabled=issued, nic=nic)
     vctx = _validate_from_bytes(read_ctx, vbuf, vovf)
     vctx["wire"] = s_val
     return vctx
 
 
 def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
-                    write_values, capacity: Optional[int] = None):
+                    write_values, capacity: Optional[int] = None, nic=None):
     """COMMIT / ABORT phase: lanes that hold locks either install their values
     (version += 2, unlock) or roll back.  commit_lane: (N, B) bool;
     write_values: anything reshapeable to (N, B*Wr, VALUE_WORDS).
@@ -212,7 +213,7 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
     # only lanes that actually HOLD a lock must unlock/commit
     state, crep, covf, s_cm = R.rpc_call(
         t, state, lock_ctx["node"], cm_recs, serial_h, capacity=capacity,
-        enabled=lock_ctx["lock_ok"])
+        enabled=lock_ctx["lock_ok"], nic=nic)
     return state, dict(overflow=covf & lock_ctx["lock_ok"], wire=s_cm)
 
 
@@ -222,7 +223,7 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
 def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
                        write_values, rctx, lctx, vctx, read_wire,
                        onesided_success, rpc_fallback, total,
-                       capacity):
+                       capacity, nic=None):
     lane_locks_ok = jnp.all(
         (lctx["lock_ok"] | ~lctx["enabled"]).reshape(N, B, Wr), axis=-1)
     lane_valid = jnp.all(
@@ -235,7 +236,7 @@ def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
     commit_lane = lane_locks_ok & lane_valid & lane_reads_ok    # (N, B)
     state, cctx = commit_or_abort(
         t, state, serial_h, lctx, commit_lane=commit_lane,
-        write_values=write_values, capacity=capacity)
+        write_values=write_values, capacity=capacity, nic=nic)
 
     has_writes = jnp.any(write_enabled, axis=-1)
     # commit RPCs provably never overflow (see commit_or_abort); the gate is
@@ -282,7 +283,8 @@ def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
 # ---------------------------------------------------------------------------
 def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
                             write_keys, write_values, write_enabled,
-                            read_enabled, cache, use_onesided, capacity):
+                            read_enabled, cache, use_onesided, capacity,
+                            nic=None):
     N, B, Rd = read_keys.shape[:3]
     Wr = write_keys.shape[2]
     serial_h = ht.make_rpc_handler(cfg, layout)
@@ -293,7 +295,7 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
     # ---- round 1: one-sided read of the read set --------------------------
     probe = hy.onesided_probe(t, state, rk_lo, rk_hi, cfg, layout, cache=cache,
                               use_onesided=use_onesided, capacity=capacity,
-                              enabled=ren)
+                              enabled=ren, nic=nic)
 
     # ---- round 2: read-set RPC fallback ∥ LOCK ∥ validate(one-sided hits) -
     # The fallback is independent of LOCK (different key sets, the lookup is
@@ -318,7 +320,7 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
         classes.append(rs.read_class(
             probe["node"], ht.slot_idx_offset(layout, probe["slot_idx"]),
             length=sl.SLOT_WORDS, enabled=ren & probe["success"]))
-    state, results, s2 = rs.fused_round(t, state, classes)
+    state, results, s2 = rs.fused_round(t, state, classes, nic=nic)
     lookup_rep, lookup_ovf = results[0]
     lrep, lovf = results[1]
 
@@ -338,13 +340,14 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
         v2buf, _, s3 = osd.remote_read(
             t, state["arena"], probe["node"],
             ht.slot_idx_offset(layout, mg["slot_idx"]), length=sl.SLOT_WORDS,
-            enabled=ren & mg["rpc_ok"])
+            enabled=ren & mg["rpc_ok"], nic=nic)
         vbuf = jnp.where(probe["success"][..., None], v1buf, v2buf)
         # without a capacity bound neither validate sub-round can overflow
         vctx = _validate_from_bytes(rctx, vbuf, jnp.zeros((N, B * Rd), bool))
         vctx["wire"] = s3
     else:
-        vctx = validate_read_set(t, state, layout, rctx, capacity=capacity)
+        vctx = validate_read_set(t, state, layout, rctx, capacity=capacity,
+                                 nic=nic)
 
     # the lock round's wire is fused into s2; attribute the whole fused round
     # to the lock slot of the accounting so totals stay exact
@@ -357,14 +360,15 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
         onesided_success=jnp.sum(probe["success"].astype(jnp.float32)),
         rpc_fallback=jnp.sum(probe["need_rpc"].astype(jnp.float32)),
         total=jnp.sum(ren.astype(jnp.float32)),
-        capacity=capacity)
+        capacity=capacity, nic=nic)
     return state, cache, res
 
 
 def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                      read_keys, write_keys, write_values, write_enabled=None,
                      read_enabled=None, cache=None, use_onesided: bool = True,
-                     capacity: Optional[int] = None, fused: bool = True):
+                     capacity: Optional[int] = None, fused: bool = True,
+                     nic=None):
     """Execute a batch of transactions, one per lane (single shot — aborted
     lanes report their cause and stop; see txloop.tx_loop for bounded retry).
 
@@ -377,6 +381,10 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                   identical committed state, abort causes and delivered
                   request counts — the fused schedule just puts fewer
                   exchanges on the wire.
+    nic:          optional repro.core.nic.ConnTable describing the connection
+                  mode / emulated cluster scale; every round's WireStats then
+                  carries the modeled NIC-cache hit rate and per-op
+                  connection-state penalty (protocol results are unaffected).
 
     Read/write sets are assumed disjoint per lane (read-for-update goes in the
     write set — its LOCK reply returns the current value, Fig. 3).
@@ -393,28 +401,29 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             t, state, cfg, layout, read_keys=read_keys, write_keys=write_keys,
             write_values=write_values, write_enabled=write_enabled,
             read_enabled=read_enabled, cache=cache, use_onesided=use_onesided,
-            capacity=capacity)
+            capacity=capacity, nic=nic)
 
     serial_h = ht.make_rpc_handler(cfg, layout)
 
     # ---------------- EXECUTE: read set (hybrid one-two-sided) -------------
     state, cache, rctx = execute_read_set(
         t, state, cfg, layout, read_keys=read_keys, read_enabled=read_enabled,
-        cache=cache, use_onesided=use_onesided, capacity=capacity)
+        cache=cache, use_onesided=use_onesided, capacity=capacity, nic=nic)
     m = rctx["metrics"]
 
     # ---------------- EXECUTE: lock + read-for-update the write set --------
     state, lctx = lock_write_set(
         t, state, cfg, layout, serial_h, write_keys=write_keys,
-        write_enabled=write_enabled, capacity=capacity)
+        write_enabled=write_enabled, capacity=capacity, nic=nic)
 
     # ---------------- VALIDATE: one-sided re-read of read-set versions -----
-    vctx = validate_read_set(t, state, layout, rctx, capacity=capacity)
+    vctx = validate_read_set(t, state, layout, rctx, capacity=capacity,
+                             nic=nic)
 
     state, res = _decide_and_finish(
         t, state, serial_h, N=N, B=B, Rd=Rd, Wr=Wr,
         write_enabled=write_enabled, write_values=write_values,
         rctx=rctx, lctx=lctx, vctx=vctx, read_wire=m.wire,
         onesided_success=m.onesided_success, rpc_fallback=m.rpc_fallback,
-        total=m.total, capacity=capacity)
+        total=m.total, capacity=capacity, nic=nic)
     return state, cache, res

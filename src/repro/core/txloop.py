@@ -66,7 +66,7 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             read_keys, write_keys, write_values, read_enabled=None,
             write_enabled=None, cache=None, use_onesided: bool = True,
             capacity: Optional[int] = None, max_rounds: int = 4, key=None,
-            fused: bool = True):
+            fused: bool = True, nic=None):
     """Run a batch of transactions to convergence (bounded by max_rounds).
 
     Arguments mirror tx.run_transactions; additionally:
@@ -76,6 +76,9 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
       key:        optional jax PRNG key for the backoff permutation.
       fused:      run each protocol round on the fused 3-4-exchange schedule
                   (default) or the per-phase 5-round reference.
+      nic:        optional repro.core.nic.ConnTable (connection mode +
+                  emulated cluster scale); the aggregated metrics.wire then
+                  reports the modeled NIC-cache hit rate / per-op penalty.
 
     Returns (state, cache, TxLoopResult).
     """
@@ -106,7 +109,7 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             read_enabled=p(read_enabled) & act_p[..., None],
             write_enabled=p(write_enabled) & act_p[..., None],
             cache=cache, use_onesided=use_onesided, capacity=capacity,
-            fused=fused)
+            fused=fused, nic=nic)
         # fully-masked (parked) lanes report committed=True — gate on active
         newly = u(res.committed) & active
         done = done | newly

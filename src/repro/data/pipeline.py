@@ -12,7 +12,7 @@ can learn local structure) — useful for the end-to-end training example.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,10 +8,8 @@ kernel-backed equivalents.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import flash_attention as fa
 from repro.kernels import hash_probe as hp

@@ -156,8 +156,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
     from repro.optim.adamw import opt_state_specs
     from repro.parallel.sharding import (DEFAULT_RULES, SERVE_RULES,
                                          WIDE_DP_RULES, Topology,
-                                         abstract_params, param_shardings,
-                                         is_spec)
+                                         abstract_params, param_shardings)
     from repro.serving.decode import (cache_abstract, cache_shardings,
                                       make_decode_step, make_prefill)
     from repro.train.step import TrainHparams, make_train_step

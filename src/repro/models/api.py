@@ -3,7 +3,6 @@ from __future__ import annotations
 
 from typing import Any, Dict
 
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import mamba2, transformer, whisper, zamba

@@ -10,8 +10,6 @@ this jnp version is its oracle and the dry-run lowering path.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

@@ -12,11 +12,10 @@ on-chip; this jnp version is its oracle and the dry-run lowering path.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from repro.configs.base import ModelConfig

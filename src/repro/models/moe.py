@@ -21,7 +21,6 @@ same code shape: sort by destination, position-within-destination, scatter.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ stays O(1) in depth.  Remat wraps the group body.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

@@ -14,9 +14,7 @@ learned 448-position table, so the assigned 4k/32k shapes are well-defined.
 """
 from __future__ import annotations
 
-from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 from jax import lax

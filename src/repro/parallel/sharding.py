@@ -12,7 +12,7 @@ schedule, the moral equivalent of Storm's pre-established RC connections.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -21,9 +21,8 @@ KV append for the new token is a one-sided WRITE at a static offset
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,7 @@ from repro.models import layers as L
 from repro.models import mamba2 as M
 from repro.models.embedding import embed_lookup
 from repro.models.moe import moe_ffn
-from repro.models.transformer import RunOptions, _maybe_remat
+from repro.models.transformer import RunOptions
 from repro.parallel.sharding import Topology
 
 

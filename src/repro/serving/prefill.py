@@ -6,8 +6,6 @@ the last position only, (c) no remat.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +16,6 @@ from repro.configs.base import ModelConfig
 from repro.models import layers as L
 from repro.models import mamba2 as M
 from repro.models.embedding import embed_lookup
-from repro.models.moe import moe_ffn
 from repro.models.transformer import RunOptions, ffn_block
 from repro.parallel.sharding import Topology
 from repro.serving.decode import kv_mode, _kv_axes

@@ -4,8 +4,7 @@ of (state, batch) so jit donation keeps buffers in place."""
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,7 @@ from repro.configs.base import ModelConfig
 from repro.models import api
 from repro.models.transformer import RunOptions
 from repro.optim.adamw import AdamWConfig, apply_updates, init_opt_state, opt_state_specs
-from repro.parallel.sharding import ParamSpec, Topology, init_params, is_spec
+from repro.parallel.sharding import Topology, init_params, is_spec
 from repro.train.loss import lm_loss
 
 

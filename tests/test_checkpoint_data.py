@@ -1,11 +1,7 @@
 """Checkpoint atomicity + elastic restore + data-pipeline determinism."""
-import pathlib
-import shutil
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import ShapeConfig

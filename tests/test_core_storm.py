@@ -1,6 +1,5 @@
 """Storm dataplane behaviour tests: slots, regions, transport routing,
 one-sided ops, RPC handlers, hybrid lookups, OCC transactions."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

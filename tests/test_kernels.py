@@ -1,8 +1,6 @@
 """Pallas kernel validation: interpret-mode execution vs pure-jnp oracles,
 swept over shapes/dtypes, + hypothesis property tests."""
-import functools
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,0 +1,162 @@
+"""Tests for the NIC connection-state subsystem (core/nic) and its threading
+through the transport's wire accounting: the paper's Fig. 7 numbers must
+emerge from the shared model, and every WireStats must carry the modeled
+NIC-cache hit rate of the connection mode it ran under."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nic as qn
+from repro.core import onesided as osd
+from repro.core import slots as sl
+from repro.core import txloop as txl
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport, WireStats
+
+
+# ---------------------------------------------------------------------------
+# The model itself (paper Fig. 7 anchor points)
+# ---------------------------------------------------------------------------
+def test_rc_exclusive_rack_scale_stays_cached():
+    """32 nodes / 10 threads: QP state fits the NIC cache (>= 99% hit)."""
+    ct = qn.ConnTable(n_nodes=32, threads=10, mode=qn.RC_EXCLUSIVE)
+    assert ct.conns_per_node == 2 * 32 * 10
+    assert ct.cache_hit >= 0.99
+    assert ct.penalty_us_per_op == pytest.approx(0.0, abs=1e-9)
+
+
+def test_rc_exclusive_beyond_rack_drops_like_fig7():
+    """96 nodes / 20 threads: the modeled throughput drops ~1.57x (the
+    paper's Fig. 7 number), entirely from NIC-cache misses of QP state."""
+    import sys
+    import pathlib
+    bench_dir = str(pathlib.Path(__file__).resolve().parents[1] / "benchmarks")
+    sys.path.insert(0, bench_dir)
+    try:
+        from common import modeled_throughput_per_node
+    finally:
+        # don't leave benchmarks/ shadowing generic module names (common,
+        # run, ...) for the rest of the pytest session
+        sys.path.remove(bench_dir)
+
+    def mops(m):
+        ct = qn.ConnTable(n_nodes=m, threads=20, mode=qn.RC_EXCLUSIVE)
+        return modeled_throughput_per_node(
+            reads_per_op=1.0, rpcs_per_op=0.0, wire_bytes_per_op=140,
+            lanes=32, nic=ct)
+
+    ct96 = qn.ConnTable(n_nodes=96, threads=20, mode=qn.RC_EXCLUSIVE)
+    assert ct96.cache_hit < 0.75           # 1.4 MiB of QP state vs 1 MiB cache
+    drop = mops(32) / mops(96)
+    assert 1.45 < drop < 1.70, drop        # paper: 1.57x
+
+
+def test_dct_state_independent_of_node_count():
+    for t in (1, 10, 20):
+        sizes = {qn.ConnTable(n_nodes=m, threads=t, mode=qn.DCT).state_bytes
+                 for m in (2, 32, 96, 128, 1024)}
+        assert len(sizes) == 1             # O(1) in cluster size
+        assert qn.ConnTable(n_nodes=2, threads=t, mode=qn.DCT).cache_hit == 1.0
+
+
+def test_sharing_reduces_state_t_fold():
+    ex = qn.ConnTable(n_nodes=96, threads=20, mode=qn.RC_EXCLUSIVE)
+    sh = qn.ConnTable(n_nodes=96, threads=20, mode=qn.RC_SHARED)
+    assert ex.conns_per_node == 20 * sh.conns_per_node
+    assert sh.cache_hit == 1.0
+    # sharing is NOT free: it pays a per-op synchronization cost that grows
+    # with the number of sharers
+    sh2 = qn.ConnTable(n_nodes=96, threads=2, mode=qn.RC_SHARED)
+    assert sh.mode_cost_us > sh2.mode_cost_us > 0.0
+
+
+def test_guideline_rc_wins_in_rack_sharing_wins_beyond():
+    """The paper's §3.4 guideline, straight from the model."""
+    def pen(m, mode):
+        return qn.ConnTable(n_nodes=m, threads=20, mode=mode).penalty_us_per_op
+    # inside the rack: exclusive RC is penalty-free, the others pay their cost
+    assert pen(32, qn.RC_EXCLUSIVE) < pen(32, qn.RC_SHARED)
+    assert pen(32, qn.RC_EXCLUSIVE) < pen(32, qn.DCT)
+    # beyond the rack: exclusive RC pays PCIe fetches dwarfing both
+    assert pen(96, qn.RC_EXCLUSIVE) > 5 * pen(96, qn.RC_SHARED)
+    assert pen(96, qn.RC_EXCLUSIVE) > 5 * pen(96, qn.DCT)
+
+
+def test_conn_table_validation():
+    with pytest.raises(ValueError):
+        qn.ConnTable(n_nodes=4, threads=2, mode="rc_bogus")
+    with pytest.raises(ValueError):
+        qn.ConnTable(n_nodes=0, threads=2)
+
+
+# ---------------------------------------------------------------------------
+# Threading through the wire accounting
+# ---------------------------------------------------------------------------
+def test_wirestats_carries_conn_table_and_stays_additive():
+    t = SimTransport(2)
+    arenas = jnp.arange(2 * 64, dtype=jnp.uint32).reshape(2, 64)
+    dest = jnp.zeros((2, 4), jnp.int32)
+    offs = jnp.zeros((2, 4), jnp.uint32)
+    ct = qn.ConnTable(n_nodes=96, threads=20, mode=qn.RC_EXCLUSIVE)
+    _, _, s1 = osd.remote_read(t, arenas, dest, offs, length=2, nic=ct)
+    assert float(s1.nic_hit_rate) == pytest.approx(ct.cache_hit, abs=1e-6)
+    assert float(s1.nic_penalty_us_per_op) == pytest.approx(
+        ct.penalty_us_per_op, abs=1e-6)
+    # no ConnTable -> perfect NIC (hit 1, penalty 0), including for zero()
+    _, _, s0 = osd.remote_read(t, arenas, dest, offs, length=2)
+    assert float(s0.nic_hit_rate) == 1.0
+    assert float(s0.nic_penalty_us_per_op) == 0.0
+    z = WireStats.zero()
+    assert float(z.nic_hit_rate) == 1.0 and float(z.nic_penalty_us_per_op) == 0.0
+    # additivity: summed stats report the ops-weighted mixture
+    mix = s1 + s1 + s0
+    w = 2 * float(s1.ops) * ct.cache_hit + float(s0.ops)
+    assert float(mix.nic_hit_rate) == pytest.approx(
+        w / float(mix.ops), abs=1e-6)
+
+
+def test_tx_loop_reports_mode_hit_rate_without_changing_protocol():
+    """Threading a ConnTable through the whole OCC loop changes ONLY the
+    modeled NIC metrics — committed state, abort causes and wire counts are
+    bit-identical (the model prices the transport, it does not alter it)."""
+    n_nodes, lanes = 2, 6
+    cfg = ht.HashTableConfig(n_nodes=n_nodes, n_buckets=32, bucket_width=1,
+                             n_overflow=16, max_chain=4)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(n_nodes)
+    state = ht.init_cluster_state(cfg)
+    rng = np.random.RandomState(0)
+    rk = jnp.asarray(rng.randint(0, 2**31, (n_nodes, lanes, 1, 2)), jnp.uint32)
+    wk = jnp.asarray(rng.randint(0, 2**31, (n_nodes, lanes, 1, 2)), jnp.uint32)
+    wv = jnp.ones((n_nodes, lanes, 1, sl.VALUE_WORDS), jnp.uint32)
+    ct = qn.ConnTable(n_nodes=128, threads=20, mode=qn.RC_EXCLUSIVE)
+
+    run = lambda nic: txl.tx_loop(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        max_rounds=2, nic=nic)
+    st_a, _, res_a = run(None)
+    st_b, _, res_b = run(ct)
+    jax.tree.map(np.testing.assert_array_equal, st_a, st_b)
+    np.testing.assert_array_equal(np.asarray(res_a.committed),
+                                  np.asarray(res_b.committed))
+    for f in ("round_trips", "messages", "ops", "req_bytes", "reply_bytes"):
+        assert float(getattr(res_a.metrics.wire, f)) == \
+            float(getattr(res_b.metrics.wire, f))
+    assert float(res_a.metrics.wire.nic_penalty_us) == 0.0
+    assert float(res_b.metrics.wire.nic_hit_rate) == pytest.approx(
+        ct.cache_hit, abs=1e-4)
+    assert float(res_b.metrics.wire.nic_penalty_us) > 0.0
+
+
+def test_cost_model_fabric_with_nic():
+    from repro.core import cost_model as cm
+    ct = qn.ConnTable(n_nodes=96, threads=20, mode=qn.RC_EXCLUSIVE)
+    fab = cm.Fabric().with_nic(ct)
+    assert fab.nic_penalty_s == pytest.approx(ct.penalty_us_per_op * 1e-6)
+    # a congested NIC shifts the one-sided-vs-RPC break-even: with enough
+    # rounds on the one-sided side, penalties favour the single-round RPC
+    base = cm.choose(1000.0, 1000.0, onesided_rounds=4.0, rpc_rounds=1.0)
+    cong = cm.choose(1000.0, 1000.0, onesided_rounds=4.0, rpc_rounds=1.0,
+                     fabric=fab)
+    assert cong.onesided_time - cong.rpc_time > base.onesided_time - base.rpc_time

@@ -4,10 +4,8 @@ Runs under real hypothesis when installed; otherwise falls back to the
 fixed-sample stub in repro.testing so collection never dies and the
 invariants keep being exercised (`pytest.importorskip` would silently drop
 this whole suite on the container image, which has no hypothesis)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

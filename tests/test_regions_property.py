@@ -1,0 +1,133 @@
+"""Property tests for core/regions: the paged (MTT-walk) and flat
+(physical-segment) addressing modes must be observationally identical, and
+the region bounds check (the MPT's protection role) must reject out-of-region
+access in BOTH modes.
+
+Runs under real hypothesis when installed; otherwise falls back to the
+fixed-sample stub in repro.testing (same idiom as test_property_storm)."""
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from repro.testing.hypothesis_stub import given, settings, st
+
+from repro.core import regions as rg
+
+PAGE_WORDS = 16   # small pages so offsets cross page boundaries often
+
+
+def _setup(total_words, seed, permute_pages=False):
+    """An arena filled with distinct words + paged/flat modes.  When
+    `permute_pages`, the page table is a random permutation and the paged
+    arena's physical pages are laid out to match, so logical reads through
+    the two modes must still agree (proves the translation is honoured,
+    not a no-op)."""
+    rng = np.random.RandomState(seed)
+    flat = jnp.asarray(rng.randint(0, 2**31, total_words), jnp.uint32)
+    mode = rg.AddressMode(kind="paged", page_words=PAGE_WORDS)
+    pt = mode.make_page_table(total_words)
+    paged_arena = flat
+    if permute_pages:
+        perm = rng.permutation(len(pt))
+        pt = jnp.asarray(perm, jnp.uint32)
+        # physical page perm[i] must hold logical page i
+        phys = np.zeros(len(pt) * PAGE_WORDS, np.uint32)
+        for logical, physical in enumerate(perm):
+            phys[physical * PAGE_WORDS:(physical + 1) * PAGE_WORDS] = \
+                np.asarray(flat)[logical * PAGE_WORDS:(logical + 1) * PAGE_WORDS]
+        paged_arena = jnp.asarray(phys)
+    return flat, paged_arena, mode, pt
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    n_offsets=st.integers(1, 12),
+    length=st.integers(1, 8),
+    permute=st.booleans(),
+    seed=st.integers(0, 1000),
+)
+def test_paged_flat_reads_identical(n_offsets, length, permute, seed):
+    total = 16 * PAGE_WORDS
+    flat, paged_arena, mode, pt = _setup(total, seed, permute_pages=permute)
+    rng = np.random.RandomState(seed + 1)
+    offs = jnp.asarray(rng.randint(0, total - length + 1, n_offsets), jnp.uint32)
+    out_flat = rg.arena_read(flat, offs, length)
+    out_paged = rg.arena_read(paged_arena, offs, length, mode=mode, page_table=pt)
+    np.testing.assert_array_equal(np.asarray(out_flat), np.asarray(out_paged))
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    n_offsets=st.integers(1, 12),
+    length=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+def test_paged_flat_writes_identical(n_offsets, length, seed):
+    total = 16 * PAGE_WORDS
+    rng = np.random.RandomState(seed + 2)
+    base = jnp.asarray(rng.randint(0, 2**31, total), jnp.uint32)
+    mode = rg.AddressMode(kind="paged", page_words=PAGE_WORDS)
+    pt = mode.make_page_table(total)   # identity: same physical layout
+    # non-overlapping writes (each offset its own length-aligned stripe) so
+    # both modes see the same final state regardless of scatter order
+    starts = rng.choice(total // length, size=min(n_offsets, total // length),
+                        replace=False) * length
+    offs = jnp.asarray(starts, jnp.uint32)
+    vals = jnp.asarray(rng.randint(0, 2**31, (len(starts), length)), jnp.uint32)
+    out_flat = rg.arena_write(base, offs, vals)
+    out_paged = rg.arena_write(base, offs, vals, mode=mode, page_table=pt)
+    np.testing.assert_array_equal(np.asarray(out_flat), np.asarray(out_paged))
+    # and the writes actually landed
+    got = rg.arena_read(out_flat, offs, length)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(vals))
+
+
+@settings(max_examples=16, deadline=None)
+@given(
+    length=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+def test_out_of_region_rejected_both_modes(length, seed):
+    """Accesses outside the registered region are rejected identically in
+    flat and paged modes: reads come back zeros, writes leave the arena
+    untouched — never a leak into the neighbouring region."""
+    total = 16 * PAGE_WORDS
+    table = rg.RegionTable()
+    lo = table.register("lo", 4 * PAGE_WORDS)
+    hi = table.register("hi", 12 * PAGE_WORDS)
+    assert table.total_words == total and hi.base == lo.end
+    flat, paged_arena, mode, pt = _setup(total, seed)
+    rng = np.random.RandomState(seed + 3)
+    inside = rng.randint(lo.base, lo.end - length + 1, 4)
+    straddle = np.asarray([lo.end - min(length - 1, 1), lo.end - 1])
+    # huge offsets whose uint32 `off + length` wraps around to a small value
+    # must NOT sneak past the bounds check (the MPT is not fooled by wrap)
+    wrap = np.asarray([2**32 - 1, 2**32 - max(length - 1, 1)], np.int64)
+    outside = rng.randint(lo.end, total - length + 1, 4)
+    offs = jnp.asarray(np.concatenate([inside, straddle, outside, wrap]),
+                       jnp.uint32)
+    ok = np.asarray(rg.in_region(lo, offs, length))
+    assert ok[:4].all() and not ok[6:].any()
+    if length > 1:
+        assert not ok[4:6].any()     # straddling the boundary is rejected
+
+    for arena, kw in ((flat, {}),
+                      (paged_arena, dict(mode=mode, page_table=pt))):
+        out = np.asarray(rg.arena_read(arena, offs, length, region=lo, **kw))
+        # rejected lanes read zeros; accepted lanes read real data
+        assert (out[~ok] == 0).all()
+        np.testing.assert_array_equal(
+            out[ok], np.asarray(rg.arena_read(arena, offs[ok], length, **kw)))
+
+        vals = jnp.asarray(rng.randint(1, 2**31, (len(offs), length)), jnp.uint32)
+        new = np.asarray(rg.arena_write(arena, offs, vals, region=lo, **kw))
+        # out-of-region words are untouched (modulo in-region lanes' writes)
+        touched = np.zeros(total, bool)
+        for o in np.asarray(offs)[ok]:
+            idx = np.arange(o, o + length)
+            if kw:
+                idx = np.asarray(mode.translate(pt, jnp.asarray(idx, jnp.uint32)))
+            touched[idx] = True
+        np.testing.assert_array_equal(new[~touched], np.asarray(arena)[~touched])

@@ -1,13 +1,12 @@
 """Per-architecture smoke tests: instantiate a REDUCED same-family config,
 run one forward + one train step on CPU, assert shapes + finiteness."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, ShapeConfig
+from repro.configs import ShapeConfig
 from repro.configs.registry import ARCHS
 from repro.data.pipeline import DataConfig, synthetic_batch
 from repro.models import api

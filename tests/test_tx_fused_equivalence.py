@@ -10,7 +10,6 @@ import numpy as np
 import pytest
 
 from repro.core import rpc as R
-from repro.core import slots as sl
 from repro.core import tx as txm
 from repro.core.datastructs import hashtable as ht
 from repro.core.transport import SimTransport
