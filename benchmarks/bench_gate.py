@@ -8,7 +8,12 @@ Collects the protocol's headline numbers into a JSON snapshot:
   * ``tx_latency_us`` — the modeled unloaded transaction latencies of the
     three schedules (table5);
   * ``mops_node`` — modeled Mops/node per connection mode at 32 and 96
-    emulated nodes, 20 threads (the core/nic model conn_scaling sweeps).
+    emulated nodes, 20 threads (the core/nic model conn_scaling sweeps);
+  * ``replication`` — the SAME workload at replication factor f=1:
+    ``round_trips_f1`` (must equal the f=0 round trips — backup writes ride
+    the commit fused round, and any increase fails the gate),
+    ``wire_bytes_tx_f1`` and modeled Mtx/node per connection mode at 96
+    emulated nodes, so a PR can't silently make replication more expensive.
 
 CI runs this twice: ``--out BENCH_PR.json`` on the PR (uploaded as an
 artifact) and compares against the checked-in ``BENCH_BASELINE.json``:
@@ -56,16 +61,31 @@ def _tx_smoke():
         t, st, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
         max_rounds=max_rounds))(state)
     rounds_attempted = int((np.asarray(res.round_attempts) > 0).sum())
+
+    # the same workload with one backup copy per record (f=1)
+    from repro.core.replication import ReplicaConfig
+    rep = ReplicaConfig(n_nodes, 1)
+    _, _, res1 = jax.jit(lambda st: txl.tx_loop(
+        t, st, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        max_rounds=max_rounds, rep=rep))(state)
+    n_tx = n_nodes * lanes
     return dict(
         round_trips=float(res.round_trips),
         rt_round=float(res.round_trips) / max(rounds_attempted, 1),
         commit_rate=float(jnp.mean(res.committed)),
-        wire_bytes_tx=float(res.metrics.wire.total_bytes) / (n_nodes * lanes),
+        wire_bytes_tx=float(res.metrics.wire.total_bytes) / n_tx,
+        f1=dict(
+            round_trips=float(res1.round_trips),
+            bytes_tx=float(res1.metrics.wire.total_bytes) / n_tx,
+            ops_tx=float(res1.metrics.wire.ops) / n_tx,
+            commit_rate=float(jnp.mean(res1.committed)),
+        ),
     )
 
 
 def collect() -> dict:
     import conn_scaling
+    import replication_cost
     import table5_latency
     from repro.core import nic as qn
 
@@ -74,6 +94,16 @@ def collect() -> dict:
         mops[mode] = {str(m): round(conn_scaling.modeled(m, 20, mode)[0], 4)
                       for m in (32, 96)}
     tx = _tx_smoke()
+    f1 = tx["f1"]
+    # structural invariant, checked at collect time so a PR that un-fuses the
+    # backup writes fails BEFORE any baseline comparison
+    assert f1["round_trips"] == tx["round_trips"], \
+        f"f=1 must add zero exchange rounds ({f1['round_trips']} vs " \
+        f"{tx['round_trips']})"
+    mops_f1 = {mode: round(replication_cost.modeled_mtx(
+        dict(bytes_tx=f1["bytes_tx"], ops_tx=f1["ops_tx"]), 1,
+        qn.ConnTable(n_nodes=96, threads=20, mode=mode)), 4)
+        for mode in qn.MODES}
     return {
         "round_trips": tx["round_trips"],
         "rt_round": round(tx["rt_round"], 4),
@@ -82,6 +112,12 @@ def collect() -> dict:
         "tx_latency_us": {k: round(v, 4)
                           for k, v in table5_latency.modeled_tx_latencies().items()},
         "mops_node": mops,
+        "replication": {
+            "round_trips_f1": f1["round_trips"],
+            "wire_bytes_tx_f1": round(f1["bytes_tx"], 2),
+            "commit_rate_f1": round(f1["commit_rate"], 4),
+            "mops_node_f1": mops_f1,
+        },
     }
 
 
@@ -102,6 +138,29 @@ def compare(pr: dict, base: dict) -> list[str]:
             if p is None or p < b * TPUT_TOL:
                 fails.append(f"mops_node.{mode}.{m} regressed: {b} -> {p} "
                              f"(<{TPUT_TOL:.0%} of baseline)")
+    rb = base.get("replication")
+    if rb is not None:
+        rp = pr.get("replication") or {}
+        if rp.get("round_trips_f1") is None or \
+                rp["round_trips_f1"] > rb["round_trips_f1"]:
+            fails.append(f"replication.round_trips_f1 increased: "
+                         f"{rb['round_trips_f1']} -> "
+                         f"{rp.get('round_trips_f1')} (any increase fails)")
+        p = rp.get("commit_rate_f1")
+        if p is None or p < rb["commit_rate_f1"]:
+            fails.append(f"replication.commit_rate_f1 dropped: "
+                         f"{rb['commit_rate_f1']} -> {p} (any drop fails: "
+                         f"the gate workload is deterministic)")
+        p = rp.get("wire_bytes_tx_f1")
+        if p is None or p > rb["wire_bytes_tx_f1"] * LAT_TOL:
+            fails.append(f"replication.wire_bytes_tx_f1 regressed: "
+                         f"{rb['wire_bytes_tx_f1']} -> {p} "
+                         f"(>{LAT_TOL:.0%} of baseline)")
+        for mode, b in rb["mops_node_f1"].items():
+            p = rp.get("mops_node_f1", {}).get(mode)
+            if p is None or p < b * TPUT_TOL:
+                fails.append(f"replication.mops_node_f1.{mode} regressed: "
+                             f"{b} -> {p} (<{TPUT_TOL:.0%} of baseline)")
     return fails
 
 

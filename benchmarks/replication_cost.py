@@ -1,0 +1,178 @@
+"""Replication cost: what does surviving f node losses cost the dataplane?
+
+Sweeps the replication factor f ∈ {0, 1, 2} over the SAME fixed OCC workload
+(`common.make_tx_workload`, the one the bench gate snapshots) and reports,
+per f:
+
+  * exchange round trips — asserted IDENTICAL across f: backup writes ride
+    the commit fused round as extra traffic classes
+    (`tx.commit_or_abort`), so replication adds ZERO rounds to the fast
+    path, only a wider commit fan-out;
+  * wire cost — ops/tx, bytes/tx and coalesced messages/tx, which DO grow
+    with f (the extra (src, dst) pairs `transport.wire_for_classes` prices);
+  * modeled Mtx/node per connection mode at the emulated 96-node scale (the
+    `nic.ConnTable` model prices the fan-out's per-op connection-state
+    penalty) — the replication × connection-mode trade-off in one table.
+
+f = 0 is asserted bit-identical to a run with no ReplicaConfig at all
+(commit mask, wire ops, bytes, round trips) — the equivalence the test suite
+(`tests/test_replication.py`) checks slot-by-slot.
+
+A failure-injection section then populates THROUGH the replicated commit
+path, kills a node (`replication.kill_node`), scorches its arena, and
+re-reads every key via `replication.failover_lookup`: all reads must be
+served by the surviving replicas.
+
+    PYTHONPATH=src python benchmarks/replication_cost.py [--smoke]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import (csv_line, make_tx_workload, modeled_throughput_per_node,
+                    time_jit)
+from repro.core import nic as qn
+from repro.core import replication as repl
+from repro.core import slots as sl
+from repro.core import txloop as txl
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport
+from repro.testing.workloads import value_for
+
+SIM_NODES = 4
+LANES = 32          # modeled pipeline depth (conn_scaling's)
+EMULATED = (32, 96)
+
+
+def run_f(t, cfg, layout, base_state, rk, wk, wv, rep, *, max_rounds=2,
+          nic=None):
+    @jax.jit
+    def fn(state):
+        st, _, res = txl.tx_loop(t, state, cfg, layout, read_keys=rk,
+                                 write_keys=wk, write_values=wv,
+                                 max_rounds=max_rounds, rep=rep, nic=nic)
+        return st, res
+
+    (st, res), dt = time_jit(fn, base_state, iters=1)
+    return st, res, dt
+
+
+def sweep_f(*, lanes: int, smoke: bool):
+    cfg = ht.HashTableConfig(n_nodes=SIM_NODES, n_buckets=256, bucket_width=1,
+                             n_overflow=64, max_chain=8)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(SIM_NODES)
+    state = ht.init_cluster_state(cfg)
+    state, rk, wk, wv = make_tx_workload(t, cfg, layout, state, lanes=lanes,
+                                         n_keys=64, seed=5)
+    n_tx = SIM_NODES * lanes
+
+    _, res_none, _ = run_f(t, cfg, layout, state, rk, wk, wv, rep=None)
+    rows = {}
+    for f in (0, 1, 2):
+        rep = repl.ReplicaConfig(SIM_NODES, f)
+        _, res, dt = run_f(t, cfg, layout, state, rk, wk, wv, rep=rep)
+        w = res.metrics.wire
+        row = dict(
+            round_trips=float(res.round_trips),
+            ops_tx=float(w.ops) / n_tx,
+            bytes_tx=float(w.total_bytes) / n_tx,
+            msgs_tx=float(w.messages) / n_tx,
+            commit_rate=float(jnp.mean(res.committed)),
+        )
+        rows[f] = row
+        csv_line(f"replication/f{f}", dt / n_tx * 1e6,
+                 f"round_trips={row['round_trips']:.0f};"
+                 f"ops_tx={row['ops_tx']:.2f};bytes_tx={row['bytes_tx']:.0f};"
+                 f"msgs_tx={row['msgs_tx']:.2f};"
+                 f"commit_rate={row['commit_rate']:.3f}")
+
+    # --- invariants the PR's acceptance criteria pin ------------------------
+    w0, wn = rows[0], res_none.metrics.wire
+    assert rows[0]["round_trips"] == float(res_none.round_trips)
+    assert w0["ops_tx"] == float(wn.ops) / n_tx \
+        and w0["bytes_tx"] == float(wn.total_bytes) / n_tx, \
+        "f=0 must be bit-identical to the unreplicated dataplane"
+    for f in (1, 2):
+        assert rows[f]["round_trips"] == rows[0]["round_trips"], \
+            f"f={f} must add ZERO exchange rounds (got {rows[f]['round_trips']} " \
+            f"vs {rows[0]['round_trips']})"
+        assert rows[f]["ops_tx"] > rows[f - 1]["ops_tx"]
+        assert rows[f]["bytes_tx"] > rows[f - 1]["bytes_tx"]
+    print(f"# f=1 adds 0 exchange rounds, "
+          f"+{rows[1]['bytes_tx'] - rows[0]['bytes_tx']:.0f} bytes/tx; "
+          f"f=2 +{rows[2]['bytes_tx'] - rows[0]['bytes_tx']:.0f} bytes/tx")
+
+    # --- replication x connection-mode: modeled Mtx/node at emulated scale --
+    modes = (qn.RC_EXCLUSIVE, qn.DCT) if smoke else qn.MODES
+    for m in EMULATED[-1:] if smoke else EMULATED:
+        for mode in modes:
+            ct = qn.ConnTable(n_nodes=m, threads=20, mode=mode)
+            for f in (0, 1, 2):
+                mops = modeled_mtx(rows[f], f, ct)
+                csv_line(f"replication/model/{mode}/m{m}/f{f}", 1.0 / mops,
+                         f"modeled_Mtx_node={mops:.2f};"
+                         f"penalty_us_op={ct.penalty_us_per_op:.4f}")
+    return rows
+
+
+def modeled_mtx(row, f: int, ct) -> float:
+    """Modeled Mtx/node: the per-tx protocol profile (2 one-sided exchanges,
+    2 + f RPC-class exchanges — the commit round fans out to f extra
+    destinations) priced with the measured wire bytes and the connection
+    mode's per-op penalty applied to every delivered request."""
+    return modeled_throughput_per_node(
+        reads_per_op=2.0, rpcs_per_op=2.0 + f,
+        wire_bytes_per_op=row["bytes_tx"], lanes=LANES,
+        extra_cpu_us_per_op=ct.penalty_us_per_op * row["ops_tx"])
+
+
+def failover_section(*, lanes: int):
+    cfg = ht.HashTableConfig(n_nodes=SIM_NODES, n_buckets=256, bucket_width=1,
+                             n_overflow=64, max_chain=8)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(SIM_NODES)
+    state = ht.init_cluster_state(cfg)
+    rng = np.random.RandomState(17)
+    klo = jnp.asarray(rng.randint(0, 2**31, (SIM_NODES, lanes, 1)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (SIM_NODES, lanes, 1)), jnp.uint32)
+    wv = value_for(klo + jnp.uint32(7))
+    rep = repl.ReplicaConfig(SIM_NODES, 1)
+    state, _, res = txl.tx_loop(
+        t, state, cfg, layout,
+        read_keys=jnp.zeros((SIM_NODES, lanes, 0, 2), jnp.uint32),
+        write_keys=jnp.stack([klo, khi], -1), write_values=wv,
+        max_rounds=4, rep=rep)
+    assert bool(np.asarray(res.committed).all())
+
+    dead = 1
+    alive = repl.kill_node(repl.all_alive(SIM_NODES), dead)
+    state = dict(state, arena=state["arena"].at[dead].set(jnp.uint32(0xDEAD)))
+    out = repl.failover_lookup(t, state, klo[..., 0], khi[..., 0], cfg,
+                               layout, rep, alive)
+    found = np.asarray(out["found"])
+    home = np.asarray(ht.home_of(cfg, klo[..., 0], khi[..., 0])[0])
+    n_failover = int((home == dead).sum())
+    assert found.all(), "reads must fail over to the backup copies"
+    np.testing.assert_array_equal(
+        np.asarray(out["value"]),
+        np.asarray(wv.reshape(SIM_NODES, lanes, sl.VALUE_WORDS)))
+    w = out["wire"]
+    csv_line("replication/failover", 0.0,
+             f"killed_node={dead};keys={found.size};rerouted={n_failover};"
+             f"found_rate={found.mean():.3f};"
+             f"ops={float(w.ops):.0f};round_trips={float(w.round_trips):.0f}")
+
+
+def main(*, smoke: bool = False):
+    lanes = 8 if smoke else 16
+    sweep_f(lanes=lanes, smoke=smoke)
+    failover_section(lanes=lanes)
+
+
+if __name__ == "__main__":
+    import sys
+    print("name,us_per_call,derived")
+    main(smoke="--smoke" in sys.argv)

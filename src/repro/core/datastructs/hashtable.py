@@ -372,8 +372,14 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         bump_alloc = bump_alloc | (lock_ins & ~f["has_free"])
         out_aux = jnp.where(is_lock & (lock_ok | lock_ins),
                             jnp.where(lock_ok, f["slot_idx"], ins_idx), out_aux)
-        # version + current value at lock time (read-for-update, Fig. 3)
-        out_ver = jnp.where(is_lock, sl.slot_version(slot), out_ver)
+        # version + current value at lock time (read-for-update, Fig. 3).
+        # Lock-inserts report the (even) base version the placeholder was
+        # built on, so the client can predict the committed version of EVERY
+        # lock it holds as (version | 1) + 1 — what prices the byte-identical
+        # backup install (replication.committed_version).
+        out_ver = jnp.where(is_lock,
+                            jnp.where(f["found"], sl.slot_version(slot), ins_ver),
+                            out_ver)
         out_val = jnp.where(is_lock & lock_ok, sl.slot_value(slot), out_val)
 
         # ---- COMMIT_UNLOCK / ABORT_UNLOCK (direct slot addressing) ---------
@@ -410,6 +416,34 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         status = jnp.where(is_rdv, jnp.uint32(R.ST_OK), status)
         out_aux = jnp.where(is_rdv, aux, out_aux)
         out_ver = jnp.where(is_rdv, sl.slot_version(vslot), out_ver)
+
+        # ---- BACKUP_WRITE (primary-backup replication) ---------------------
+        # record: [op, key_lo, key_hi, aux = committed version, value...].
+        # Installs the primary's exact committed image — key, version, lock=0,
+        # value — on THIS node's table; only next_ptr (per-table chain
+        # metadata) is local.  The version comes from the committing client
+        # (replication.committed_version), so every copy of a record carries
+        # the SAME version word and reads can fail over without OCC anomalies
+        # (a stale copy can never alias the current one: key+version differ).
+        # Backup copies are never LOCKed (locks target the primary), so there
+        # is no locked_other arm here.
+        is_bkw = op == R.OP_BACKUP_WRITE
+        bk_upd = sl.pack_slot(key_lo, key_hi, aux, 0, sl.slot_next(slot), val)
+        bk_ins = sl.pack_slot(key_lo, key_hi, aux, 0, ins_next, val)
+        status = jnp.where(is_bkw, jnp.where(
+            f["found"] | ins_possible, R.ST_OK, R.ST_NO_SPACE).astype(jnp.uint32),
+            status)
+        wr_bk_upd = is_bkw & f["found"]
+        wr_bk_ins = is_bkw & ~f["found"] & ins_possible
+        do_write = do_write | wr_bk_upd | wr_bk_ins
+        write_idx = jnp.where(wr_bk_upd, f["slot_idx"], write_idx)
+        write_slot = jnp.where(wr_bk_upd, bk_upd, write_slot)
+        write_idx = jnp.where(wr_bk_ins, ins_idx, write_idx)
+        write_slot = jnp.where(wr_bk_ins, bk_ins, write_slot)
+        link_tail = link_tail | (wr_bk_ins & ~f["has_free"])
+        bump_alloc = bump_alloc | (wr_bk_ins & ~f["has_free"])
+        out_aux = jnp.where(wr_bk_upd | wr_bk_ins, write_idx, out_aux)
+        out_ver = jnp.where(is_bkw, aux, out_ver)
 
         # ---- apply ----------------------------------------------------------
         do_write = do_write & valid & ~is_nop

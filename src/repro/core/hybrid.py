@@ -14,6 +14,13 @@ Modes reproduce the paper's configurations:
   * use_onesided=False           -> "Storm" (RPC-only baseline in Fig. 4)
   * use_onesided=True            -> "Storm(oversub)" one-two-sided
   * use_onesided=True + cache    -> toward "Storm(perfect)" (address caching)
+
+Public API: ``hybrid_lookup`` (the whole Algorithm 1), and its split halves
+``onesided_probe`` / ``merge_rpc_fallback`` / ``update_lookup_cache`` (used
+by tx's fused schedule to ride the RPC fallback on the LOCK round), plus
+``HybridMetrics``.  Invariant: a lookup dropped by send-queue back-pressure
+reports ``overflow`` — found=False then means "not delivered", never "key
+absent", and transactional callers must abort-and-retry it.
 """
 from __future__ import annotations
 

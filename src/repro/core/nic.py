@@ -42,6 +42,14 @@ threads) point; the protocol stack threads it through ``wire_for`` /
 ``wire_for_classes`` so every :class:`~repro.core.transport.WireStats`
 carries the modeled NIC-cache hit rate and per-op penalty of the transport
 configuration it ran under.
+
+Public API: ``NicModel`` (calibration constants), ``ConnTable``
+(``conns_per_node`` / ``state_bytes`` / ``cache_hit`` /
+``penalty_us_per_op`` / ``describe``), the mode names ``RC_EXCLUSIVE`` /
+``RC_SHARED`` / ``DCT`` (``MODES``) and the ``sweep`` generator.  Invariant:
+a ``nic=ConnTable`` threaded through any dataplane call PRICES the transport
+— protocol results are bit-identical with and without it
+(tests/test_nic_model.py).
 """
 from __future__ import annotations
 

@@ -1,0 +1,207 @@
+"""Primary-backup replication of the commit dataplane (toward the ROADMAP's
+production north star; protocol shape follows FaRM-style COMMIT-BACKUP riding
+Storm's fused exchange rounds — cf. Aguilera et al., *The Impact of RDMA on
+Agreement*, on driving replication with one-sided-style primitives).
+
+A record's PRIMARY copy lives on its hash-designated home node (Storm §5.5,
+``hashtable.home_of``).  With a replication factor ``f`` > 0, every COMMIT
+also installs the write set on ``f`` BACKUP nodes so the cluster survives the
+loss of up to ``f`` nodes:
+
+  * **Placement** is deterministic over the node ring:
+    ``replica_of(primary, i) = (primary + i) mod n_nodes`` for i in 0..f
+    (i = 0 is the primary itself).  Because the rotation is a bijection on
+    destinations, each backup traffic class sends AT MOST as many records to
+    any one destination as the commit class sends to the corresponding
+    primary — so a commit round that fits the per-destination send budget
+    fits its backup fan-out too (see ``tx.commit_or_abort``).
+  * **Backup writes ride the commit round**: they are extra traffic classes
+    in the SAME ``roundsched.fused_round`` as COMMIT/ABORT_UNLOCK, so ``f``>0
+    adds ZERO exchange rounds to the fast path — only the commit round fans
+    out wider (more (src, dst) pairs, priced by
+    ``transport.wire_for_classes`` and the ``nic.ConnTable`` model).
+  * **Byte-equal copies**: ``OP_BACKUP_WRITE`` installs the exact committed
+    record image — key, committed version (predicted client-side from the
+    LOCK reply as ``(lock_version | 1) + 1``), lock = 0, value.  Only the
+    slot's ``next_ptr`` (per-table chain metadata) differs between copies.
+  * **Never dropped silently**: a backup write dropped by send-queue
+    back-pressure surfaces through the per-lane overflow mask and aborts the
+    lane (cause: overflow), which ``txloop.tx_loop`` retries — exactly the
+    path every other dropped request takes.  (Documented limitation: the
+    primary copy of such a lane is already installed when the abort is
+    reported — the retry reinstalls idempotently and converges; see
+    ``tx.commit_or_abort``.)
+
+Failure injection: ``kill_node`` marks nodes dead; ``failover_dest`` routes
+each lane to the first LIVE replica on the ring; ``failover_lookup`` is the
+reads-fail-over-to-backup path (one-sided probe of the backup bucket + RPC
+fallback at the backup).  Requests whose every replica is dead are parked —
+they are reported ``dead_route``, never silently served garbage.
+
+Public API: ``ReplicaConfig`` (``replica_of``, ``backup_write_records``),
+``all_alive`` / ``kill_node`` / ``failover_dest`` / ``failover_lookup``.
+``f = 0`` (or ``rep=None``) is bit-identical to the unreplicated dataplane —
+equivalence-tested in tests/test_replication.py and gated by
+benchmarks/replication_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.core import onesided as osd
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import Transport
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaConfig:
+    """Replication factor + placement for one cluster (static, trace-time).
+
+    f:         number of BACKUP copies per record (f + 1 copies total).
+               f = 0 is bit-identical to the unreplicated dataplane.
+    placement: optional override ``fn(primary, i, n_nodes) -> dest`` used by
+               tests to build pathological placements (e.g. every backup on
+               one node) — production placement is the ring rotation, whose
+               bijectivity is what keeps the commit fan-out overflow-free.
+    """
+    n_nodes: int
+    f: int = 0
+    placement: Optional[Callable] = None
+
+    def __post_init__(self):
+        if not 0 <= self.f < self.n_nodes:
+            raise ValueError(
+                f"replication factor must satisfy 0 <= f < n_nodes "
+                f"(got f={self.f}, n_nodes={self.n_nodes})")
+
+    @property
+    def n_copies(self) -> int:
+        return self.f + 1
+
+    def replica_of(self, primary, i: int):
+        """Destination of copy ``i`` (0 = primary) of a record homed at
+        ``primary``.  Ring rotation unless a test placement overrides it."""
+        primary = jnp.asarray(primary, jnp.int32)
+        if i == 0:
+            return primary
+        if self.placement is not None:
+            return jnp.asarray(self.placement(primary, i, self.n_nodes),
+                               jnp.int32)
+        return (primary + jnp.int32(i)) % jnp.int32(self.n_nodes)
+
+
+def committed_version(lock_version):
+    """The version a commit installs, predicted from the LOCK reply.
+
+    The LOCK reply's version word carries the slot's version at lock time:
+    even for a found record, and the (even) base version a lock-insert
+    placeholder was built on.  In both cases the owner commits
+    ``(version_at_commit | 1) + 1``, which equals ``lock_version + 2`` — the
+    backup write carries this value so every copy lands with the SAME
+    version word as the primary."""
+    return (jnp.asarray(lock_version, jnp.uint32) | jnp.uint32(1)) + jnp.uint32(1)
+
+
+def backup_write_records(lock_ctx, write_values):
+    """Build the OP_BACKUP_WRITE records for one commit round.
+
+    lock_ctx: the lock-phase context (``tx._parse_lock_replies``) holding the
+    flattened (N, B*Wr) write keys and lock-time versions.  write_values:
+    reshapeable to (N, B*Wr, VALUE_WORDS).  The aux word carries the
+    committed version so the backup installs the primary's exact image."""
+    n, items = lock_ctx["key_lo"].shape
+    return ht.make_record(
+        R.OP_BACKUP_WRITE, lock_ctx["key_lo"], lock_ctx["key_hi"],
+        aux=committed_version(lock_ctx["lock_ver"]),
+        value=jnp.asarray(write_values).reshape(n, items, sl.VALUE_WORDS))
+
+
+# ---------------------------------------------------------------------------
+# Failure injection + read fail-over
+# ---------------------------------------------------------------------------
+def all_alive(n_nodes: int):
+    """Fresh liveness mask: every node up."""
+    return jnp.ones((n_nodes,), bool)
+
+
+def kill_node(alive, node):
+    """Mark ``node`` (an index or an index array) dead.  Dead nodes receive
+    no requests from the failover paths; killing is idempotent."""
+    return alive.at[jnp.asarray(node)].set(False)
+
+
+def failover_dest(rep: ReplicaConfig, alive, primary):
+    """Route each lane to the FIRST live replica on the ring.
+
+    primary: (...,) int32.  Returns (dest, reachable) where ``reachable`` is
+    False for lanes whose every replica (primary included) is dead — those
+    lanes must be parked, not routed."""
+    primary = jnp.asarray(primary, jnp.int32)
+    dest = primary
+    reachable = alive[primary]
+    for i in range(1, rep.f + 1):
+        cand = rep.replica_of(primary, i)
+        take = ~reachable & alive[cand]
+        dest = jnp.where(take, cand, dest)
+        reachable = reachable | alive[cand]
+    return dest, reachable
+
+
+def failover_lookup(t: Transport, state, key_lo, key_hi,
+                    cfg: ht.HashTableConfig, layout, rep: ReplicaConfig,
+                    alive, *, capacity: Optional[int] = None, enabled=None,
+                    nic=None):
+    """Reads fail over to the backup: the one-two-sided hybrid lookup issued
+    at each key's first LIVE replica instead of its (possibly dead) primary.
+
+    The bucket half of the hash is node-independent (``hashtable.home_of``),
+    so the backup copy lives in the SAME bucket of the replica's table; the
+    probe is therefore byte-for-byte the ordinary hybrid lookup, just routed
+    by ``failover_dest``.  Returns a dict with found / value / version /
+    node / slot_idx / overflow / dead_route / wire.  ``dead_route`` lanes
+    (no live replica) issue nothing and report found=False."""
+    if enabled is None:
+        enabled = jnp.ones(jnp.shape(key_lo), bool)
+    home, off, _ = ht.lookup_start(cfg, layout, key_lo, key_hi, None)
+    dest, reachable = failover_dest(rep, alive, home)
+    en = enabled & reachable
+    read_words = cfg.bucket_width * sl.SLOT_WORDS
+
+    buf, ovf1, s1 = osd.remote_read(
+        t, state["arena"], dest, off, length=read_words, capacity=capacity,
+        enabled=en, nic=nic)
+    success, value, local_idx = ht.lookup_end(cfg, buf, key_lo, key_hi)
+    success = success & ~ovf1 & en
+    _, bucket = ht.home_of(cfg, key_lo, key_hi)
+    slot_idx = bucket * jnp.uint32(cfg.bucket_width) + local_idx
+    slots_v = buf.reshape(buf.shape[:-1] + (cfg.bucket_width, sl.SLOT_WORDS))
+    version = jnp.take_along_axis(
+        slots_v[..., sl.VERSION], local_idx[..., None].astype(jnp.int32),
+        axis=-1)[..., 0]
+
+    # RPC fallback (chained / overflowed lanes) — served by the SAME replica
+    need = en & ~success
+    state, rep2, ovf2, s2 = R.rpc_call(
+        t, state, dest, ht.make_record(R.OP_LOOKUP, key_lo, key_hi),
+        ht.make_lookup_handler_vector(cfg, layout), capacity=capacity,
+        enabled=need, nic=nic)
+    rpc_ok = need & (rep2[..., 0] == R.ST_OK) & ~ovf2
+    value = jnp.where(rpc_ok[..., None], rep2[..., 3:], value)
+    version = jnp.where(rpc_ok, rep2[..., 2], version)
+    slot_idx = jnp.where(rpc_ok, rep2[..., 1], slot_idx)
+
+    return dict(
+        found=success | rpc_ok,
+        value=value,
+        version=version,
+        node=dest,
+        slot_idx=slot_idx,
+        overflow=need & ovf2,
+        dead_route=enabled & ~reachable,
+        wire=s1 + s2,
+    )

@@ -39,7 +39,15 @@ accounts accordingly.
 
 ``rpc.rpc_call`` and ``onesided.remote_read`` are thin single-class wrappers
 over this primitive; ``tx.run_transactions(fused=True)`` is the multi-class
-user that cuts the OCC transaction from 5 exchange rounds to 3-4.
+user that cuts the OCC transaction from 5 exchange rounds to 3-4, and the
+replicated commit adds its backup-write classes to the same round.
+
+Public API: ``fused_round`` (the primitive), the class constructors
+``read_class`` / ``rpc_class``, the handler applicators ``serial_apply`` /
+``vector_apply``, and the transport-level ``ST_DROPPED`` status.  Invariant:
+``fused=True`` schedules change ROUND COUNTS only — per-class replies,
+overflow masks and delivered-request counts are bit-identical to running each
+class in its own round (tests/test_tx_fused_equivalence.py).
 """
 from __future__ import annotations
 

@@ -41,6 +41,7 @@ OP_LOCK = 5           # lock write-set entry (returns version at lock time)
 OP_COMMIT_UNLOCK = 6  # install value, version += 2, unlock
 OP_ABORT_UNLOCK = 7   # release lock without installing
 OP_READ_VERSION = 8   # validation re-read by RPC (fallback path)
+OP_BACKUP_WRITE = 9   # install a committed record image on a backup replica
 
 # Reply status codes (word 0 of every reply)
 ST_OK = 0

@@ -253,6 +253,11 @@ def wire_for_classes(masks, req_words, reply_words, header_words: int = 1,
     counted ONCE no matter how many classes it carries (the true
     doorbell-batching accounting), while `ops` still counts every delivered
     application-level request.
+
+    This is also how the replicated commit is priced: its backup-write
+    classes widen the round's (src, dst) fan-out and add delivered requests
+    (each paying the nic model's per-op connection-state penalty) without
+    adding a round trip — `round_trips` stays 1 for the whole fused round.
     """
     f32 = jnp.float32
     zero = jnp.zeros((), f32)

@@ -39,6 +39,18 @@ Two schedules share every phase's records, handlers and decision logic:
 Aborts are classified by cause — lock conflict, validation conflict, or
 overflow/back-pressure — which is what the retry loop (txloop.tx_loop) and
 the contention benchmarks report.
+
+With a ``rep=replication.ReplicaConfig(f > 0)``, COMMIT installs the write
+set on all f+1 copies: the backup writes ride the commit fused round as
+extra traffic classes (zero additional exchange rounds, wider commit
+fan-out; see commit_or_abort).
+
+Public API: ``run_transactions`` (single shot) + ``TxResult``, and the
+per-phase functions ``execute_read_set`` / ``lock_write_set`` /
+``validate_read_set`` / ``commit_or_abort`` the reference schedule is built
+from.  Invariants: ``fused=True`` is round-count-only (committed state,
+abort causes and WireStats.ops are bit-identical to ``fused=False``);
+``rep=None`` and ``rep.f == 0`` are bit-identical to each other.
 """
 from __future__ import annotations
 
@@ -50,6 +62,7 @@ import jax.numpy as jnp
 
 from repro.core import hybrid as hy
 from repro.core import onesided as osd
+from repro.core import replication as repl
 from repro.core import roundsched as rs
 from repro.core import rpc as R
 from repro.core import slots as sl
@@ -100,6 +113,10 @@ def _parse_lock_replies(lk, lrep, lovf, N, B, Wr):
     return dict(
         lk,
         lock_ok=lock_ok, lock_slot=lrep[..., 1],
+        # version at lock time (even, also for lock-inserted placeholders) —
+        # the committed version every copy will carry is (lock_ver | 1) + 1,
+        # which is what the backup fan-out installs (replication module)
+        lock_ver=lrep[..., 2],
         locked_values=lrep[..., 3:].reshape(N, B, Wr, sl.VALUE_WORDS),
         lock_fail=(status == R.ST_LOCK_FAIL) & en,
         # overflow-class outcomes: dropped by back-pressure (retryable) or
@@ -189,17 +206,42 @@ def validate_read_set(t: Transport, state, layout, read_ctx, *,
 
 
 def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
-                    write_values, capacity: Optional[int] = None, nic=None):
+                    write_values, capacity: Optional[int] = None, nic=None,
+                    rep=None):
     """COMMIT / ABORT phase: lanes that hold locks either install their values
     (version += 2, unlock) or roll back.  commit_lane: (N, B) bool;
     write_values: anything reshapeable to (N, B*Wr, VALUE_WORDS).
 
-    This round cannot overflow: its enabled set (lock holders) is a subset of
-    the lanes the lock round DELIVERED, to the same destinations in the same
-    lane order at the same capacity, so every enabled lane's send-queue rank
-    can only shrink.  That invariant is what guarantees an acquired lock is
-    always released — run_transactions still folds the returned overflow into
-    the abort classification as defense in depth."""
+    With replication (rep = replication.ReplicaConfig, f > 0), each of the f
+    backup copies rides this SAME fused round as an extra OP_BACKUP_WRITE
+    traffic class headed for replica_of(primary, i) — the commit round fans
+    out wider (more (src, dst) pairs on the wire) but the schedule gains ZERO
+    exchange rounds.  Aborting lanes release their locks and install nothing
+    anywhere.
+
+    The primary class cannot overflow: its enabled set (lock holders) is a
+    subset of the lanes the lock round DELIVERED, to the same destinations in
+    the same lane order at the same capacity, so every enabled lane's
+    send-queue rank can only shrink.  That invariant is what guarantees an
+    acquired lock is always released.  The ring-rotation backup classes
+    inherit it — the rotation is a bijection on destinations, so no backup
+    destination receives more records than some primary destination did — but
+    a non-bijective placement (or a future placement change) CAN overflow, so
+    every backup class's per-lane overflow mask (and any delivered-but-full
+    ST_NO_SPACE reply) is folded into the abort classification: a dropped
+    backup write aborts its lane (cause: overflow) for txloop to retry,
+    never silently degrading the record to fewer than f+1 copies.
+
+    Documented limitation of the single-round fan-out: the primary cannot
+    observe its backups' outcome within the round, so a commit whose backup
+    write failed has ALREADY installed the primary copy (lock released) when
+    the lane reports aborted_overflow.  The retry reinstalls the same value
+    idempotently and the lane converges to committed as soon as the backup
+    accepts (tests/test_replication.py exercises the drain); only a
+    PERMANENTLY full backup table leaves the lane reporting aborted with its
+    primary copy visible — the capacity-exhaustion regime ST_NO_SPACE exists
+    to signal, to be provisioned for exactly like the primary tables (whose
+    exhaustion aborts cleanly at LOCK time)."""
     N, B = commit_lane.shape
     Wr = lock_ctx["key_lo"].shape[1] // max(B, 1)
     commit_item = jnp.repeat(commit_lane, Wr, axis=-1)  # (N, B*Wr)
@@ -211,10 +253,23 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
         op, lock_ctx["tag"], lock_ctx["key_hi"], aux=lock_ctx["lock_slot"],
         value=write_values.reshape(N, B * Wr, sl.VALUE_WORDS))
     # only lanes that actually HOLD a lock must unlock/commit
-    state, crep, covf, s_cm = R.rpc_call(
-        t, state, lock_ctx["node"], cm_recs, serial_h, capacity=capacity,
-        enabled=lock_ctx["lock_ok"], nic=nic)
-    return state, dict(overflow=covf & lock_ctx["lock_ok"], wire=s_cm)
+    classes = [rs.rpc_class(lock_ctx["node"], cm_recs, serial_h,
+                            enabled=lock_ctx["lock_ok"], capacity=capacity)]
+    bk_en = None
+    if rep is not None and rep.f > 0:
+        bk_recs = repl.backup_write_records(lock_ctx, write_values)
+        # only COMMITTING lock holders install backups (aborts touch nothing)
+        bk_en = commit_item & lock_ctx["lock_ok"]
+        for i in range(1, rep.f + 1):
+            classes.append(rs.rpc_class(
+                rep.replica_of(lock_ctx["node"], i), bk_recs, serial_h,
+                enabled=bk_en, capacity=capacity))
+    state, results, s_cm = rs.fused_round(t, state, classes, nic=nic)
+    overflow = results[0][1] & lock_ctx["lock_ok"]
+    for brep, bovf in results[1:]:
+        overflow = overflow | ((bovf | (brep[..., 0] == R.ST_NO_SPACE))
+                               & bk_en)
+    return state, dict(overflow=overflow, wire=s_cm)
 
 
 # ---------------------------------------------------------------------------
@@ -223,7 +278,7 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
 def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
                        write_values, rctx, lctx, vctx, read_wire,
                        onesided_success, rpc_fallback, total,
-                       capacity, nic=None):
+                       capacity, nic=None, rep=None):
     lane_locks_ok = jnp.all(
         (lctx["lock_ok"] | ~lctx["enabled"]).reshape(N, B, Wr), axis=-1)
     lane_valid = jnp.all(
@@ -236,7 +291,7 @@ def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
     commit_lane = lane_locks_ok & lane_valid & lane_reads_ok    # (N, B)
     state, cctx = commit_or_abort(
         t, state, serial_h, lctx, commit_lane=commit_lane,
-        write_values=write_values, capacity=capacity, nic=nic)
+        write_values=write_values, capacity=capacity, nic=nic, rep=rep)
 
     has_writes = jnp.any(write_enabled, axis=-1)
     # commit RPCs provably never overflow (see commit_or_abort); the gate is
@@ -284,7 +339,7 @@ def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
 def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
                             write_keys, write_values, write_enabled,
                             read_enabled, cache, use_onesided, capacity,
-                            nic=None):
+                            nic=None, rep=None):
     N, B, Rd = read_keys.shape[:3]
     Wr = write_keys.shape[2]
     serial_h = ht.make_rpc_handler(cfg, layout)
@@ -360,7 +415,7 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
         onesided_success=jnp.sum(probe["success"].astype(jnp.float32)),
         rpc_fallback=jnp.sum(probe["need_rpc"].astype(jnp.float32)),
         total=jnp.sum(ren.astype(jnp.float32)),
-        capacity=capacity, nic=nic)
+        capacity=capacity, nic=nic, rep=rep)
     return state, cache, res
 
 
@@ -368,7 +423,7 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                      read_keys, write_keys, write_values, write_enabled=None,
                      read_enabled=None, cache=None, use_onesided: bool = True,
                      capacity: Optional[int] = None, fused: bool = True,
-                     nic=None):
+                     nic=None, rep=None):
     """Execute a batch of transactions, one per lane (single shot — aborted
     lanes report their cause and stop; see txloop.tx_loop for bounded retry).
 
@@ -385,6 +440,12 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                   mode / emulated cluster scale; every round's WireStats then
                   carries the modeled NIC-cache hit rate and per-op
                   connection-state penalty (protocol results are unaffected).
+    rep:          optional repro.core.replication.ReplicaConfig.  With f > 0,
+                  COMMIT installs the write set on all f+1 copies — the f
+                  backup writes ride the commit fused round as extra traffic
+                  classes (zero additional exchange rounds; only the commit
+                  round's (src, dst) fan-out widens).  rep=None and f=0 are
+                  bit-identical to the unreplicated dataplane.
 
     Read/write sets are assumed disjoint per lane (read-for-update goes in the
     write set — its LOCK reply returns the current value, Fig. 3).
@@ -401,7 +462,7 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             t, state, cfg, layout, read_keys=read_keys, write_keys=write_keys,
             write_values=write_values, write_enabled=write_enabled,
             read_enabled=read_enabled, cache=cache, use_onesided=use_onesided,
-            capacity=capacity, nic=nic)
+            capacity=capacity, nic=nic, rep=rep)
 
     serial_h = ht.make_rpc_handler(cfg, layout)
 
@@ -425,5 +486,5 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         write_enabled=write_enabled, write_values=write_values,
         rctx=rctx, lctx=lctx, vctx=vctx, read_wire=m.wire,
         onesided_success=m.onesided_success, rpc_fallback=m.rpc_fallback,
-        total=m.total, capacity=capacity, nic=nic)
+        total=m.total, capacity=capacity, nic=nic, rep=rep)
     return state, cache, res

@@ -66,7 +66,7 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             read_keys, write_keys, write_values, read_enabled=None,
             write_enabled=None, cache=None, use_onesided: bool = True,
             capacity: Optional[int] = None, max_rounds: int = 4, key=None,
-            fused: bool = True, nic=None):
+            fused: bool = True, nic=None, rep=None):
     """Run a batch of transactions to convergence (bounded by max_rounds).
 
     Arguments mirror tx.run_transactions; additionally:
@@ -79,6 +79,11 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
       nic:        optional repro.core.nic.ConnTable (connection mode +
                   emulated cluster scale); the aggregated metrics.wire then
                   reports the modeled NIC-cache hit rate / per-op penalty.
+      rep:        optional repro.core.replication.ReplicaConfig — every
+                  committing round installs the write set on all f+1 copies
+                  (backup writes fused into the commit round, zero extra
+                  exchange rounds); a backup write dropped by back-pressure
+                  aborts its lane (cause: overflow), which THIS loop retries.
 
     Returns (state, cache, TxLoopResult).
     """
@@ -109,7 +114,7 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             read_enabled=p(read_enabled) & act_p[..., None],
             write_enabled=p(write_enabled) & act_p[..., None],
             cache=cache, use_onesided=use_onesided, capacity=capacity,
-            fused=fused, nic=nic)
+            fused=fused, nic=nic, rep=rep)
         # fully-masked (parked) lanes report committed=True — gate on active
         newly = u(res.committed) & active
         done = done | newly

@@ -1,3 +1,5 @@
+"""Multi-pod dry-run driver — see DOC below (kept separate because the
+XLA_FLAGS env var must be set before anything imports jax)."""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 

@@ -1,0 +1,358 @@
+"""Replicated commit dataplane: f=0 bit-identity, zero extra exchange rounds,
+byte-equal backup copies (property-tested), the backup back-pressure
+regression (overflow surfaces as abort+retry, never a silent drop), and the
+kill-node read-failover scenario."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:
+    from repro.testing.hypothesis_stub import given, settings, st
+
+from repro.core import replication as repl
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core import tx as txm
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport
+from repro.core.txloop import tx_loop
+from repro.testing.workloads import value_for
+
+N = 4
+
+WIRE_FIELDS = ("round_trips", "messages", "ops", "req_bytes", "reply_bytes",
+               "nic_hit_ops", "nic_penalty_us")
+RESULT_FIELDS = ("committed", "read_found", "read_values", "locked_values",
+                 "aborted_lock", "aborted_validate", "aborted_overflow")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ht.HashTableConfig(n_nodes=N, n_buckets=16, bucket_width=2,
+                              n_overflow=64, max_chain=10)
+
+
+@pytest.fixture(scope="module")
+def layout(cfg):
+    return ht.build_layout(cfg)
+
+
+def insert_keys(t, state, cfg, layout, klo, khi):
+    h = ht.make_rpc_handler(cfg, layout)
+    node, _, _ = ht.lookup_start(cfg, layout, klo, khi)
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_INSERT, klo, khi,
+                                       value=value_for(klo)), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+    return state
+
+
+def make_workload(seed, B=4, Rd=2, Wr=1):
+    rng = np.random.RandomState(seed)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B, Rd + Wr)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, B, Rd + Wr)), jnp.uint32)
+    rk = jnp.stack([klo[..., :Rd], khi[..., :Rd]], -1)
+    wk = jnp.stack([klo[..., Rd:], khi[..., Rd:]], -1)
+    wv = value_for(klo[..., Rd:] + jnp.uint32(9))
+    return klo, khi, rk, wk, wv
+
+
+def slots_of(state, cfg, layout, node):
+    """(n_slots, SLOT_WORDS) numpy view of one node's slot region."""
+    srg = layout["slots"]
+    arena = np.asarray(state["arena"])
+    return arena[node, srg.base:srg.base
+                 + cfg.n_slots * sl.SLOT_WORDS].reshape(-1, sl.SLOT_WORDS)
+
+
+def find_copy(state, cfg, layout, node, klo, khi):
+    """The unique slot of (klo, khi) on `node`, or None if absent."""
+    slots = slots_of(state, cfg, layout, node)
+    m = (slots[:, sl.KEY_LO] == klo) & (slots[:, sl.KEY_HI] == khi)
+    assert m.sum() <= 1, f"duplicate copies of one key on node {node}"
+    return slots[m.argmax()] if m.any() else None
+
+
+def assert_replicas_byte_equal(state, cfg, layout, rep, wk, committed_item):
+    """Every committed write key: its f backup copies are byte-equal to the
+    primary (all slot words except NEXT_PTR, which is per-table chain
+    metadata), stable (even version) and unlocked."""
+    keep = [j for j in range(sl.SLOT_WORDS) if j != sl.NEXT_PTR]
+    wklo = np.asarray(wk[..., 0]).reshape(-1)
+    wkhi = np.asarray(wk[..., 1]).reshape(-1)
+    com = np.asarray(committed_item).reshape(-1)
+    home = np.asarray(ht.home_of(cfg, jnp.asarray(wklo), jnp.asarray(wkhi))[0])
+    checked = 0
+    for i in range(wklo.size):
+        if not com[i]:
+            continue
+        p = find_copy(state, cfg, layout, home[i], wklo[i], wkhi[i])
+        assert p is not None, "committed key missing from its primary"
+        assert p[sl.VERSION] % 2 == 0 and p[sl.LOCK] == 0
+        for k in range(1, rep.f + 1):
+            b_node = int(np.asarray(rep.replica_of(jnp.int32(home[i]), k)))
+            b = find_copy(state, cfg, layout, b_node, wklo[i], wkhi[i])
+            assert b is not None, \
+                f"committed key missing its backup copy {k} on node {b_node}"
+            np.testing.assert_array_equal(
+                p[keep], b[keep],
+                err_msg=f"backup copy {k} differs from the primary")
+        checked += 1
+    return checked
+
+
+# ---------------------------------------------------------------------------
+# f = 0 is bit-identical to the unreplicated dataplane
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("fused", [False, True])
+def test_f0_bit_identical(cfg, layout, fused):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    klo, khi, rk, wk, wv = make_workload(seed=0)
+    state = insert_keys(t, state, cfg, layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    s_none, _, r_none = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        fused=fused, rep=None)
+    s_f0, _, r_f0 = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        fused=fused, rep=repl.ReplicaConfig(N, 0))
+    for f in RESULT_FIELDS + ("round_trips",):
+        np.testing.assert_array_equal(np.asarray(getattr(r_none, f)),
+                                      np.asarray(getattr(r_f0, f)),
+                                      err_msg=f"f=0 changed {f}")
+    for f in WIRE_FIELDS:
+        assert float(getattr(r_none.metrics.wire, f)) == \
+            float(getattr(r_f0.metrics.wire, f)), f"f=0 changed wire {f}"
+    np.testing.assert_array_equal(np.asarray(s_none["arena"]),
+                                  np.asarray(s_f0["arena"]),
+                                  err_msg="f=0 changed committed state")
+
+
+def test_f0_loop_bit_identical(cfg, layout):
+    """The whole retry loop (same PRNG) is bit-identical at f=0."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    klo, khi, rk, wk, wv = make_workload(seed=1, B=6)
+    state = insert_keys(t, state, cfg, layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    s_a, _, a = tx_loop(t, state, cfg, layout, read_keys=rk, write_keys=wk,
+                        write_values=wv, capacity=2, max_rounds=4)
+    s_b, _, b = tx_loop(t, state, cfg, layout, read_keys=rk, write_keys=wk,
+                        write_values=wv, capacity=2, max_rounds=4,
+                        rep=repl.ReplicaConfig(N, 0))
+    np.testing.assert_array_equal(np.asarray(a.committed),
+                                  np.asarray(b.committed))
+    np.testing.assert_array_equal(np.asarray(a.commit_round),
+                                  np.asarray(b.commit_round))
+    np.testing.assert_array_equal(np.asarray(s_a["arena"]),
+                                  np.asarray(s_b["arena"]))
+    assert float(a.metrics.wire.ops) == float(b.metrics.wire.ops)
+    assert float(a.round_trips) == float(b.round_trips)
+
+
+# ---------------------------------------------------------------------------
+# f >= 1: zero extra exchange rounds; fused/unfused equivalence holds
+# ---------------------------------------------------------------------------
+def test_f1_zero_extra_rounds(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    klo, khi, rk, wk, wv = make_workload(seed=2)
+    state = insert_keys(t, state, cfg, layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    _, _, r0 = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv)
+    for f in (1, 2):
+        _, _, rf = txm.run_transactions(
+            t, state, cfg, layout, read_keys=rk, write_keys=wk,
+            write_values=wv, rep=repl.ReplicaConfig(N, f))
+        assert float(rf.round_trips) == float(r0.round_trips), \
+            f"f={f} must add ZERO exchange rounds (backups ride the commit round)"
+        np.testing.assert_array_equal(np.asarray(rf.committed),
+                                      np.asarray(r0.committed))
+        # the fan-out IS priced: f backup writes per committed write item
+        extra = float(rf.metrics.wire.ops) - float(r0.metrics.wire.ops)
+        n_bk = f * int(np.asarray(r0.committed).sum()) * wk.shape[2]
+        assert extra == n_bk, (extra, n_bk)
+
+
+def test_fused_unfused_equivalence_with_replication(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    klo, khi, rk, wk, wv = make_workload(seed=3)
+    state = insert_keys(t, state, cfg, layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    rc = repl.ReplicaConfig(N, 2)
+    s_ref, _, ref = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        fused=False, rep=rc)
+    s_fus, _, fus = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        fused=True, rep=rc)
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(ref, f)),
+                                      np.asarray(getattr(fus, f)))
+    np.testing.assert_array_equal(np.asarray(s_ref["arena"]),
+                                  np.asarray(s_fus["arena"]))
+    assert float(ref.metrics.wire.ops) == float(fus.metrics.wire.ops)
+    assert float(fus.round_trips) <= float(ref.round_trips)
+
+
+# ---------------------------------------------------------------------------
+# Property: committed records' backup copies are byte-equal to the primary —
+# across seeds, replication factors, schedules, and the lock-insert
+# (placeholder) path (write keys are FRESH, so commits insert, not update)
+# ---------------------------------------------------------------------------
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000), f=st.sampled_from([1, 2]),
+       fused=st.booleans())
+def test_backup_copies_byte_equal(seed, f, fused):
+    cfg = ht.HashTableConfig(n_nodes=N, n_buckets=16, bucket_width=2,
+                             n_overflow=64, max_chain=10)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    klo, khi, rk, wk, wv = make_workload(seed=seed)
+    # reads pre-inserted; WRITE keys are fresh -> commit takes the
+    # lock-insert placeholder path, whose committed version must still be
+    # predictable client-side for the backup image to match
+    state = insert_keys(t, state, cfg, layout,
+                        klo[..., :2].reshape(N, -1), khi[..., :2].reshape(N, -1))
+    rc = repl.ReplicaConfig(N, f)
+    state, _, res = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        fused=fused, rep=rc)
+    com_item = np.repeat(np.asarray(res.committed), wk.shape[2], axis=-1)
+    checked = assert_replicas_byte_equal(state, cfg, layout, rc, wk, com_item)
+    assert checked == int(np.asarray(res.committed).sum()) * wk.shape[2]
+    assert checked > 0, "vacuous run: nothing committed"
+
+
+# ---------------------------------------------------------------------------
+# Regression: backup writes beyond a destination's send budget must surface
+# as the per-lane overflow mask (abort + retry) — never a silent truncation
+# ---------------------------------------------------------------------------
+def test_backup_overflow_aborts_and_retries(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B, cap = 8, 2
+    rng = np.random.RandomState(11)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    state = insert_keys(t, state, cfg, layout,
+                        klo.reshape(N, -1), khi.reshape(N, -1))
+    rk = jnp.zeros((N, B, 0, 2), jnp.uint32)
+    wk = jnp.stack([klo, khi], -1)
+    wv = value_for(klo + jnp.uint32(5))
+    # pathological placement: EVERY backup lands on node 0, so each source's
+    # backup class overflows its per-destination budget of `cap`
+    rc = repl.ReplicaConfig(N, 1, placement=lambda p, i, n: jnp.zeros_like(p))
+
+    _, _, single = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        capacity=cap, rep=rc)
+    com = np.asarray(single.committed)
+    ovf = np.asarray(single.aborted_overflow)
+    assert ovf.sum() > 0, "placement must actually overflow the backup class"
+    # no silent truncation: every lane whose backup was dropped is ABORTED
+    # with cause overflow, and every lane reported committed has its backup
+    s1_state, _, _ = txm.run_transactions(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        capacity=cap, rep=rc)
+    checked = assert_replicas_byte_equal(s1_state, cfg, layout, rc, wk, com)
+    assert checked == com.sum()
+
+    # ... and the retry loop drains the back-pressure: every lane eventually
+    # commits WITH its backup installed
+    s_loop, _, res = tx_loop(
+        t, state, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        capacity=cap, max_rounds=10, rep=rc)
+    assert bool(np.asarray(res.committed).all()), "loop must converge"
+    assert int(np.asarray(res.round_abort_overflow)[0]) > 0
+    checked = assert_replicas_byte_equal(
+        s_loop, cfg, layout, rc, wk, np.ones((N, B, 1), bool))
+    assert checked == N * B
+
+
+def test_replica_config_validates():
+    with pytest.raises(ValueError):
+        repl.ReplicaConfig(4, -1)
+    with pytest.raises(ValueError):
+        repl.ReplicaConfig(4, 4)
+    assert repl.ReplicaConfig(4, 3).n_copies == 4
+
+
+# ---------------------------------------------------------------------------
+# Failure injection: reads fail over to the first live replica
+# ---------------------------------------------------------------------------
+def test_kill_node_reads_fail_over(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    B = 8
+    rng = np.random.RandomState(21)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    wk = jnp.stack([klo, khi], -1)
+    wv = value_for(klo + jnp.uint32(7))
+    rc = repl.ReplicaConfig(N, 1)
+    # populate THROUGH the replicated commit path: every record lands on
+    # primary + backup
+    state, _, res = tx_loop(
+        t, state, cfg, layout, read_keys=jnp.zeros((N, B, 0, 2), jnp.uint32),
+        write_keys=wk, write_values=wv, max_rounds=4, rep=rc)
+    assert bool(np.asarray(res.committed).all())
+
+    dead = 1
+    alive = repl.kill_node(repl.all_alive(N), dead)
+    # scorch the dead node's arena: if any fail-over read still touched it,
+    # the values below could not come back intact
+    state = dict(state, arena=state["arena"].at[dead].set(
+        jnp.uint32(0xDEADBEEF)))
+
+    flat_klo = klo.reshape(N, B)
+    flat_khi = khi.reshape(N, B)
+    out = repl.failover_lookup(t, state, flat_klo, flat_khi, cfg, layout,
+                               rc, alive)
+    assert bool(np.asarray(out["found"]).all()), \
+        "every key must be served by a live replica"
+    np.testing.assert_array_equal(
+        np.asarray(out["value"]),
+        np.asarray(wv.reshape(N, B, sl.VALUE_WORDS)))
+    assert not np.asarray(out["dead_route"]).any()
+    # keys homed on the dead node were rerouted to their ring successor
+    home = np.asarray(ht.home_of(cfg, flat_klo, flat_khi)[0])
+    served = np.asarray(out["node"])
+    assert (served[home == dead] == (dead + 1) % N).all()
+    assert (served[home != dead] == home[home != dead]).all()
+    assert (np.asarray(out["version"]) % 2 == 0).all()
+
+    # both copies dead -> the lane is parked and REPORTED, never served junk
+    alive2 = repl.kill_node(alive, (dead + 1) % N)
+    out2 = repl.failover_lookup(t, state, flat_klo, flat_khi, cfg, layout,
+                                rc, alive2)
+    dr = np.asarray(out2["dead_route"])
+    np.testing.assert_array_equal(dr, home == dead)
+    assert not np.asarray(out2["found"])[dr].any()
+
+
+def test_failover_lookup_matches_hybrid_when_all_alive(cfg, layout):
+    """With every node up, the failover path IS the ordinary hybrid lookup."""
+    from repro.core import hybrid as hy
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    rng = np.random.RandomState(31)
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, 6)), jnp.uint32)
+    khi = jnp.asarray(rng.randint(0, 2**31, (N, 6)), jnp.uint32)
+    state = insert_keys(t, state, cfg, layout, klo, khi)
+    rc = repl.ReplicaConfig(N, 1)
+    out = repl.failover_lookup(t, state, klo, khi, cfg, layout, rc,
+                               repl.all_alive(N))
+    _, _, found, value, version, node, sidx, _, _ = hy.hybrid_lookup(
+        t, state, klo, khi, cfg, layout)
+    np.testing.assert_array_equal(np.asarray(out["found"]), np.asarray(found))
+    np.testing.assert_array_equal(np.asarray(out["value"]), np.asarray(value))
+    np.testing.assert_array_equal(np.asarray(out["node"]), np.asarray(node))
+    np.testing.assert_array_equal(np.asarray(out["version"]),
+                                  np.asarray(version))
