@@ -13,7 +13,12 @@ Collects the protocol's headline numbers into a JSON snapshot:
     ``round_trips_f1`` (must equal the f=0 round trips — backup writes ride
     the commit fused round, and any increase fails the gate),
     ``wire_bytes_tx_f1`` and modeled Mtx/node per connection mode at 96
-    emulated nodes, so a PR can't silently make replication more expensive.
+    emulated nodes, so a PR can't silently make replication more expensive;
+  * ``ordered`` — the ordered B-link index (range_scan.py's deterministic
+    workload): ``scan_round_trips`` (the one-sided fast-path scan schedule —
+    MUST stay equal to the point-lookup schedule's rounds; any increase
+    fails), commit rate and modeled Mtx/node at 32 emulated nodes for the
+    scan-heavy mix (5% threshold).
 
 CI runs this twice: ``--out BENCH_PR.json`` on the PR (uploaded as an
 artifact) and compares against the checked-in ``BENCH_BASELINE.json``:
@@ -85,6 +90,7 @@ def _tx_smoke():
 
 def collect() -> dict:
     import conn_scaling
+    import range_scan
     import replication_cost
     import table5_latency
     from repro.core import nic as qn
@@ -118,6 +124,10 @@ def collect() -> dict:
             "commit_rate_f1": round(f1["commit_rate"], 4),
             "mops_node_f1": mops_f1,
         },
+        # range_scan.gate_numbers() asserts, BEFORE any baseline comparison,
+        # that the fast-path scan costs exactly the point-lookup schedule
+        # and that f=1 adds zero rounds to it
+        "ordered": range_scan.gate_numbers(),
     }
 
 
@@ -161,6 +171,24 @@ def compare(pr: dict, base: dict) -> list[str]:
             if p is None or p < b * TPUT_TOL:
                 fails.append(f"replication.mops_node_f1.{mode} regressed: "
                              f"{b} -> {p} (<{TPUT_TOL:.0%} of baseline)")
+    ob = base.get("ordered")
+    if ob is not None:
+        op = pr.get("ordered") or {}
+        p = op.get("scan_round_trips")
+        if p is None or p > ob["scan_round_trips"]:
+            fails.append(f"ordered.scan_round_trips increased: "
+                         f"{ob['scan_round_trips']} -> {p} "
+                         f"(any increase fails: the fast-path scan must "
+                         f"cost the point-lookup schedule)")
+        p = op.get("commit_rate")
+        if p is None or p < ob["commit_rate"]:
+            fails.append(f"ordered.commit_rate dropped: {ob['commit_rate']} "
+                         f"-> {p} (any drop fails: deterministic workload)")
+        p = op.get("mops_node_32")
+        if p is None or p < ob["mops_node_32"] * TPUT_TOL:
+            fails.append(f"ordered.mops_node_32 regressed: "
+                         f"{ob['mops_node_32']} -> {p} "
+                         f"(<{TPUT_TOL:.0%} of baseline)")
     return fails
 
 

@@ -1,11 +1,20 @@
-"""Figure 4: Key-value lookups — Storm vs Storm(oversub) vs Storm(perfect).
+"""Figure 4: Key-value lookups — Storm vs Storm(oversub) vs Storm(perfect),
+parameterized over the data structure (``--ds {hash,btree}``).
 
+Hash table (the paper's Fig. 4):
   * Storm          — RPC-only lookups (every op is a write-based RPC)
   * Storm(oversub) — one-two-sided on an oversubscribed table (low collision
                      rate -> most lookups finish with ONE one-sided read)
   * Storm(perfect) — address-cached: a warmup round on the measured key set
                      fills the client cache, so every measured lookup is a
                      single one-sided read of the exact slot (no data-path RPC)
+
+Ordered B-link index (``--ds btree``) — the same probe through the same
+generic hybrid (Storm Table 3), different metadata regime:
+  * Storm          — RPC-only (owner-side separator walk per lookup)
+  * Storm(cached)  — cached separator directory walked locally + ONE
+                     one-sided leaf read (the ordered analogue of
+                     Storm(perfect); stale routes fall back to RPC)
 
 Reported per configuration and node count: one-sided success fraction,
 round-trips/op, wire bytes/op, modeled Mops/s/node (the paper's y-axis),
@@ -20,8 +29,12 @@ import numpy as np
 
 from common import (csv_line, modeled_throughput_per_node, populate, time_jit)
 from repro.core import hybrid as hy
+from repro.core import rpc as R
+from repro.core import wireproto as Wp
+from repro.core.datastructs import btree as bt
 from repro.core.datastructs import hashtable as ht
 from repro.core.transport import SimTransport
+from repro.testing.workloads import distinct_uint32, value_for
 
 LANES = 32
 KEYS_PER_NODE = 192
@@ -74,8 +87,69 @@ def run_config(name, n_nodes, *, oversub: bool, use_onesided: bool,
     return mops, one_frac
 
 
-def main(node_counts=(4, 8, 16)):
+def run_config_btree(name, n_nodes, *, use_onesided: bool, lanes=LANES):
+    """The SAME lookup workload through the ordered index: generic hybrid
+    probe with ds=btree (cached separators walked locally, one one-sided
+    leaf read) vs the RPC-only owner-side walk."""
+    cfg = bt.BTreeConfig(n_nodes=n_nodes, n_leaves=2 * KEYS_PER_NODE,
+                         leaf_width=4, max_scan_leaves=4)
+    layout = bt.build_layout(cfg)
+    t = SimTransport(n_nodes)
+    state = bt.init_cluster_state(cfg)
+    rng = np.random.RandomState(7)
+    allk = distinct_uint32(rng, n_nodes * KEYS_PER_NODE)
+    per = allk.reshape(n_nodes, KEYS_PER_NODE)
+    h = bt.make_rpc_handler(cfg, layout)
+    for i in range(0, KEYS_PER_NODE, 64):
+        k = jnp.asarray(per[:, i:i + 64], jnp.uint32)
+        state, rep, _, _ = R.rpc_call(
+            t, state, bt.home_of(cfg, k),
+            bt.make_record(Wp.OP_BT_INSERT, k, jnp.zeros_like(k),
+                           value=value_for(k)), h)
+        assert (np.asarray(rep[..., 0]) == Wp.ST_OK).all()
+    meta = (bt.refresh_meta(t, state, cfg, layout)[0]
+            if use_onesided else None)
+
+    pick = rng.randint(0, len(allk), (n_nodes, lanes))
+    kl = jnp.asarray(allk[pick], jnp.uint32)
+    kh = jnp.zeros_like(kl)
+
+    @jax.jit
+    def round_fn(state, meta):
+        st, m2, found, val, ver, node, sidx, _, m = hy.hybrid_lookup(
+            t, state, kl, kh, cfg, layout, cache=meta,
+            use_onesided=use_onesided, ds=bt)
+        return st, m2, found, m
+
+    state, meta, found, m = round_fn(state, meta)
+    assert bool(found.all()), "all keys must be found"
+    (state, meta, found, m), dt = time_jit(round_fn, state, meta)
+
+    ops = n_nodes * lanes
+    one_frac = float(m.onesided_success) / float(m.total)
+    rpc_frac = float(m.rpc_fallback) / float(m.total)
+    reads_per_op = 1.0 if use_onesided else 0.0
+    wire_b = float(m.wire.total_bytes) / ops
+    mops = modeled_throughput_per_node(
+        reads_per_op=reads_per_op, rpcs_per_op=rpc_frac,
+        wire_bytes_per_op=wire_b, lanes=lanes)
+    csv_line(f"fig4/{name}/n{n_nodes}", dt / ops * 1e6,
+             f"modeled_Mops_node={mops:.2f};onesided_frac={one_frac:.2f};"
+             f"rpc_frac={rpc_frac:.2f};bytes_op={wire_b:.0f}")
+    return mops, one_frac
+
+
+def main(node_counts=(4, 8, 16), ds="hash"):
     out = {}
+    if ds == "btree":
+        for n in node_counts:
+            a = run_config_btree("btree_rpc_only", n, use_onesided=False)
+            b = run_config_btree("btree_cached", n, use_onesided=True)
+            out[n] = (a, b)
+        for n, (a, b) in out.items():
+            assert b[0] >= a[0], f"cached should beat rpc-only at n={n}"
+            assert b[1] >= 0.99, f"fresh separators must probe one-sided n={n}"
+        return out
     for n in node_counts:
         a = run_config("storm_rpc_only", n, oversub=False,
                        use_onesided=False, cache=False)
@@ -92,4 +166,10 @@ def main(node_counts=(4, 8, 16)):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ds", choices=("hash", "btree"), default="hash",
+                    help="which remote data structure serves the lookups")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    main(node_counts=(4,) if args.smoke else (4, 8, 16), ds=args.ds)

@@ -1,0 +1,714 @@
+"""Ordered remote index: a fixed-fanout B-link tree over the slot arena.
+
+Storm's dataplane (Table 3) is data-structure-generic: a structure registers
+``lookup_start`` / ``lookup_end`` client-side and an ``rpc_handler``
+owner-side, and the one-two-sided hybrid plus the OCC protocol do the rest.
+The hash table exercises the pointer-chase regime; this module adds the
+ORDERED regime — "RDMA vs. RPC for Implementing Distributed Data Structures"
+(Brock et al.) shows it is where the one-sided-vs-RPC trade-off gets
+interesting: traversals favor client-side caching + one-sided reads, while
+structural modifications (splits) favor RPC.  Both paths are provided:
+
+  * **Layout**: the key space [0, 2^32-2] is RANGE-PARTITIONED evenly across
+    nodes (static boundaries — the "root" of the global tree never changes).
+    Each node owns a flat arena of ``n_leaves`` LEAVES; a leaf is one HEADER
+    slot followed by ``leaf_width`` record slots (``slots.py`` word layout
+    throughout, ``regions.py`` bounds checks apply).  The header reuses the
+    slot words at leaf granularity:
+
+        KEY_LO   = low fence key (immutable once the leaf is allocated)
+        KEY_HI   = high fence key (inclusive; shrinks when the leaf splits)
+        VERSION  = leaf seqlock (even = stable; EVERY record or structural
+                   change bumps it — what range scans OCC-validate against)
+        LOCK     = leaf lock (tx write sets lock whole leaves)
+        NEXT_PTR = right-link: arena index of the key-successor leaf (the
+                   B-link pointer; NULL_PTR at the partition's end)
+        value[0] = live record count (records [0, count) sorted by key)
+
+  * **Inner nodes**: a per-node separator directory (``sep`` region: fence_lo
+    of every allocated leaf) — the flattened inner levels of the tree.
+    Clients CACHE the directory (``refresh_meta`` = one one-sided read per
+    node) and walk it locally; a probe then needs exactly ONE one-sided read
+    of the predicted leaf.  Splits leave fence_lo immutable and only ADD
+    separators, so a stale cache mis-predicts at most by missing new leaves —
+    the probe detects it from the fetched fences and falls back to RPC
+    (``OP_BT_LOOKUP`` / ``OP_BT_SCAN``), the round-trip analogue of chasing
+    the B-link right-pointer.
+
+  * **Structural ops are RPC**: ``OP_BT_INSERT``/``OP_BT_DELETE`` run in the
+    serial handler; a full leaf splits (left keeps the lower half, the new
+    right leaf is linked via NEXT_PTR and registered in ``sep``).  Deletes
+    never merge (allocated leaves persist with their fences — the standard
+    B-link simplification).
+
+  * **Transactions at leaf granularity**: ``OP_BT_LOCK`` locks the leaf that
+    covers a write key — pre-splitting a full leaf on the way down, so the
+    later ``OP_BT_COMMIT`` always has room and an acquired lock can always be
+    released by install+unlock.  Range scans read leaves one-sided, keep
+    (node, header slot, version) as their read set, and validate leaf
+    versions exactly like point transactions validate record slots (see
+    ``tx.run_scan_transactions``).
+
+Replication: every node carries a SECOND, full-range leaf arena (the
+``bleaves``/``bsep``/``bnleaf`` regions) for the partitions it backs up —
+ring placement puts every replicated key OUTSIDE the backup node's own
+partition, and installing foreign separators into the primary tree would
+corrupt its fence chain.  The handlers select the tree by key-vs-partition
+(``pbounds``), so ``OP_BT_BACKUP`` installs and backup-side lookups are
+served from the backup tree while primary invariants never see replica
+traffic.
+
+Limitations (documented, asserted nowhere silently): keys are the 32-bit
+``key_lo`` (``key_hi`` must be 0; the hash table keeps the full 64-bit
+space); one write key per leaf per transaction lane (a lane's second lock on
+the same leaf reports ``ST_LOCK_FAIL``); backups replicate LOGICALLY (the
+committed key/value upserted into the backup tree — leaf arenas may pack
+records differently per serialization order, unlike the hash table's
+byte-equal images).
+
+Public API: ``BTreeConfig`` / ``build_layout`` / ``init_cluster_state``,
+the Table-3 client half (``lookup_start`` / ``probe_end`` / ``lookup_records``
+/ ``uses_probe_cache`` / ``probe_words`` / ``cache_update`` — the generic
+interface ``hybrid.onesided_probe`` consumes via ``ds=``), the owner half
+(``make_rpc_handler`` / ``make_lookup_handler_vector`` /
+``make_scan_handler_vector``), the cached-inner-node helpers (``refresh_meta``
+/ ``local_meta``), and the scan-planning helpers ``scan_plan`` /
+``parse_leaf`` / ``leaf_offset`` consumed by ``tx.run_scan_transactions``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import onesided as osd
+from repro.core import regions as rg
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core import wireproto as W
+from repro.core.datastructs.hashtable import make_record  # noqa: F401
+# make_record is re-exported: the btree speaks the SAME record layout
+# [op, key_lo, key_hi, aux, value...] as every other structure.
+
+MAX_KEY = jnp.uint32(0xFFFFFFFE)   # 0xFFFFFFFF is the empty-slot sentinel
+
+
+@dataclasses.dataclass(frozen=True)
+class BTreeConfig:
+    n_nodes: int
+    n_leaves: int                # per node — static leaf arena capacity
+    leaf_width: int = 4          # records per leaf (fanout)
+    max_scan_leaves: int = 4     # static per-lane bound on leaves per scan
+
+    def __post_init__(self):
+        if self.leaf_width < 2:
+            raise ValueError("leaf_width must be >= 2 (splits need a real "
+                             f"separator key), got {self.leaf_width}")
+        if self.n_leaves < 1 or self.max_scan_leaves < 1:
+            raise ValueError("n_leaves and max_scan_leaves must be >= 1")
+
+    @property
+    def leaf_slots(self) -> int:        # header + records
+        return 1 + self.leaf_width
+
+    @property
+    def leaf_words(self) -> int:
+        return self.leaf_slots * sl.SLOT_WORDS
+
+    # record: [op, key_lo, key_hi, aux, value...] (shared layout)
+    @property
+    def record_words(self) -> int:
+        return 4 + sl.VALUE_WORDS
+
+    # reply: [status, aux (header slot idx), version, value...]
+    @property
+    def reply_words(self) -> int:
+        return 3 + sl.VALUE_WORDS
+
+    # scan reply: [status, header slot idx] + raw leaf image
+    @property
+    def scan_reply_words(self) -> int:
+        return 2 + self.leaf_words
+
+
+def build_layout(cfg: BTreeConfig) -> rg.RegionTable:
+    tbl = rg.RegionTable()
+    tbl.register("leaves", cfg.n_leaves * cfg.leaf_words)
+    tbl.register("sep", cfg.n_leaves)   # fence_lo per allocated leaf
+    tbl.register("nleaf", 1)            # leaf bump allocator (adjacent to sep
+                                        # so ONE one-sided read refreshes both)
+    # The BACKUP tree: a second, independent leaf arena whose root covers the
+    # FULL key space.  Ring placement makes every replicated key land OUTSIDE
+    # the backup node's own partition, so installing backups into the primary
+    # tree would plant foreign separators and corrupt its fence chain — the
+    # handler instead routes any out-of-partition key into these regions
+    # (primary invariants never see replica traffic).
+    tbl.register("bleaves", cfg.n_leaves * cfg.leaf_words)
+    tbl.register("bsep", cfg.n_leaves)
+    tbl.register("bnleaf", 1)
+    tbl.register("pbounds", 2)          # this node's inclusive partition [lo, hi]
+    tbl.register("scratch", 1)          # must stay LAST (write sink)
+    return tbl
+
+
+# ---------------------------------------------------------------------------
+# Range partition: the static "root" of the global tree
+# ---------------------------------------------------------------------------
+def _part(cfg: BTreeConfig) -> int:
+    return (1 << 32) // cfg.n_nodes
+
+
+def home_of(cfg: BTreeConfig, key):
+    """Home node of a key — static range partition (clip the tail node)."""
+    key = jnp.asarray(key, jnp.uint32)
+    if cfg.n_nodes == 1:
+        return jnp.zeros(key.shape, jnp.int32)
+    node = key // jnp.uint32(_part(cfg))
+    return jnp.minimum(node, jnp.uint32(cfg.n_nodes - 1)).astype(jnp.int32)
+
+
+def partition_bounds(cfg: BTreeConfig, node):
+    """(lo, hi) INCLUSIVE key bounds of a node's partition."""
+    node = jnp.asarray(node, jnp.int32)
+    if cfg.n_nodes == 1:
+        return (jnp.zeros(node.shape, jnp.uint32),
+                jnp.broadcast_to(MAX_KEY, node.shape))
+    part = jnp.uint32(_part(cfg))
+    lo = node.astype(jnp.uint32) * part
+    hi = jnp.where(node == cfg.n_nodes - 1, MAX_KEY,
+                   (node.astype(jnp.uint32) + 1) * part - 1)
+    return lo, hi
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
+def init_node_state(cfg: BTreeConfig, layout: rg.RegionTable, node_id):
+    """One node's arena: every slot formatted empty; the primary tree's leaf
+    0 covers the node's partition, the backup tree's leaf 0 the FULL key
+    space (a backup node stores OTHER partitions' keys)."""
+    arena = rg.make_arena(layout)
+    empty = jnp.tile(sl.make_empty_slot(), (cfg.n_leaves * cfg.leaf_slots,))
+    lo, hi = partition_bounds(cfg, node_id)
+    zero = jnp.uint32(0)
+    for leaves, sep, nleaf, flo, fhi in (
+            (layout["leaves"], layout["sep"], layout["nleaf"], lo, hi),
+            (layout["bleaves"], layout["bsep"], layout["bnleaf"],
+             zero, MAX_KEY)):
+        arena = lax.dynamic_update_slice(arena, empty, (leaves.base,))
+        hdr = sl.pack_slot(flo, fhi, 0, 0, sl.NULL_PTR,
+                           jnp.zeros((sl.VALUE_WORDS,), jnp.uint32))
+        arena = lax.dynamic_update_slice(arena, hdr, (leaves.base,))
+        arena = arena.at[sep.base].set(flo)
+        arena = arena.at[nleaf.base].set(jnp.uint32(1))
+    pb = layout["pbounds"].base
+    arena = arena.at[pb].set(lo).at[pb + 1].set(hi)
+    return {"arena": arena}
+
+
+def init_cluster_state(cfg: BTreeConfig):
+    layout = build_layout(cfg)
+    return jax.vmap(lambda n: init_node_state(cfg, layout, n))(
+        jnp.arange(cfg.n_nodes, dtype=jnp.int32))
+
+
+def leaf_offset(cfg: BTreeConfig, layout: rg.RegionTable, leaf):
+    """Arena word offset of leaf `leaf` (header slot first)."""
+    return (jnp.uint32(layout["leaves"].base)
+            + jnp.asarray(leaf, jnp.uint32) * jnp.uint32(cfg.leaf_words))
+
+
+def header_slot(cfg: BTreeConfig, leaf):
+    """Slot index (within the `leaves` region) of a leaf's header — the
+    address unit the validation re-read and COMMIT addressing use."""
+    return jnp.asarray(leaf, jnp.uint32) * jnp.uint32(cfg.leaf_slots)
+
+
+# ---------------------------------------------------------------------------
+# Cached inner nodes (the client's copy of every node's separator directory)
+# ---------------------------------------------------------------------------
+def local_meta(cfg: BTreeConfig, layout: rg.RegionTable, state, n_clients=None):
+    """Snapshot every node's separator directory WITHOUT wire traffic (setup /
+    test helper — SimTransport only).  Returns meta replicated per client:
+    {"sep": (C, n_nodes, n_leaves) uint32, "nleaf": (C, n_nodes) uint32}."""
+    n_clients = cfg.n_nodes if n_clients is None else n_clients
+    s = layout["sep"]
+    sep = state["arena"][:, s.base:s.base + cfg.n_leaves]
+    nleaf = state["arena"][:, layout["nleaf"].base]
+    tile = lambda x: jnp.tile(x[None], (n_clients,) + (1,) * x.ndim)
+    return {"sep": tile(sep), "nleaf": tile(nleaf)}
+
+
+def refresh_meta(t, state, cfg: BTreeConfig, layout: rg.RegionTable, *,
+                 nic=None):
+    """Refresh the cached inner nodes with ONE one-sided read per node: the
+    ``sep`` and ``nleaf`` regions are adjacent, so n_leaves+1 words fetch the
+    whole directory.  Returns (meta, WireStats)."""
+    n_local = t.n_local
+    dest = jnp.tile(jnp.arange(cfg.n_nodes, dtype=jnp.int32)[None],
+                    (n_local, 1))
+    off = jnp.full((n_local, cfg.n_nodes), layout["sep"].base, jnp.uint32)
+    buf, _, stats = osd.remote_read(t, state["arena"], dest, off,
+                                    length=cfg.n_leaves + 1, nic=nic)
+    return {"sep": buf[..., :cfg.n_leaves],
+            "nleaf": buf[..., cfg.n_leaves]}, stats
+
+
+def _route_leaf(cfg: BTreeConfig, fences, nleaf, key):
+    """fences: (..., n_leaves) fence_lo per arena leaf; nleaf: (...,).
+    Returns (leaf, fence): the allocated leaf with the largest fence_lo <= key
+    (leaf 0's fence is the partition low bound, so one always exists)."""
+    valid = (jnp.arange(cfg.n_leaves, dtype=jnp.uint32)
+             < jnp.asarray(nleaf, jnp.uint32)[..., None])
+    cand = valid & (fences <= jnp.asarray(key, jnp.uint32)[..., None])
+    score = jnp.where(cand, fences, 0)
+    leaf = jnp.argmax(score, axis=-1).astype(jnp.uint32)
+    return leaf, jnp.take_along_axis(score, leaf[..., None].astype(jnp.int32),
+                                     axis=-1)[..., 0]
+
+
+# ---------------------------------------------------------------------------
+# Client side: the Storm Table-3 interface (consumed by hybrid via ds=btree)
+# ---------------------------------------------------------------------------
+def uses_probe_cache(cfg: BTreeConfig) -> bool:
+    """The separator cache is per-client state (hybrid vmaps lookup_start
+    over it), and lookups never update it in place (refresh is explicit)."""
+    return True
+
+
+def probe_words(cfg: BTreeConfig) -> int:
+    """One probe reads ONE whole leaf (header + records)."""
+    return cfg.leaf_words
+
+
+def lookup_start(cfg: BTreeConfig, layout: rg.RegionTable, key_lo, key_hi,
+                 cache=None):
+    """Client-side metadata walk: range-partition to the node, walk the
+    CACHED separator directory to the leaf.  Without a cache the probe
+    targets leaf 0 and the RPC fallback resolves (correct, never fast)."""
+    node = home_of(cfg, key_lo)
+    if cache is None:
+        leaf = jnp.zeros(jnp.shape(key_lo), jnp.uint32)
+        hit = jnp.zeros(jnp.shape(key_lo), bool)
+    else:
+        sep = cache["sep"][node]
+        nleaf = cache["nleaf"][node]
+        leaf, _ = _route_leaf(cfg, sep, nleaf, key_lo)
+        hit = jnp.ones(jnp.shape(key_lo), bool)
+    return node, leaf_offset(cfg, layout, leaf), hit
+
+
+def parse_leaf(cfg: BTreeConfig, buf):
+    """Decode one-sided leaf images.  buf: (..., leaf_words) ->
+    dict(fence_lo, fence_hi, version, lock, next, count (...,),
+         live/keys (..., leaf_width), values (..., leaf_width, VALUE_WORDS))."""
+    shp = buf.shape[:-1]
+    slots_ = buf.reshape(shp + (cfg.leaf_slots, sl.SLOT_WORDS))
+    hdr, recs = slots_[..., 0, :], slots_[..., 1:, :]
+    count = hdr[..., sl.VALUE0]
+    live = (jnp.arange(cfg.leaf_width, dtype=jnp.uint32)
+            < count[..., None])
+    return dict(
+        fence_lo=sl.slot_key_lo(hdr), fence_hi=sl.slot_key_hi(hdr),
+        version=sl.slot_version(hdr), lock=sl.slot_lock(hdr),
+        next=sl.slot_next(hdr), count=count, live=live,
+        keys=sl.slot_key_lo(recs), values=sl.slot_value(recs))
+
+
+def probe_end(cfg: BTreeConfig, layout: rg.RegionTable, buf, key_lo, key_hi,
+              off, hit):
+    """Validate a one-sided leaf read (the ordered lookup_end).
+
+    ``resolved`` = the read CONCLUSIVELY answered the probe: stable header
+    (even version, unlocked) whose fences cover the key — then a key absent
+    from the records is a definitive miss (no chains to chase), unlike the
+    hash table where found and resolved coincide.  A fence miss means the
+    cached separators are stale (the leaf split since) — the RPC fallback
+    re-walks at the owner."""
+    p = parse_leaf(cfg, buf)
+    key = jnp.asarray(key_lo, jnp.uint32)
+    stable = (p["version"] % 2 == 0) & (p["lock"] == 0)
+    in_fence = (p["fence_lo"] <= key) & (key <= p["fence_hi"])
+    resolved = stable & in_fence & (jnp.asarray(key_hi, jnp.uint32) == 0)
+    m = p["live"] & (p["keys"] == key[..., None])
+    found = resolved & jnp.any(m, axis=-1)
+    idx = jnp.argmax(m, axis=-1)
+    value = jnp.take_along_axis(p["values"], idx[..., None, None], axis=-2)[..., 0, :]
+    value = jnp.where(found[..., None], value, jnp.zeros_like(value))
+    leaf = ((jnp.asarray(off, jnp.uint32) - jnp.uint32(layout["leaves"].base))
+            // jnp.uint32(cfg.leaf_words))
+    return dict(found=found, value=value, version=p["version"],
+                slot_idx=header_slot(cfg, leaf), resolved=resolved)
+
+
+def lookup_records(cfg: BTreeConfig, key_lo, key_hi):
+    """Request records for the point-lookup RPC fallback."""
+    return make_record(W.OP_BT_LOOKUP, key_lo, key_hi)
+
+
+def cache_update(cfg: BTreeConfig, cache, key_lo, key_hi, node, slot_idx,
+                 valid):
+    """Per-lookup cache learning is a no-op: the separator cache is refreshed
+    wholesale by ``refresh_meta`` (a probe teaches nothing the directory it
+    routed with did not already contain)."""
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Scan planning: which (node, leaf) sequence covers [lo, hi]?
+# ---------------------------------------------------------------------------
+def scan_plan(cfg: BTreeConfig, meta_sep, meta_nleaf, lo, hi):
+    """Plan one client node's scans from its cached separators.
+
+    meta_sep: (n_nodes, n_leaves); meta_nleaf: (n_nodes,); lo/hi: (B,) uint32
+    INCLUSIVE ranges (lo > hi = lane scans nothing).  Returns dict of
+    (B, max_scan_leaves) arrays: node, leaf, fence (the expected fence_lo —
+    immutable per leaf, so it double-checks routing AND addresses the RPC
+    fallback), enabled.
+
+    The global leaf order is (node, fence_lo) — partitions are static and
+    tile the key space, so sorting the flattened directory once per client
+    yields every lane's leaf run by rank arithmetic."""
+    n, L = meta_sep.shape
+    S = cfg.max_scan_leaves
+    gnode = jnp.repeat(jnp.arange(n, dtype=jnp.int32), L)
+    gleaf = jnp.tile(jnp.arange(L, dtype=jnp.uint32), n)
+    gfence = meta_sep.reshape(-1)
+    gvalid = (jnp.arange(L, dtype=jnp.uint32)[None, :]
+              < jnp.asarray(meta_nleaf, jnp.uint32)[:, None]).reshape(-1)
+    order = jnp.lexsort((gfence, jnp.where(gvalid, gnode, n)))
+    snode, sleaf, sfence = gnode[order], gleaf[order], gfence[order]
+    total = jnp.sum(gvalid.astype(jnp.int32))
+
+    lo = jnp.asarray(lo, jnp.uint32)
+    hi = jnp.asarray(hi, jnp.uint32)
+    node0 = home_of(cfg, lo)                               # (B,)
+    _, f0 = _route_leaf(cfg, meta_sep[node0], meta_nleaf[node0], lo)
+    before = gvalid[None, :] & (
+        (gnode[None, :] < node0[:, None])
+        | ((gnode[None, :] == node0[:, None]) & (gfence[None, :] < f0[:, None])))
+    rank0 = jnp.sum(before.astype(jnp.int32), axis=-1)     # (B,)
+    k = rank0[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    kc = jnp.minimum(k, n * L - 1)
+    en = (k < total) & (sfence[kc] <= hi[:, None]) & (lo <= hi)[:, None]
+    return dict(node=snode[kc], leaf=sleaf[kc], fence=sfence[kc], enabled=en)
+
+
+def scan_records(cfg: BTreeConfig, plan):
+    """OP_BT_SCAN request records for the per-position RPC fallback: the
+    expected fence_lo addresses the leaf (fence_lo is immutable, so the owner
+    walk lands on exactly the planned leaf, with authoritative fences)."""
+    return make_record(W.OP_BT_SCAN, plan["fence"], jnp.zeros_like(plan["fence"]))
+
+
+# ---------------------------------------------------------------------------
+# Owner side: serial handler (mutations, locks, commits) + vector handlers
+# ---------------------------------------------------------------------------
+def _read_leaf(cfg, layout, arena, leaf, base=None):
+    """base: word offset of the leaf arena to address (default the primary
+    `leaves` region; the handler passes a traced base to select the backup
+    tree for out-of-partition keys)."""
+    if base is None:
+        base = jnp.uint32(layout["leaves"].base)
+    off = (jnp.asarray(base, jnp.uint32)
+           + jnp.asarray(leaf, jnp.uint32) * jnp.uint32(cfg.leaf_words))
+    flat = lax.dynamic_slice(arena, (off.astype(jnp.int32),), (cfg.leaf_words,))
+    return flat.reshape(cfg.leaf_slots, sl.SLOT_WORDS)
+
+
+def _write_leaf(cfg, layout, arena, leaf, image, enabled, base=None):
+    if base is None:
+        base = jnp.uint32(layout["leaves"].base)
+    off = (jnp.asarray(base, jnp.uint32)
+           + jnp.asarray(leaf, jnp.uint32) * jnp.uint32(cfg.leaf_words))
+    off = off.astype(jnp.int32)
+    cur = lax.dynamic_slice(arena, (off,), (cfg.leaf_words,))
+    new = jnp.where(enabled, image.reshape(-1), cur)
+    return lax.dynamic_update_slice(arena, new, (off,))
+
+
+# Handler constructors are memoized per config: handlers are pure closures
+# over (cfg, layout), layout is a deterministic function of cfg
+# (build_layout), and a STABLE fn identity is what lets jax reuse the
+# compiled serial fold / vectorized walk across calls (a fresh closure per
+# call would recompile the owner-side scan every exchange round).
+_handler_cache: dict = {}
+
+
+def _cached(kind, cfg, build):
+    h = _handler_cache.get((kind, cfg))
+    if h is None:
+        h = _handler_cache[(kind, cfg)] = build()
+    return h
+
+
+def make_rpc_handler(cfg: BTreeConfig, layout: rg.RegionTable) -> R.Handler:
+    """The serial (mutating) rpc_handler — one registered handler serves
+    every btree opcode, like the hash table's.
+
+    Record layout [op, key_lo, key_hi, aux, value...]:
+      * LOOKUP/INSERT/DELETE: key in key_lo (key_hi must be 0), aux unused.
+      * LOCK: aux = caller's lock tag.  A full leaf that must later absorb an
+        insert is PRE-SPLIT here (split on the way down), so COMMIT never
+        lacks space — the lock-is-always-released invariant of the hash
+        table's commit carries over.
+      * COMMIT/ABORT: key_hi carries the lock tag, aux the header slot index
+        from the LOCK reply (direct addressing, no walk).
+      * BACKUP: logical replica install — an upsert on THIS node's tree.
+    Reply: [status, header slot idx of the key's leaf, leaf version, value].
+    """
+    return _cached("serial", cfg, lambda: _make_rpc_handler(cfg, layout))
+
+
+def _make_rpc_handler(cfg: BTreeConfig, layout: rg.RegionTable) -> R.Handler:
+    lw, lslots = cfg.leaf_width, cfg.leaf_slots
+    left_n = (lw + 1) // 2
+    empty = sl.make_empty_slot()
+    pb = layout["pbounds"].base
+
+    def fn(state, rec, valid):
+        arena = state["arena"]
+        op, key, key_hi, aux = rec[0], rec[1], rec[2], rec[3]
+        val = rec[4:4 + sl.VALUE_WORDS]
+        # tree selection: keys inside this node's partition live in the
+        # PRIMARY tree; out-of-partition keys are replica traffic and live in
+        # the full-range BACKUP tree (foreign separators must never enter the
+        # primary fence chain).  All leaf/sep/alloc accesses below use the
+        # selected bases.
+        foreign = (key < arena[pb]) | (key > arena[pb + 1])
+        pick = lambda p, b: jnp.where(foreign, jnp.uint32(layout[b].base),
+                                      jnp.uint32(layout[p].base))
+        leaves_base = pick("leaves", "bleaves")
+        sep_base = pick("sep", "bsep").astype(jnp.int32)
+        nleaf_off = pick("nleaf", "bnleaf").astype(jnp.int32)
+        nleaf = arena[nleaf_off]
+        sep = lax.dynamic_slice(arena, (sep_base,), (cfg.n_leaves,))
+        routed, _ = _route_leaf(cfg, sep, nleaf, key)
+
+        is_lookup = op == W.OP_BT_LOOKUP
+        is_ins = op == W.OP_BT_INSERT
+        is_del = op == W.OP_BT_DELETE
+        is_lock = op == W.OP_BT_LOCK
+        is_commit = op == W.OP_BT_COMMIT
+        is_abort = op == W.OP_BT_ABORT
+        is_bkw = op == W.OP_BT_BACKUP
+        known = (is_lookup | is_ins | is_del | is_lock | is_commit | is_abort
+                 | is_bkw)
+
+        # COMMIT/ABORT address their leaf directly (header slot from LOCK)
+        direct = is_commit | is_abort
+        leaf = jnp.where(direct, aux // jnp.uint32(lslots), routed)
+        L = _read_leaf(cfg, layout, arena, leaf, base=leaves_base)
+        hdr, recs = L[0], L[1:]
+        ver, lock = sl.slot_version(hdr), sl.slot_lock(hdr)
+        count = hdr[sl.VALUE0]
+        live = jnp.arange(lw, dtype=jnp.uint32) < count
+        m = live & (recs[:, sl.KEY_LO] == key)
+        present = jnp.any(m)
+        pidx = jnp.argmax(m)
+        cur_val = recs[pidx, sl.VALUE0:]
+        locked = lock != 0
+        full = count >= jnp.uint32(lw)
+        can_alloc = nleaf < jnp.uint32(cfg.n_leaves)
+        own = locked & (lock == key_hi)     # COMMIT/ABORT tag check
+
+        # ---- decide the mutation shape ----------------------------------
+        mut_ok = ~locked            # plain mutations need an unlocked leaf
+        upd = present & ((is_ins | is_bkw) & mut_ok | (is_commit & own))
+        dele = is_del & present & mut_ok
+        space_ok = ~full | can_alloc
+        want_ins = ~present & ((is_ins | is_bkw) & mut_ok & space_ok
+                               | (is_commit & own & space_ok))
+        presplit = is_lock & mut_ok & ~present & full & can_alloc
+        do_split = (want_ins & full) | presplit
+        lock_ok = is_lock & mut_ok & (present | space_ok)
+
+        # ---- sorted rebuild: clean records, apply update/delete, append
+        # the (possibly empty) new record, sort by key (empties sort last,
+        # and the live prefix is already sorted, so non-mutating ops are
+        # identity) --------------------------------------------------------
+        new_rec = sl.pack_slot(key, 0, 0, 0, sl.NULL_PTR, val)
+        base = jnp.where(live[:, None], recs, empty[None, :])
+        base = jnp.where((m & upd)[:, None], new_rec[None, :], base)
+        base = jnp.where((m & dele)[:, None], empty[None, :], base)
+        ext = jnp.concatenate(
+            [base, jnp.where(want_ins, new_rec, empty)[None, :]], axis=0)
+        order = jnp.argsort(ext[:, sl.KEY_LO], stable=True)
+        sorted_ext = ext[order]                       # (lw+1, SLOT_WORDS)
+        total = count + want_ins.astype(jnp.uint32) - dele.astype(jnp.uint32)
+
+        split_key = sorted_ext[left_n, sl.KEY_LO]
+        right_idx = nleaf
+        right_n = total - jnp.uint32(left_n)
+        key_right = do_split & (key >= split_key)     # key lands in new leaf
+
+        # ---- left (routed) leaf image ------------------------------------
+        keep = jnp.arange(lw, dtype=jnp.uint32) < jnp.where(
+            do_split, jnp.uint32(left_n), total)
+        left_recs = jnp.where(keep[:, None], sorted_ext[:lw], empty[None, :])
+        bump = upd | dele | want_ins | do_split
+        new_ver = jnp.where(bump, ver + 2, ver)
+        new_lock = lock
+        new_lock = jnp.where(lock_ok & ~key_right, aux, new_lock)
+        new_lock = jnp.where((is_commit | is_abort) & own, 0, new_lock)
+        left_hdr = sl.pack_slot(
+            sl.slot_key_lo(hdr),
+            jnp.where(do_split, split_key - 1, sl.slot_key_hi(hdr)),
+            new_ver, new_lock,
+            jnp.where(do_split, right_idx, sl.slot_next(hdr)),
+            hdr[sl.VALUE0:].at[0].set(jnp.where(do_split, jnp.uint32(left_n),
+                                                total)))
+        left_img = jnp.concatenate([left_hdr[None, :], left_recs], axis=0)
+        wrote = bump | lock_ok | ((is_commit | is_abort) & own)
+
+        # ---- right (new) leaf image on split -----------------------------
+        ridx = jnp.minimum(jnp.arange(lw) + left_n, lw)
+        rkeep = (jnp.arange(lw, dtype=jnp.uint32) < right_n)[:, None]
+        right_recs = jnp.where(rkeep, sorted_ext[ridx], empty[None, :])
+        right_hdr = sl.pack_slot(
+            split_key, sl.slot_key_hi(hdr), ver + 2,
+            jnp.where(lock_ok & key_right, aux, 0),
+            sl.slot_next(hdr),
+            jnp.zeros((sl.VALUE_WORDS,), jnp.uint32).at[0].set(right_n))
+        right_img = jnp.concatenate([right_hdr[None, :], right_recs], axis=0)
+
+        # ---- statuses ----------------------------------------------------
+        ok32 = jnp.uint32(W.ST_OK)
+        status = jnp.uint32(W.ST_BAD_OP)
+        status = jnp.where(is_lookup, jnp.where(
+            present, W.ST_OK, W.ST_NOT_FOUND).astype(jnp.uint32), status)
+        status = jnp.where(is_ins | is_bkw, jnp.where(
+            locked, W.ST_LOCK_FAIL,
+            jnp.where(present | space_ok, W.ST_OK,
+                      W.ST_NO_SPACE)).astype(jnp.uint32), status)
+        status = jnp.where(is_del, jnp.where(
+            present, jnp.where(locked, W.ST_LOCK_FAIL, W.ST_OK),
+            W.ST_NOT_FOUND).astype(jnp.uint32), status)
+        status = jnp.where(is_lock, jnp.where(
+            locked, W.ST_LOCK_FAIL,
+            jnp.where(present | space_ok, W.ST_OK,
+                      W.ST_NO_SPACE)).astype(jnp.uint32), status)
+        status = jnp.where(direct,
+                           jnp.where(own, ok32, jnp.uint32(W.ST_LOCK_FAIL)),
+                           status)
+
+        tgt_leaf = jnp.where(key_right, right_idx, leaf)
+        out_aux = header_slot(cfg, tgt_leaf)
+        # version of the key's leaf as the caller will see it: the lock reply
+        # reports the (even) post-presplit version its commit builds on
+        out_ver = jnp.where(bump, ver + 2, ver)
+        out_ver = jnp.where(presplit, ver + 2, out_ver)
+        out_val = jnp.where(present & (is_lookup | is_lock), cur_val,
+                            jnp.zeros_like(cur_val))
+
+        # ---- apply (all addressed through the selected tree's bases) -----
+        go = valid & known
+        arena = _write_leaf(cfg, layout, arena, leaf, left_img, wrote & go,
+                            base=leaves_base)
+        safe_right = jnp.minimum(right_idx, jnp.uint32(cfg.n_leaves - 1))
+        arena = _write_leaf(cfg, layout, arena, safe_right, right_img,
+                            do_split & go, base=leaves_base)
+        sep_idx = sep_base + safe_right.astype(jnp.int32)
+        arena = arena.at[sep_idx].set(
+            jnp.where(do_split & go, split_key, arena[sep_idx]))
+        arena = arena.at[nleaf_off].set(
+            jnp.where(do_split & go, nleaf + 1, nleaf))
+
+        status = jnp.where(valid, status, jnp.uint32(W.ST_BAD_OP))
+        reply = jnp.concatenate(
+            [jnp.stack([status, out_aux, out_ver]), out_val]).astype(jnp.uint32)
+        return {"arena": arena}, reply
+
+    return R.Handler(fn=fn, reply_words=cfg.reply_words, serial=True)
+
+
+def make_lookup_handler_vector(cfg: BTreeConfig,
+                               layout: rg.RegionTable) -> R.Handler:
+    """Read-only vectorized OP_BT_LOOKUP handler: the owner-side separator
+    walk + leaf search (the point-probe RPC fallback)."""
+    return _cached("lookup", cfg, lambda: _make_lookup_vector(cfg, layout))
+
+
+def _make_lookup_vector(cfg: BTreeConfig, layout: rg.RegionTable) -> R.Handler:
+    pb = layout["pbounds"].base
+
+    def fn(state, recs, mask):
+        arena = state["arena"]
+        S_, C, Wrec = recs.shape
+        flat = recs.reshape(S_ * C, Wrec)
+
+        def one(rec):
+            key = rec[1]
+            # same tree selection as the serial handler: out-of-partition
+            # keys are replica copies served from the backup tree (this is
+            # what a read that failed over to a backup resolves against)
+            foreign = (key < arena[pb]) | (key > arena[pb + 1])
+            pick = lambda p, b: jnp.where(
+                foreign, jnp.uint32(layout[b].base),
+                jnp.uint32(layout[p].base))
+            sep = lax.dynamic_slice(
+                arena, (pick("sep", "bsep").astype(jnp.int32),),
+                (cfg.n_leaves,))
+            nleaf = arena[pick("nleaf", "bnleaf").astype(jnp.int32)]
+            leaf, _ = _route_leaf(cfg, sep, nleaf, key)
+            L = _read_leaf(cfg, layout, arena, leaf,
+                           base=pick("leaves", "bleaves"))
+            hdr, rr = L[0], L[1:]
+            live = (jnp.arange(cfg.leaf_width, dtype=jnp.uint32)
+                    < hdr[sl.VALUE0])
+            m = live & (rr[:, sl.KEY_LO] == key)
+            present = jnp.any(m) & (rec[2] == 0)
+            value = jnp.where(present, rr[jnp.argmax(m), sl.VALUE0:], 0)
+            status = jnp.where(
+                rec[0] == W.OP_BT_LOOKUP,
+                jnp.where(present, W.ST_OK, W.ST_NOT_FOUND),
+                W.ST_BAD_OP).astype(jnp.uint32)
+            head = jnp.stack([status, header_slot(cfg, leaf),
+                              sl.slot_version(hdr)])
+            return jnp.concatenate([head, value]).astype(jnp.uint32)
+
+        return jax.vmap(one)(flat).reshape(S_, C, cfg.reply_words)
+
+    return R.Handler(fn=fn, reply_words=cfg.reply_words, serial=False)
+
+
+def make_scan_handler_vector(cfg: BTreeConfig,
+                             layout: rg.RegionTable) -> R.Handler:
+    """Read-only OP_BT_SCAN handler: return the FULL image of the leaf
+    covering the record's key (the range-scan fallback — the owner re-walks
+    its authoritative separators, the round-trip analogue of following a
+    B-link right-pointer after a stale route).  Reply:
+    [status, header slot idx] ++ raw leaf image."""
+    return _cached("scan", cfg, lambda: _make_scan_vector(cfg, layout))
+
+
+def _make_scan_vector(cfg: BTreeConfig, layout: rg.RegionTable) -> R.Handler:
+    # scans are a PRIMARY-tree protocol: plans are built from the primary
+    # separator directory and scan ranges route to their home partition, so
+    # the fallback walks the primary tree only (backup copies are reached by
+    # point lookups / failover, never by in-partition scans)
+    sep_base = layout["sep"].base
+    nleaf_off = layout["nleaf"].base
+
+    def fn(state, recs, mask):
+        arena = state["arena"]
+        S_, C, Wrec = recs.shape
+        flat = recs.reshape(S_ * C, Wrec)
+        sep = lax.dynamic_slice(arena, (sep_base,), (cfg.n_leaves,))
+        nleaf = arena[nleaf_off]
+
+        def one(rec):
+            key = rec[1]
+            leaf, _ = _route_leaf(cfg, sep, nleaf, key)
+            img = _read_leaf(cfg, layout, arena, leaf).reshape(-1)
+            status = jnp.where(rec[0] == W.OP_BT_SCAN, W.ST_OK,
+                               W.ST_BAD_OP).astype(jnp.uint32)
+            return jnp.concatenate(
+                [jnp.stack([status, header_slot(cfg, leaf)]), img]
+            ).astype(jnp.uint32)
+
+        return jax.vmap(one)(flat).reshape(S_, C, cfg.scan_reply_words)
+
+    return R.Handler(fn=fn, reply_words=cfg.scan_reply_words, serial=False)

@@ -30,6 +30,7 @@ from jax import lax
 
 from repro.core import regions as rg
 from repro.core import rpc as R
+from repro.core import wireproto as W
 from repro.core import slots as sl
 
 
@@ -133,6 +134,51 @@ def lookup_start(cfg: HashTableConfig, layout: rg.RegionTable, key_lo, key_hi,
         node = jnp.where(hit, cnode, node)
         off = jnp.where(hit, coff, off)
     return node, off, hit
+
+
+def uses_probe_cache(cfg: HashTableConfig) -> bool:
+    """Whether ``hybrid.onesided_probe`` should vmap lookup_start over a
+    per-client cache (part of the generic data-structure interface)."""
+    return cfg.cache_slots > 0
+
+
+def probe_words(cfg: HashTableConfig) -> int:
+    """Words fetched by one one-sided probe (generic interface)."""
+    return cfg.bucket_width * sl.SLOT_WORDS
+
+
+def lookup_records(cfg: HashTableConfig, key_lo, key_hi):
+    """Request records for the point-lookup RPC fallback (generic
+    interface)."""
+    return make_record(W.OP_LOOKUP, key_lo, key_hi)
+
+
+def probe_end(cfg: HashTableConfig, layout: rg.RegionTable, buf, key_lo,
+              key_hi, off, hit):
+    """Generic-interface wrapper over :func:`lookup_end`: decode a one-sided
+    probe into (found, value, version, slot_idx, resolved).
+
+    For the hash table ``resolved == found``: a miss may sit on an unread
+    overflow chain, so only a validated HIT makes the RPC fallback
+    unnecessary (the ordered index differs — see btree.probe_end)."""
+    success, value, local_idx = lookup_end(cfg, buf, key_lo, key_hi,
+                                           cache_hit=hit)
+    slots_v = buf.reshape(buf.shape[:-1] + (cfg.bucket_width, sl.SLOT_WORDS))
+    version = jnp.take_along_axis(
+        slots_v[..., sl.VERSION], local_idx[..., None].astype(jnp.int32),
+        axis=-1)[..., 0]
+    # global slot idx of the hit.  A cache hit reads the exact cached slot
+    # and lookup_end only accepts a match at window position 0, so the
+    # matched slot IS the cached one — never cached_idx + local_idx, which
+    # could cross a bucket (or region) boundary when bucket_width > 1.
+    _, bucket = home_of(cfg, key_lo, key_hi)
+    base_idx = bucket * jnp.uint32(cfg.bucket_width) + local_idx
+    cached_idx = ((jnp.asarray(off, jnp.uint32)
+                   - jnp.uint32(layout["slots"].base))
+                  // jnp.uint32(sl.SLOT_WORDS))
+    slot_idx = jnp.where(hit, cached_idx, base_idx)
+    return dict(found=success, value=value, version=version,
+                slot_idx=slot_idx, resolved=success)
 
 
 def lookup_end(cfg: HashTableConfig, buf, key_lo, key_hi, cache_hit=None):
@@ -271,7 +317,7 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         slot = f["slot"]
         alloc = arena[alloc_off]
 
-        status = jnp.uint32(R.ST_BAD_OP)
+        status = jnp.uint32(W.ST_BAD_OP)
         out_aux = jnp.uint32(0)
         out_ver = jnp.uint32(0)
         out_val = jnp.zeros((sl.VALUE_WORDS,), jnp.uint32)
@@ -281,20 +327,20 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         link_tail = jnp.asarray(False)       # also update tail slot's next_ptr
         bump_alloc = jnp.asarray(False)
 
-        is_nop = op == R.OP_NOP
+        is_nop = op == W.OP_NOP
         # ---- LOOKUP ------------------------------------------------------
-        is_lookup = op == R.OP_LOOKUP
+        is_lookup = op == W.OP_LOOKUP
         lk_ok = f["found"] & (sl.slot_version(slot) % 2 == 0)
         status = jnp.where(is_lookup,
-                           jnp.where(lk_ok, R.ST_OK, R.ST_NOT_FOUND).astype(jnp.uint32),
+                           jnp.where(lk_ok, W.ST_OK, W.ST_NOT_FOUND).astype(jnp.uint32),
                            status)
         out_aux = jnp.where(is_lookup, f["slot_idx"], out_aux)
         out_ver = jnp.where(is_lookup, sl.slot_version(slot), out_ver)
         out_val = jnp.where(is_lookup & lk_ok, sl.slot_value(slot), out_val)
 
         # ---- INSERT / UPDATE (unconditional write API, outside tx) --------
-        is_ins = op == R.OP_INSERT
-        is_upd = op == R.OP_UPDATE
+        is_ins = op == W.OP_INSERT
+        is_upd = op == W.OP_UPDATE
         locked_other = sl.slot_lock(slot) != 0
         # update in place when found & unlocked
         upd_ok = f["found"] & ~locked_other
@@ -318,11 +364,11 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         ins_found = is_ins & f["found"]
         ins_fresh = is_ins & ~f["found"]
         status = jnp.where(is_ins, jnp.where(
-            f["found"], jnp.where(upd_ok, R.ST_OK, R.ST_LOCK_FAIL),
-            jnp.where(ins_possible, R.ST_OK, R.ST_NO_SPACE)).astype(jnp.uint32), status)
+            f["found"], jnp.where(upd_ok, W.ST_OK, W.ST_LOCK_FAIL),
+            jnp.where(ins_possible, W.ST_OK, W.ST_NO_SPACE)).astype(jnp.uint32), status)
         status = jnp.where(is_upd, jnp.where(
-            f["found"], jnp.where(upd_ok, R.ST_OK, R.ST_LOCK_FAIL),
-            R.ST_NOT_FOUND).astype(jnp.uint32), status)
+            f["found"], jnp.where(upd_ok, W.ST_OK, W.ST_LOCK_FAIL),
+            W.ST_NOT_FOUND).astype(jnp.uint32), status)
 
         wr_upd = (ins_found | (is_upd & f["found"])) & upd_ok
         wr_ins = ins_fresh & ins_possible
@@ -336,19 +382,19 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         out_aux = jnp.where(wr_upd | wr_ins, write_idx, out_aux)
 
         # ---- DELETE --------------------------------------------------------
-        is_del = op == R.OP_DELETE
+        is_del = op == W.OP_DELETE
         del_ok = f["found"] & ~locked_other
         del_slot = slot.at[sl.KEY_LO].set(sl.EMPTY_KEY)
         del_slot = del_slot.at[sl.VERSION].set(sl.slot_version(slot) + 2)
         status = jnp.where(is_del, jnp.where(
-            f["found"], jnp.where(del_ok, R.ST_OK, R.ST_LOCK_FAIL),
-            R.ST_NOT_FOUND).astype(jnp.uint32), status)
+            f["found"], jnp.where(del_ok, W.ST_OK, W.ST_LOCK_FAIL),
+            W.ST_NOT_FOUND).astype(jnp.uint32), status)
         do_write = do_write | (is_del & del_ok)
         write_idx = jnp.where(is_del & del_ok, f["slot_idx"], write_idx)
         write_slot = jnp.where(is_del & del_ok, del_slot, write_slot)
 
         # ---- LOCK (tx execution phase) ------------------------------------
-        is_lock = op == R.OP_LOCK
+        is_lock = op == W.OP_LOCK
         tag = aux  # caller-unique nonzero tag
         lock_free = sl.slot_lock(slot) == 0
         lock_ok = f["found"] & lock_free
@@ -361,8 +407,8 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
                                jnp.zeros((sl.VALUE_WORDS,), jnp.uint32))
         lock_ins = is_lock & ~f["found"] & ins_possible
         status = jnp.where(is_lock, jnp.where(
-            f["found"], jnp.where(lock_free, R.ST_OK, R.ST_LOCK_FAIL),
-            jnp.where(ins_possible, R.ST_OK, R.ST_NO_SPACE)).astype(jnp.uint32), status)
+            f["found"], jnp.where(lock_free, W.ST_OK, W.ST_LOCK_FAIL),
+            jnp.where(ins_possible, W.ST_OK, W.ST_NO_SPACE)).astype(jnp.uint32), status)
         do_write = do_write | (is_lock & lock_ok) | lock_ins
         write_idx = jnp.where(is_lock & lock_ok, f["slot_idx"], write_idx)
         write_slot = jnp.where(is_lock & lock_ok, lk_slot, write_slot)
@@ -386,8 +432,8 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         # record layout here: [op, lock_tag, key_hi, slot_idx, value...] —
         # the key_lo word carries the caller's lock tag instead of a key (the
         # slot is addressed directly via aux, so no key walk is needed).
-        is_commit = op == R.OP_COMMIT_UNLOCK
-        is_abort = op == R.OP_ABORT_UNLOCK
+        is_commit = op == W.OP_COMMIT_UNLOCK
+        is_abort = op == W.OP_ABORT_UNLOCK
         tgt = aux  # slot idx from the LOCK reply
         unlock_tag = key_lo
         tslot = _read_slot(cfg, layout, arena, tgt)
@@ -403,7 +449,7 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
                                  .at[sl.VERSION].set(cm_ver),
                             tslot.at[sl.LOCK].set(0))
         status = jnp.where(is_commit | is_abort,
-                           jnp.where(own, R.ST_OK, R.ST_LOCK_FAIL).astype(jnp.uint32),
+                           jnp.where(own, W.ST_OK, W.ST_LOCK_FAIL).astype(jnp.uint32),
                            status)
         do_write = do_write | ((is_commit | is_abort) & own)
         write_idx = jnp.where((is_commit | is_abort) & own, tgt, write_idx)
@@ -411,9 +457,9 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         write_slot = jnp.where(is_abort & own, ab_slot, write_slot)
 
         # ---- READ_VERSION ---------------------------------------------------
-        is_rdv = op == R.OP_READ_VERSION
+        is_rdv = op == W.OP_READ_VERSION
         vslot = _read_slot(cfg, layout, arena, aux)
-        status = jnp.where(is_rdv, jnp.uint32(R.ST_OK), status)
+        status = jnp.where(is_rdv, jnp.uint32(W.ST_OK), status)
         out_aux = jnp.where(is_rdv, aux, out_aux)
         out_ver = jnp.where(is_rdv, sl.slot_version(vslot), out_ver)
 
@@ -427,11 +473,11 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         # (a stale copy can never alias the current one: key+version differ).
         # Backup copies are never LOCKed (locks target the primary), so there
         # is no locked_other arm here.
-        is_bkw = op == R.OP_BACKUP_WRITE
+        is_bkw = op == W.OP_BACKUP_WRITE
         bk_upd = sl.pack_slot(key_lo, key_hi, aux, 0, sl.slot_next(slot), val)
         bk_ins = sl.pack_slot(key_lo, key_hi, aux, 0, ins_next, val)
         status = jnp.where(is_bkw, jnp.where(
-            f["found"] | ins_possible, R.ST_OK, R.ST_NO_SPACE).astype(jnp.uint32),
+            f["found"] | ins_possible, W.ST_OK, W.ST_NO_SPACE).astype(jnp.uint32),
             status)
         wr_bk_upd = is_bkw & f["found"]
         wr_bk_ins = is_bkw & ~f["found"] & ins_possible
@@ -456,7 +502,7 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         new_alloc = jnp.where(bump_alloc & do_write, alloc + 1, alloc)
         arena = arena.at[alloc_off].set(new_alloc)
 
-        status = jnp.where(is_nop | ~valid, jnp.uint32(R.ST_BAD_OP), status)
+        status = jnp.where(is_nop | ~valid, jnp.uint32(W.ST_BAD_OP), status)
         reply = jnp.concatenate(
             [jnp.stack([status, out_aux, out_ver]), out_val]).astype(jnp.uint32)
         return {"arena": arena}, reply
@@ -470,16 +516,16 @@ def make_lookup_handler_vector(cfg: HashTableConfig, layout: rg.RegionTable) -> 
 
     def fn(state, recs, mask):
         arena = state["arena"]
-        S, C, W = recs.shape
-        flat = recs.reshape(S * C, W)
+        S, C, Wrec = recs.shape
+        flat = recs.reshape(S * C, Wrec)
 
         def one(rec):
             key_lo, key_hi = rec[1], rec[2]
             f = find(cfg, layout, arena, key_lo, key_hi)
             ok = f["found"] & (sl.slot_version(f["slot"]) % 2 == 0)
-            status = jnp.where(rec[0] == R.OP_LOOKUP,
-                               jnp.where(ok, R.ST_OK, R.ST_NOT_FOUND),
-                               R.ST_BAD_OP).astype(jnp.uint32)
+            status = jnp.where(rec[0] == W.OP_LOOKUP,
+                               jnp.where(ok, W.ST_OK, W.ST_NOT_FOUND),
+                               W.ST_BAD_OP).astype(jnp.uint32)
             return jnp.concatenate([
                 jnp.stack([status, f["slot_idx"], sl.slot_version(f["slot"])]),
                 jnp.where(ok, sl.slot_value(f["slot"]),

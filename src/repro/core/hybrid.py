@@ -21,6 +21,15 @@ by tx's fused schedule to ride the RPC fallback on the LOCK round), plus
 ``HybridMetrics``.  Invariant: a lookup dropped by send-queue back-pressure
 reports ``overflow`` — found=False then means "not delivered", never "key
 absent", and transactional callers must abort-and-retry it.
+
+The probe is DATA-STRUCTURE-GENERIC (Storm Table 3): every entry point takes
+``ds=`` — a datastructs module exporting ``lookup_start`` / ``probe_end`` /
+``probe_words`` / ``lookup_records`` / ``uses_probe_cache`` / ``cache_update``
+and the handler constructors — defaulting to the hash table.  The ordered
+B-link index (``datastructs.btree``) plugs in the same way; its ``probe_end``
+additionally distinguishes *resolved* from *found*: a stable in-fence leaf
+that lacks the key is a definitive miss needing NO RPC fallback, whereas a
+hash-table miss might still hide on an unread overflow chain.
 """
 from __future__ import annotations
 
@@ -32,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.core import onesided as osd
 from repro.core import rpc as R
+from repro.core import wireproto as W
 from repro.core import slots as sl
 from repro.core.datastructs import hashtable as ht
 from repro.core.transport import Transport, WireStats
@@ -51,50 +61,39 @@ class HybridMetrics:
         return HybridMetrics(z, z, z, WireStats.zero())
 
 
-def onesided_probe(t: Transport, state, key_lo, key_hi,
-                   cfg: ht.HashTableConfig, layout, *, cache=None,
-                   use_onesided: bool = True, capacity: Optional[int] = None,
-                   enabled=None, nic=None):
-    """Phase 1 of Algorithm 1: lookup_start + one-sided read + lookup_end.
+def onesided_probe(t: Transport, state, key_lo, key_hi, cfg, layout, *,
+                   cache=None, use_onesided: bool = True,
+                   capacity: Optional[int] = None, enabled=None, nic=None,
+                   ds=ht):
+    """Phase 1 of Algorithm 1: lookup_start + one-sided read + lookup_end,
+    for any registered data structure (``ds=`` module; default hash table).
 
     Returns a dict with the per-lane probe outcome: node, cache `hit`,
     one-sided `success` (validated hit), value/version/slot_idx of the hit,
-    `need_rpc` (enabled lanes the one-sided read did not satisfy), `enabled`,
+    `need_rpc` (enabled lanes the one-sided read did not RESOLVE — for the
+    ordered index a validated miss is resolved without RPC), `enabled`,
     and the read round's WireStats.  The RPC fallback for the `need_rpc`
     lanes can then ride any later exchange round (hybrid_lookup issues it
     immediately; tx's fused protocol piggybacks it on the LOCK round) and be
     folded in with merge_rpc_fallback."""
     if enabled is None:
         enabled = jnp.ones(key_lo.shape, bool)
-    if cache is not None and cfg.cache_slots > 0:
+    if cache is not None and ds.uses_probe_cache(cfg):
         node, off, hit = jax.vmap(
-            lambda c, kl, kh: ht.lookup_start(cfg, layout, kl, kh, c)
+            lambda c, kl, kh: ds.lookup_start(cfg, layout, kl, kh, c)
         )(cache, key_lo, key_hi)
     else:
-        node, off, hit = ht.lookup_start(cfg, layout, key_lo, key_hi, None)
-    read_words = cfg.bucket_width * sl.SLOT_WORDS
+        node, off, hit = ds.lookup_start(cfg, layout, key_lo, key_hi, None)
 
     if use_onesided:
         buf, ovf, s_read = osd.remote_read(
-            t, state["arena"], node, off, length=read_words, capacity=capacity,
-            enabled=enabled, nic=nic)
-        success, value, local_idx = ht.lookup_end(cfg, buf, key_lo, key_hi,
-                                                  cache_hit=hit)
-        # version of the matched slot (for OCC validation bookkeeping)
-        slots_v = buf.reshape(buf.shape[:-1] + (cfg.bucket_width, sl.SLOT_WORDS))
-        version = jnp.take_along_axis(
-            slots_v[..., sl.VERSION], local_idx[..., None].astype(jnp.int32),
-            axis=-1)[..., 0]
-        # global slot idx of the hit.  A cache hit reads the exact cached slot
-        # and lookup_end only accepts a match at window position 0, so the
-        # matched slot IS the cached one — never cached_idx + local_idx, which
-        # could cross a bucket (or region) boundary when bucket_width > 1.
-        _, bucket = ht.home_of(cfg, key_lo, key_hi)
-        base_idx = bucket * jnp.uint32(cfg.bucket_width) + local_idx
-        cached_idx = (off - jnp.uint32(layout["slots"].base)) // jnp.uint32(sl.SLOT_WORDS)
-        slot_idx = jnp.where(hit, cached_idx, base_idx)
-        success = success & ~ovf & enabled
-        need_rpc = ~success & enabled
+            t, state["arena"], node, off, length=ds.probe_words(cfg),
+            capacity=capacity, enabled=enabled, nic=nic)
+        pe = ds.probe_end(cfg, layout, buf, key_lo, key_hi, off, hit)
+        success = pe["found"] & ~ovf & enabled
+        resolved = pe["resolved"] & ~ovf & enabled
+        value, version, slot_idx = pe["value"], pe["version"], pe["slot_idx"]
+        need_rpc = ~resolved & enabled
     else:
         success = jnp.zeros(key_lo.shape, bool)
         value = jnp.zeros(key_lo.shape + (sl.VALUE_WORDS,), jnp.uint32)
@@ -117,7 +116,7 @@ def merge_rpc_fallback(probe, replies, rpc_ovf):
     back-pressure — for those, found=False means "not delivered", NOT "key
     absent"."""
     need = probe["need_rpc"]
-    rpc_ok = need & (replies[..., 0] == R.ST_OK) & ~rpc_ovf
+    rpc_ok = need & (replies[..., 0] == W.ST_OK) & ~rpc_ovf
     value = jnp.where(rpc_ok[..., None], replies[..., 3:], probe["value"])
     version = jnp.where(rpc_ok, replies[..., 2], probe["version"])
     slot_idx = jnp.where(rpc_ok, replies[..., 1], probe["slot_idx"])
@@ -125,22 +124,25 @@ def merge_rpc_fallback(probe, replies, rpc_ovf):
                 slot_idx=slot_idx, rpc_ok=rpc_ok, overflow=need & rpc_ovf)
 
 
-def update_lookup_cache(cfg: ht.HashTableConfig, cache, key_lo, key_hi, node,
-                        slot_idx, found):
+def update_lookup_cache(cfg, cache, key_lo, key_hi, node, slot_idx, found,
+                        ds=ht):
     """lookup_end's caching duty: remember exact addresses for future
-    one-sided reads (no-op when caching is off)."""
-    if cache is None or cfg.cache_slots == 0:
+    one-sided reads (no-op when caching is off; the ordered index's
+    cache_update is an explicit no-op — its separator cache refreshes
+    wholesale via btree.refresh_meta)."""
+    if cache is None or not ds.uses_probe_cache(cfg):
         return cache
     return jax.vmap(
-        lambda c, kl, kh, nd, si, v: ht.cache_update(cfg, c, kl, kh, nd, si, v)
+        lambda c, kl, kh, nd, si, v: ds.cache_update(cfg, c, kl, kh, nd, si, v)
     )(cache, key_lo, key_hi, node, slot_idx, found)
 
 
-def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
-                  layout, *, cache=None, use_onesided: bool = True,
+def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg, layout, *,
+                  cache=None, use_onesided: bool = True,
                   rpc_serial: bool = False, capacity: Optional[int] = None,
-                  enabled=None, nic=None):
-    """Batched one-two-sided lookup.
+                  enabled=None, nic=None, ds=ht):
+    """Batched one-two-sided lookup (any registered data structure via
+    ``ds=``; default hash table).
 
     key_lo/key_hi: (N_local, B) uint32.
     enabled: optional (N_local, B) bool — disabled lanes issue nothing (no
@@ -154,12 +156,12 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
     """
     probe = onesided_probe(t, state, key_lo, key_hi, cfg, layout, cache=cache,
                            use_onesided=use_onesided, capacity=capacity,
-                           enabled=enabled, nic=nic)
+                           enabled=enabled, nic=nic, ds=ds)
 
     # ---- phase 2: write-based RPC for the failed lanes --------------------
-    recs = ht.make_record(R.OP_LOOKUP, key_lo, key_hi)
-    handler = (ht.make_rpc_handler(cfg, layout) if rpc_serial
-               else ht.make_lookup_handler_vector(cfg, layout))
+    recs = ds.lookup_records(cfg, key_lo, key_hi)
+    handler = (ds.make_rpc_handler(cfg, layout) if rpc_serial
+               else ds.make_lookup_handler_vector(cfg, layout))
     state, replies, ovf2, s_rpc = R.rpc_call(
         t, state, probe["node"], recs, handler, capacity=capacity,
         enabled=probe["need_rpc"], nic=nic)
@@ -167,7 +169,7 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg: ht.HashTableConfig,
 
     # ---- lookup_end caching duty ------------------------------------------
     cache = update_lookup_cache(cfg, cache, key_lo, key_hi, probe["node"],
-                                mg["slot_idx"], mg["found"])
+                                mg["slot_idx"], mg["found"], ds=ds)
 
     metrics = HybridMetrics(
         onesided_success=jnp.sum(probe["success"].astype(jnp.float32)),

@@ -53,6 +53,7 @@ import jax.numpy as jnp
 
 from repro.core import onesided as osd
 from repro.core import rpc as R
+from repro.core import wireproto as W
 from repro.core import slots as sl
 from repro.core.datastructs import hashtable as ht
 from repro.core.transport import Transport
@@ -116,7 +117,27 @@ def backup_write_records(lock_ctx, write_values):
     committed version so the backup installs the primary's exact image."""
     n, items = lock_ctx["key_lo"].shape
     return ht.make_record(
-        R.OP_BACKUP_WRITE, lock_ctx["key_lo"], lock_ctx["key_hi"],
+        W.OP_BACKUP_WRITE, lock_ctx["key_lo"], lock_ctx["key_hi"],
+        aux=committed_version(lock_ctx["lock_ver"]),
+        value=jnp.asarray(write_values).reshape(n, items, sl.VALUE_WORDS))
+
+
+def btree_backup_records(lock_ctx, write_values):
+    """OP_BT_BACKUP records for the ordered index's commit round: each
+    committed (key, value) is upserted into the backup replica's FULL-RANGE
+    backup tree (the key is outside the backup node's own partition under
+    ring placement, so the handler routes it away from the primary fence
+    chain — see btree.build_layout).  Replication of the ordered index is
+    LOGICAL — the backup arena may pack records differently (its own split
+    history) — unlike the hash table's byte-equal slot images; the aux word
+    still carries the predicted committed leaf version for observability.
+    Rides the commit fused round exactly like the hash-table backup classes
+    (zero extra exchange rounds; see ``tx._bt_commit_or_abort``)."""
+    from repro.core.datastructs import btree as bt
+    n, items = lock_ctx["key_lo"].shape
+    return bt.make_record(
+        W.OP_BT_BACKUP, lock_ctx["key_lo"],
+        jnp.zeros_like(lock_ctx["key_lo"]),
         aux=committed_version(lock_ctx["lock_ver"]),
         value=jnp.asarray(write_values).reshape(n, items, sl.VALUE_WORDS))
 
@@ -187,10 +208,10 @@ def failover_lookup(t: Transport, state, key_lo, key_hi,
     # RPC fallback (chained / overflowed lanes) — served by the SAME replica
     need = en & ~success
     state, rep2, ovf2, s2 = R.rpc_call(
-        t, state, dest, ht.make_record(R.OP_LOOKUP, key_lo, key_hi),
+        t, state, dest, ht.make_record(W.OP_LOOKUP, key_lo, key_hi),
         ht.make_lookup_handler_vector(cfg, layout), capacity=capacity,
         enabled=need, nic=nic)
-    rpc_ok = need & (rep2[..., 0] == R.ST_OK) & ~ovf2
+    rpc_ok = need & (rep2[..., 0] == W.ST_OK) & ~ovf2
     value = jnp.where(rpc_ok[..., None], rep2[..., 3:], value)
     version = jnp.where(rpc_ok, rep2[..., 2], version)
     slot_idx = jnp.where(rpc_ok, rep2[..., 1], slot_idx)

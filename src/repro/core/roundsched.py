@@ -60,10 +60,10 @@ from jax import lax
 from repro.core import regions as rg
 from repro.core.transport import (Transport, pick_replies, route_by_dest,
                                   wire_for_classes)
-
 # Transport-level "request never delivered" status stamped into reply word 0
-# of overflowed/parked RPC lanes.  rpc.py re-exports this as its ST_DROPPED.
-ST_DROPPED = 5
+# of overflowed/parked RPC lanes (registered with every other status in
+# core/wireproto.py; rpc.py re-exports it too).
+from repro.core.wireproto import ST_DROPPED  # noqa: F401  (re-export)
 
 
 # ---------------------------------------------------------------------------

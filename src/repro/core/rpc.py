@@ -31,27 +31,16 @@ from repro.core import roundsched as rs
 from repro.core.roundsched import serial_apply, vector_apply  # noqa: F401  (re-export)
 from repro.core.transport import Transport, WireStats  # noqa: F401  (re-export)
 
-# Well-known opcodes (data structures may extend >= 16)
-OP_NOP = 0
-OP_LOOKUP = 1
-OP_INSERT = 2
-OP_UPDATE = 3
-OP_DELETE = 4
-OP_LOCK = 5           # lock write-set entry (returns version at lock time)
-OP_COMMIT_UNLOCK = 6  # install value, version += 2, unlock
-OP_ABORT_UNLOCK = 7   # release lock without installing
-OP_READ_VERSION = 8   # validation re-read by RPC (fallback path)
-OP_BACKUP_WRITE = 9   # install a committed record image on a backup replica
-
-# Reply status codes (word 0 of every reply)
-ST_OK = 0
-ST_NOT_FOUND = 1
-ST_LOCK_FAIL = 2
-ST_NO_SPACE = 3   # handler-returned: storage full (request WAS delivered)
-ST_BAD_OP = 4
-ST_DROPPED = rs.ST_DROPPED  # transport-level: request never delivered
-                  # (send-queue overflow or parked lane) — retryable
-                  # back-pressure, distinct from the permanent ST_NO_SPACE
+# Opcodes and reply statuses live in core/wireproto.py — the single
+# registration point for every data structure's wire contract.  They are
+# re-exported here so the historical ``R.OP_*`` / ``R.ST_*`` spelling keeps
+# working everywhere.
+from repro.core.wireproto import (  # noqa: F401  (re-export)
+    OP_ABORT_UNLOCK, OP_BACKUP_WRITE, OP_BT_ABORT, OP_BT_BACKUP, OP_BT_COMMIT,
+    OP_BT_DELETE, OP_BT_INSERT, OP_BT_LOCK, OP_BT_LOOKUP, OP_BT_SCAN,
+    OP_COMMIT_UNLOCK, OP_DELETE, OP_INSERT, OP_LOCK, OP_LOOKUP, OP_NOP,
+    OP_READ_VERSION, OP_UPDATE, ST_BAD_OP, ST_DROPPED, ST_LOCK_FAIL,
+    ST_NOT_FOUND, ST_NO_SPACE, ST_OK)
 
 
 @dataclasses.dataclass(frozen=True)

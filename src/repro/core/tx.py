@@ -62,10 +62,13 @@ import jax.numpy as jnp
 
 from repro.core import hybrid as hy
 from repro.core import onesided as osd
+from repro.core import regions as rg
 from repro.core import replication as repl
 from repro.core import roundsched as rs
 from repro.core import rpc as R
+from repro.core import wireproto as W
 from repro.core import slots as sl
+from repro.core.datastructs import btree as bt
 from repro.core.datastructs import hashtable as ht
 from repro.core.transport import Transport
 
@@ -101,7 +104,7 @@ def _lock_requests(t: Transport, cfg: ht.HashTableConfig, layout, *,
     lane = jnp.arange(B * Wr, dtype=jnp.uint32) // jnp.uint32(max(Wr, 1))
     tag = (t.node_ids().astype(jnp.uint32)[:, None] * jnp.uint32(B)
            + lane[None, :] + jnp.uint32(1))
-    recs = ht.make_record(R.OP_LOCK, wk_lo, wk_hi, aux=tag)
+    recs = ht.make_record(W.OP_LOCK, wk_lo, wk_hi, aux=tag)
     return dict(key_lo=wk_lo, key_hi=wk_hi, enabled=en, node=wnode, tag=tag), recs
 
 
@@ -109,7 +112,7 @@ def _parse_lock_replies(lk, lrep, lovf, N, B, Wr):
     """Decode the LOCK round's replies into the lock context dict."""
     status = lrep[..., 0]
     en = lk["enabled"]
-    lock_ok = (status == R.ST_OK) & ~lovf & en
+    lock_ok = (status == W.ST_OK) & ~lovf & en
     return dict(
         lk,
         lock_ok=lock_ok, lock_slot=lrep[..., 1],
@@ -118,10 +121,10 @@ def _parse_lock_replies(lk, lrep, lovf, N, B, Wr):
         # which is what the backup fan-out installs (replication module)
         lock_ver=lrep[..., 2],
         locked_values=lrep[..., 3:].reshape(N, B, Wr, sl.VALUE_WORDS),
-        lock_fail=(status == R.ST_LOCK_FAIL) & en,
+        lock_fail=(status == W.ST_LOCK_FAIL) & en,
         # overflow-class outcomes: dropped by back-pressure (retryable) or
         # table full (ST_NO_SPACE, delivered) — both abort with cause overflow
-        no_space=((status == R.ST_NO_SPACE) | (status == R.ST_DROPPED)
+        no_space=((status == W.ST_NO_SPACE) | (status == W.ST_DROPPED)
                   | lovf) & en,
         overflow=lovf & en)
 
@@ -187,16 +190,22 @@ def lock_write_set(t: Transport, state, cfg: ht.HashTableConfig, layout,
 
 
 def validate_read_set(t: Transport, state, layout, read_ctx, *,
-                      capacity: Optional[int] = None, nic=None):
+                      capacity: Optional[int] = None, nic=None,
+                      offset_of=None):
     """VALIDATE phase: one-sided re-read of every read-set slot version.
 
+    ``offset_of(layout, slot_idx)`` maps a read-set slot index to its arena
+    word offset (default: the hash table's ``slots`` region; the ordered
+    index validates leaf HEADER slots in its ``leaves`` region instead).
     Returns a dict with per-item `valid` plus the overflow mask and wire
     stats."""
     # absent reads validate trivially, so only found reads are re-read — dead
     # validation reads would waste per-destination send-queue capacity and
     # could overflow a found lane's re-read for nothing
     issued = read_ctx["enabled"] & read_ctx["found"]
-    voff = ht.slot_idx_offset(layout, read_ctx["slot"])
+    if offset_of is None:
+        offset_of = ht.slot_idx_offset
+    voff = offset_of(layout, read_ctx["slot"])
     vbuf, vovf, s_val = osd.remote_read(
         t, state["arena"], read_ctx["node"], voff, length=sl.SLOT_WORDS,
         capacity=capacity, enabled=issued, nic=nic)
@@ -245,8 +254,8 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
     N, B = commit_lane.shape
     Wr = lock_ctx["key_lo"].shape[1] // max(B, 1)
     commit_item = jnp.repeat(commit_lane, Wr, axis=-1)  # (N, B*Wr)
-    op = jnp.where(commit_item, jnp.uint32(R.OP_COMMIT_UNLOCK),
-                   jnp.uint32(R.OP_ABORT_UNLOCK))
+    op = jnp.where(commit_item, jnp.uint32(W.OP_COMMIT_UNLOCK),
+                   jnp.uint32(W.OP_ABORT_UNLOCK))
     # the key_lo word carries the lock tag: the owner releases a lock only
     # for the exact tag that acquired it (hashtable's unlock ownership check)
     cm_recs = ht.make_record(
@@ -267,7 +276,7 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
     state, results, s_cm = rs.fused_round(t, state, classes, nic=nic)
     overflow = results[0][1] & lock_ctx["lock_ok"]
     for brep, bovf in results[1:]:
-        overflow = overflow | ((bovf | (brep[..., 0] == R.ST_NO_SPACE))
+        overflow = overflow | ((bovf | (brep[..., 0] == W.ST_NO_SPACE))
                                & bk_en)
     return state, dict(overflow=overflow, wire=s_cm)
 
@@ -362,7 +371,7 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
     # stays bit-identical to the reference's single validate round.
     lk, lock_recs = _lock_requests(t, cfg, layout, write_keys=write_keys,
                                    write_enabled=write_enabled)
-    lookup_recs = ht.make_record(R.OP_LOOKUP, rk_lo, rk_hi)
+    lookup_recs = ht.make_record(W.OP_LOOKUP, rk_lo, rk_hi)
     vector_h = ht.make_lookup_handler_vector(cfg, layout)
     classes = [
         rs.rpc_class(probe["node"], lookup_recs, vector_h,
@@ -488,3 +497,311 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         onesided_success=m.onesided_success, rpc_fallback=m.rpc_fallback,
         total=m.total, capacity=capacity, nic=nic, rep=rep)
     return state, cache, res
+
+
+# ===========================================================================
+# Transactional RANGE SCANS over the ordered index (datastructs.btree).
+#
+# A scan transaction's READ SET is a run of B-link LEAVES: the client plans
+# the (node, leaf) sequence covering [lo, hi] from its cached separator
+# directory, reads each leaf with ONE one-sided read, and OCC-validates the
+# leaf HEADER versions exactly like point transactions validate record slots
+# (every record or structural change bumps the leaf version, so a validated
+# scan is serializable at its validation point).  Writes lock whole leaves
+# (OP_BT_LOCK pre-splits full leaves so OP_BT_COMMIT always has room).
+#
+# Two schedules, same phase records/handlers/decisions (mirroring
+# run_transactions):
+#
+#   * fused=False — the 5-round reference: leaf reads, scan-RPC fallback,
+#     LOCK, validate, COMMIT — one phase per all-to-all.
+#   * fused=True (default) — the fallback rides the LOCK round and the
+#     validate re-read of every leaf the one-sided read already resolved
+#     rides it too (gathers observe the post-lock state):
+#
+#         round 1  one-sided reads of the planned leaves
+#         round 2  scan fallback ∥ LOCK ∥ validate(one-sided-resolved)
+#         round 3  validate(RPC-resolved leaves)   [empty on the fast path]
+#         round 4  COMMIT / ABORT (+ OP_BT_BACKUP fan-out at rep.f > 0)
+#
+#     i.e. the fast-path scan costs EXACTLY the point-lookup schedule's
+#     exchange rounds: 2 for a pure scan, 3 with writes — zero extra rounds
+#     (asserted by benchmarks/range_scan.py and the bench gate).
+#
+# Stale separators (a leaf split since the last refresh) surface as a GAP in
+# the fence chain: the lane aborts with cause `validate` and the retry loop
+# (txloop.scan_loop) refreshes the directory — the round-trip analogue of
+# chasing the B-link right-pointer.  `truncated` lanes (range needs more
+# than cfg.max_scan_leaves leaves) are reported, parked, and never silently
+# clipped.  Invariants mirror run_transactions: fused=True is
+# round-count-only; rep=None ≡ rep.f == 0 bit-identical.
+# ===========================================================================
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ScanTxResult:
+    committed: jnp.ndarray        # (N, B) bool
+    scan_keys: jnp.ndarray        # (N, B, S, leaf_width) uint32
+    scan_values: jnp.ndarray      # (N, B, S, leaf_width, VALUE_WORDS)
+    scan_mask: jnp.ndarray        # (N, B, S, leaf_width) bool — in [lo, hi]
+    scan_complete: jnp.ndarray    # (N, B) bool — fence chain covered [lo, hi]
+    truncated: jnp.ndarray        # (N, B) bool — range needs > S leaves
+    locked_values: jnp.ndarray    # (N, B, Wr, VALUE_WORDS)
+    aborted_lock: jnp.ndarray     # (N, B) bool
+    aborted_validate: jnp.ndarray
+    aborted_overflow: jnp.ndarray
+    metrics: hy.HybridMetrics
+    round_trips: jnp.ndarray      # scalar
+
+
+def _bt_lock_requests(t: Transport, cfg: bt.BTreeConfig, *, write_keys,
+                      write_enabled):
+    """Flatten the btree write set and build OP_BT_LOCK records (leaf-grain
+    locks; unique nonzero tag per (node, lane) like the hash-table path)."""
+    N, B, Wr = write_keys.shape
+    wk = write_keys.reshape(N, B * Wr)
+    en = write_enabled.reshape(N, B * Wr)
+    wnode = bt.home_of(cfg, wk)
+    lane = jnp.arange(B * Wr, dtype=jnp.uint32) // jnp.uint32(max(Wr, 1))
+    tag = (t.node_ids().astype(jnp.uint32)[:, None] * jnp.uint32(B)
+           + lane[None, :] + jnp.uint32(1))
+    recs = bt.make_record(W.OP_BT_LOCK, wk, jnp.zeros_like(wk), aux=tag)
+    return dict(key_lo=wk, key_hi=jnp.zeros_like(wk), enabled=en, node=wnode,
+                tag=tag), recs
+
+
+def _bt_leaf_offset_of(layout, slot_idx):
+    """Validation-offset hook: btree read-set entries are header slots in
+    the `leaves` region."""
+    return rg.slot_offset(layout["leaves"], slot_idx)
+
+
+def _bt_commit_or_abort(t: Transport, state, serial_h, lock_ctx, *,
+                        commit_lane, write_values,
+                        capacity: Optional[int] = None, nic=None, rep=None):
+    """COMMIT/ABORT for btree write sets.  Record layout: key in key_lo, the
+    lock TAG in the (otherwise unused) key_hi word, the locked leaf's header
+    slot in aux — the owner verifies the exact tag and installs the upsert
+    (never splitting: OP_BT_LOCK pre-split, and the lock froze the leaf).
+
+    With rep.f > 0, OP_BT_BACKUP classes ride this SAME fused round (zero
+    extra exchange rounds — the PR-4 backup fan-out, logically replicated for
+    the ordered index).  A backup write that is dropped, finds the backup
+    leaf arena full (ST_NO_SPACE) or the backup leaf locked (ST_LOCK_FAIL)
+    aborts its lane with cause overflow for the loop to retry — never a
+    silent under-replication."""
+    N, B = commit_lane.shape
+    Wr = lock_ctx["key_lo"].shape[1] // max(B, 1)
+    commit_item = jnp.repeat(commit_lane, Wr, axis=-1)
+    op = jnp.where(commit_item, jnp.uint32(W.OP_BT_COMMIT),
+                   jnp.uint32(W.OP_BT_ABORT))
+    cm_recs = bt.make_record(
+        op, lock_ctx["key_lo"], lock_ctx["tag"], aux=lock_ctx["lock_slot"],
+        value=write_values.reshape(N, B * Wr, sl.VALUE_WORDS))
+    classes = [rs.rpc_class(lock_ctx["node"], cm_recs, serial_h,
+                            enabled=lock_ctx["lock_ok"], capacity=capacity)]
+    bk_en = None
+    if rep is not None and rep.f > 0:
+        bk_recs = repl.btree_backup_records(lock_ctx, write_values)
+        bk_en = commit_item & lock_ctx["lock_ok"]
+        for i in range(1, rep.f + 1):
+            classes.append(rs.rpc_class(
+                rep.replica_of(lock_ctx["node"], i), bk_recs, serial_h,
+                enabled=bk_en, capacity=capacity))
+    state, results, s_cm = rs.fused_round(t, state, classes, nic=nic)
+    overflow = results[0][1] & lock_ctx["lock_ok"]
+    for brep, bovf in results[1:]:
+        bst = brep[..., 0]
+        overflow = overflow | ((bovf | (bst == W.ST_NO_SPACE)
+                                | (bst == W.ST_LOCK_FAIL)) & bk_en)
+    return state, dict(overflow=overflow, wire=s_cm)
+
+
+def _scan_chain(cfg: bt.BTreeConfig, fence_lo, fence_hi, lo, hi, en,
+                resolved):
+    """Client-side coverage check over the merged leaf run (all (N, B, S)).
+
+    complete  — every enabled position resolved, fences contiguous
+                (fence_lo[j] == fence_hi[j-1] + 1), the first leaf covers lo
+                and some leaf reaches hi: the union of validated leaves IS
+                [lo, hi] with no gap a concurrent split could hide a key in.
+    truncated — the chain is sound but exhausts all S positions before
+                reaching hi: the range genuinely needs > max_scan_leaves
+                leaves (reported, never silently clipped)."""
+    all_resolved = jnp.all(resolved | ~en, axis=-1)
+    first_ok = fence_lo[..., 0] <= lo
+    cont = fence_lo[..., 1:] == fence_hi[..., :-1] + 1
+    cont_ok = jnp.all(cont | ~en[..., 1:], axis=-1)
+    reach = jnp.any(en & (fence_hi >= hi[..., None]), axis=-1)
+    has_scan = jnp.any(en, axis=-1)
+    sound = all_resolved & first_ok & cont_ok
+    complete = ~has_scan | (sound & reach)
+    truncated = has_scan & en[..., -1] & sound & ~reach
+    return complete, truncated
+
+
+def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
+                          scan_lo, scan_hi, meta, write_keys=None,
+                          write_values=None, write_enabled=None,
+                          scan_enabled=None, capacity: Optional[int] = None,
+                          fused: bool = True, nic=None, rep=None):
+    """Execute a batch of range-scan transactions over the ordered index,
+    one per lane (single shot; see txloop.scan_loop for bounded retry).
+
+    scan_lo/hi:   (N, B) uint32 INCLUSIVE key ranges (lo > hi scans nothing —
+                  a pure-write lane).
+    meta:         cached separator directory ({"sep", "nleaf"} from
+                  btree.refresh_meta / local_meta) — the client-side inner
+                  nodes every plan walks locally.
+    write_keys:   (N, B, Wr) uint32 btree keys upserted on commit (None = no
+                  writes); write_values (N, B, Wr, VALUE_WORDS).
+    Limitations (btree module docstring): a lane's write keys must land on
+    distinct leaves, and a lane must not write into leaves its own scan
+    reads (leaf-grain self-conflict aborts forever).
+
+    Returns (state, ScanTxResult).  fused/nic/rep/capacity as in
+    run_transactions — fused changes ROUND COUNTS only, rep=None ≡ f=0."""
+    N, B = scan_lo.shape
+    S = cfg.max_scan_leaves
+    if write_keys is None:
+        write_keys = jnp.zeros((N, B, 0), jnp.uint32)
+        write_values = jnp.zeros((N, B, 0, sl.VALUE_WORDS), jnp.uint32)
+    Wr = write_keys.shape[2]
+    if write_enabled is None:
+        write_enabled = jnp.ones((N, B, Wr), bool)
+    if scan_enabled is None:
+        scan_enabled = jnp.ones((N, B), bool)
+    serial_h = bt.make_rpc_handler(cfg, layout)
+    scan_h = bt.make_scan_handler_vector(cfg, layout)
+
+    # client-side plan from the cached inner nodes (meta has a leading
+    # client axis; each node plans its own lanes)
+    plan = jax.vmap(
+        lambda sep, nl, lo, hi: bt.scan_plan(cfg, sep, nl, lo, hi)
+    )(meta["sep"], meta["nleaf"], scan_lo, scan_hi)
+    en = plan["enabled"] & scan_enabled[..., None]              # (N, B, S)
+    en_f = en.reshape(N, B * S)
+    dest = plan["node"].reshape(N, B * S)
+    pleaf = plan["leaf"].reshape(N, B * S)
+    pfence = plan["fence"].reshape(N, B * S)
+
+    # ---- round 1: one-sided reads of the planned leaves -------------------
+    buf, ovf1, s1 = osd.remote_read(
+        t, state["arena"], dest, bt.leaf_offset(cfg, layout, pleaf),
+        length=cfg.leaf_words, capacity=capacity, enabled=en_f, nic=nic)
+    p1 = bt.parse_leaf(cfg, buf)
+    # a position is resolved one-sided iff the image is stable and its
+    # immutable low fence matches the plan (stale separators can only MISS
+    # leaves, never mis-assign fences)
+    pos_ok = (en_f & ~ovf1 & (p1["version"] % 2 == 0) & (p1["lock"] == 0)
+              & (p1["fence_lo"] == pfence))
+    need = en_f & ~pos_ok
+    scan_recs = bt.make_record(W.OP_BT_SCAN, pfence, jnp.zeros_like(pfence))
+    lk, lock_recs = _bt_lock_requests(t, cfg, write_keys=write_keys,
+                                      write_enabled=write_enabled)
+
+    fuse_v1 = fused and capacity is None and S > 0
+    if fused:
+        # ---- round 2: scan fallback ∥ LOCK ∥ validate(one-sided-resolved) -
+        classes = [
+            rs.rpc_class(dest, scan_recs, scan_h, enabled=need,
+                         capacity=capacity),
+            rs.rpc_class(lk["node"], lock_recs, serial_h,
+                         enabled=lk["enabled"], capacity=capacity),
+        ]
+        if fuse_v1:
+            classes.append(rs.read_class(
+                dest, _bt_leaf_offset_of(layout, bt.header_slot(cfg, pleaf)),
+                length=sl.SLOT_WORDS, enabled=pos_ok))
+        state, results, s2 = rs.fused_round(t, state, classes, nic=nic)
+        scan_rep, scan_ovf = results[0]
+        lrep, lovf = results[1]
+        s_fallback = None
+    else:
+        # ---- reference rounds 2 and 3: fallback, then LOCK ----------------
+        state, scan_rep, scan_ovf, s_fallback = R.rpc_call(
+            t, state, dest, scan_recs, scan_h, capacity=capacity,
+            enabled=need, nic=nic)
+        state, lrep, lovf, s2 = R.rpc_call(
+            t, state, lk["node"], lock_recs, serial_h, capacity=capacity,
+            enabled=lk["enabled"], nic=nic)
+    lctx = _parse_lock_replies(lk, lrep, lovf, N, B, Wr)
+
+    # merge the authoritative fallback leaf images over the one-sided reads
+    rpc_ok = need & (scan_rep[..., 0] == W.ST_OK) & ~scan_ovf
+    mbuf = jnp.where(rpc_ok[..., None], scan_rep[..., 2:], buf)
+    mslot = jnp.where(rpc_ok, scan_rep[..., 1], bt.header_slot(cfg, pleaf))
+    p = bt.parse_leaf(cfg, mbuf)
+    resolved = pos_ok | rpc_ok
+    rctx = dict(key_lo=p["fence_lo"], key_hi=jnp.zeros_like(p["fence_lo"]),
+                enabled=en_f, found=resolved, versions=p["version"],
+                node=dest, slot=mslot, overflow=need & scan_ovf)
+
+    # ---- validate the leaf read set (headers) -----------------------------
+    if fuse_v1:
+        v1 = results[2][0]
+        v2, _, s3 = osd.remote_read(
+            t, state["arena"], dest, _bt_leaf_offset_of(layout, mslot),
+            length=sl.SLOT_WORDS, enabled=rpc_ok, nic=nic)
+        vbuf = jnp.where(pos_ok[..., None], v1, v2)
+        vctx = _validate_from_bytes(rctx, vbuf, jnp.zeros((N, B * S), bool))
+        vctx["wire"] = s3
+    else:
+        vctx = validate_read_set(t, state, layout, rctx, capacity=capacity,
+                                 nic=nic, offset_of=_bt_leaf_offset_of)
+    read_wire = s1 if s_fallback is None else s1 + s_fallback
+    lctx["wire"] = s2
+
+    # ---- decide, commit / abort, classify ---------------------------------
+    complete, truncated = _scan_chain(
+        cfg, p["fence_lo"].reshape(N, B, S), p["fence_hi"].reshape(N, B, S),
+        scan_lo, scan_hi, en, resolved.reshape(N, B, S))
+    lane_locks_ok = jnp.all(
+        (lctx["lock_ok"] | ~lctx["enabled"]).reshape(N, B, Wr), axis=-1)
+    lane_valid = jnp.all(
+        (vctx["valid"] | ~en_f).reshape(N, B, S), axis=-1) & complete
+    lane_reads_ok = ~jnp.any(
+        (rctx["overflow"] | vctx["overflow"]).reshape(N, B, S), axis=-1)
+
+    commit_lane = lane_locks_ok & lane_valid & lane_reads_ok
+    state, cctx = _bt_commit_or_abort(
+        t, state, serial_h, lctx, commit_lane=commit_lane,
+        write_values=write_values, capacity=capacity, nic=nic, rep=rep)
+
+    has_writes = jnp.any(write_enabled, axis=-1)
+    commit_delivered = ~jnp.any(cctx["overflow"].reshape(N, B, Wr), axis=-1)
+    committed = jnp.where(has_writes, commit_lane & commit_delivered,
+                          lane_valid & lane_reads_ok)
+
+    lane_ovf = (~lane_reads_ok
+                | jnp.any(lctx["no_space"].reshape(N, B, Wr), axis=-1)
+                | jnp.any(cctx["overflow"].reshape(N, B, Wr), axis=-1))
+    lane_lock_fail = jnp.any(lctx["lock_fail"].reshape(N, B, Wr), axis=-1)
+    aborted = ~committed
+    aborted_overflow = aborted & lane_ovf
+    aborted_lock = aborted & ~lane_ovf & lane_lock_fail
+    aborted_validate = aborted & ~lane_ovf & ~lane_lock_fail & ~lane_valid
+
+    # ---- scan payload: records of validated leaves inside [lo, hi] --------
+    keys = p["keys"].reshape(N, B, S, cfg.leaf_width)
+    values = p["values"].reshape(N, B, S, cfg.leaf_width, sl.VALUE_WORDS)
+    live = p["live"].reshape(N, B, S, cfg.leaf_width)
+    in_range = (live & (keys >= scan_lo[..., None, None])
+                & (keys <= scan_hi[..., None, None])
+                & (resolved.reshape(N, B, S) & en)[..., None])
+
+    wire = read_wire + lctx["wire"] + vctx["wire"] + cctx["wire"]
+    metrics = hy.HybridMetrics(
+        onesided_success=jnp.sum(pos_ok.astype(jnp.float32)),
+        rpc_fallback=jnp.sum(need.astype(jnp.float32)),
+        total=jnp.sum(en_f.astype(jnp.float32)),
+        wire=wire)
+    rts = (read_wire.round_trips + lctx["wire"].round_trips
+           + vctx["wire"].round_trips + cctx["wire"].round_trips)
+    return state, ScanTxResult(
+        committed=committed,
+        scan_keys=keys, scan_values=values, scan_mask=in_range,
+        scan_complete=complete, truncated=truncated,
+        locked_values=lctx["locked_values"],
+        aborted_lock=aborted_lock, aborted_validate=aborted_validate,
+        aborted_overflow=aborted_overflow,
+        metrics=metrics, round_trips=rts)

@@ -160,3 +160,157 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         metrics=metrics,
         round_trips=jnp.sum(ys["round_trips"]),
     )
+
+
+# ===========================================================================
+# Bounded-retry loop for RANGE-SCAN transactions (tx.run_scan_transactions).
+#
+# Same engine shape as tx_loop — committed lanes park, aborted lanes re-run
+# with randomized-slot backoff — plus one ordered-index-specific move: every
+# retry round REFRESHES the cached separator directory first (one one-sided
+# read per node, its wire cost accounted), so lanes that aborted on a stale
+# plan (a leaf split underneath the scan: fence-chain gap -> cause
+# `validate`) converge instead of replaying the same stale route — the
+# retry-loop analogue of chasing a B-link right-pointer.  `truncated` lanes
+# (range needs more than cfg.max_scan_leaves leaves) are parked and REPORTED:
+# retrying cannot help and a silent clip is never returned as success.
+# ===========================================================================
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ScanLoopResult:
+    committed: jnp.ndarray            # (N, B) bool — committed in ANY round
+    commit_round: jnp.ndarray         # (N, B) int32 — round of commit, -1 never
+    truncated: jnp.ndarray            # (N, B) bool — parked: range > S leaves
+    scan_keys: jnp.ndarray            # (N, B, S, LW) — from the last attempt
+    scan_values: jnp.ndarray          # (N, B, S, LW, VALUE_WORDS)
+    scan_mask: jnp.ndarray            # (N, B, S, LW) bool
+    # --- per-round metrics, each (max_rounds,) int32 -----------------------
+    round_committed: jnp.ndarray
+    round_attempts: jnp.ndarray
+    round_retries: jnp.ndarray
+    round_abort_lock: jnp.ndarray
+    round_abort_validate: jnp.ndarray
+    round_abort_overflow: jnp.ndarray
+    metrics: hy.HybridMetrics         # totals across rounds (+ meta refresh)
+    round_trips: jnp.ndarray          # scalar
+
+
+def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
+              meta=None, write_keys=None, write_values=None,
+              scan_enabled=None, write_enabled=None,
+              capacity: Optional[int] = None, max_rounds: int = 4, key=None,
+              fused: bool = True, nic=None, rep=None, refresh: bool = True):
+    """Run a batch of range-scan transactions to convergence.
+
+    Arguments mirror tx.run_scan_transactions (cfg is a btree.BTreeConfig);
+    additionally:
+      meta:       initial cached separator directory; None fetches one up
+                  front (wire cost counted).
+      refresh:    refresh the directory before every RETRY round (default) —
+                  stale-plan aborts then converge; refresh=False replays the
+                  initial meta (useful to demonstrate the livelock it avoids).
+    Returns (state, meta, ScanLoopResult)."""
+    from repro.core.datastructs import btree as bt
+
+    N, B = scan_lo.shape
+    S, LW = cfg.max_scan_leaves, cfg.leaf_width
+    if write_keys is None:
+        write_keys = jnp.zeros((N, B, 0), jnp.uint32)
+        write_values = jnp.zeros((N, B, 0, sl.VALUE_WORDS), jnp.uint32)
+    Wr = write_keys.shape[2]
+    if scan_enabled is None:
+        scan_enabled = jnp.ones((N, B), bool)
+    if write_enabled is None:
+        write_enabled = jnp.ones((N, B, Wr), bool)
+    if key is None:
+        key = jax.random.PRNGKey(0x5C0A)
+    init_wire = hy.WireStats.zero()
+    if meta is None:
+        meta, s0 = bt.refresh_meta(t, state, cfg, layout, nic=nic)
+        init_wire = init_wire + s0
+    ident = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None], (N, B))
+
+    def body(carry, rnd):
+        (state, meta, done, trunc, commit_round, skeys, svals, smask,
+         key) = carry
+        key, sub = jax.random.split(key)
+        perm = jax.vmap(lambda k: jax.random.permutation(k, B))(
+            jax.random.split(sub, N)).astype(jnp.int32)
+        perm = jnp.where(rnd == 0, ident, perm)     # round 0 == single shot
+        inv = jnp.argsort(perm, axis=1)
+        active = ~done
+        p = lambda x: _perm_lanes(x, perm)
+        u = lambda x: _perm_lanes(x, inv)
+        act_p = p(active)
+
+        s_ref = hy.WireStats.zero()
+        if refresh:
+            meta_new, s_r = bt.refresh_meta(t, state, cfg, layout, nic=nic)
+            use = rnd > 0
+            meta = jax.tree.map(
+                lambda new, old: jnp.where(use, new, old), meta_new, meta)
+            s_ref = jax.tree.map(
+                lambda x: jnp.where(use, x, jnp.zeros_like(x)), s_r)
+
+        state, res = txm.run_scan_transactions(
+            t, state, cfg, layout,
+            scan_lo=p(scan_lo), scan_hi=p(scan_hi), meta=meta,
+            write_keys=p(write_keys), write_values=p(write_values),
+            scan_enabled=p(scan_enabled) & act_p,
+            write_enabled=p(write_enabled) & act_p[..., None],
+            capacity=capacity, fused=fused, nic=nic, rep=rep)
+        newly = u(res.committed) & active
+        newly_trunc = u(res.truncated) & active
+        done = done | newly | newly_trunc           # truncation cannot retry
+        trunc = trunc | newly_trunc
+        commit_round = jnp.where(newly, rnd.astype(jnp.int32), commit_round)
+        upd = active[..., None, None]
+        skeys = jnp.where(upd, u(res.scan_keys), skeys)
+        smask = jnp.where(upd, u(res.scan_mask), smask)
+        svals = jnp.where(upd[..., None], u(res.scan_values), svals)
+        count = lambda x: jnp.sum(x.astype(jnp.int32))
+        m = res.metrics
+        stats = dict(
+            committed=count(newly),
+            attempts=count(active),
+            retries=jnp.where(rnd > 0, count(active), 0),
+            abort_lock=count(u(res.aborted_lock) & active),
+            abort_validate=count(u(res.aborted_validate) & active),
+            abort_overflow=count(u(res.aborted_overflow) & active),
+            metrics=hy.HybridMetrics(m.onesided_success, m.rpc_fallback,
+                                     m.total, m.wire + s_ref),
+            round_trips=res.round_trips + s_ref.round_trips,
+        )
+        return (state, meta, done, trunc, commit_round, skeys, svals, smask,
+                key), stats
+
+    init = (
+        state, meta,
+        jnp.zeros((N, B), bool),
+        jnp.zeros((N, B), bool),
+        jnp.full((N, B), -1, jnp.int32),
+        jnp.zeros((N, B, S, LW), jnp.uint32),
+        jnp.zeros((N, B, S, LW, sl.VALUE_WORDS), jnp.uint32),
+        jnp.zeros((N, B, S, LW), bool),
+        key,
+    )
+    (state, meta, done, trunc, commit_round, skeys, svals, smask, _), ys = \
+        lax.scan(body, init, jnp.arange(max_rounds))
+
+    metrics = jax.tree.map(lambda x: jnp.sum(x, axis=0), ys["metrics"])
+    metrics = hy.HybridMetrics(metrics.onesided_success, metrics.rpc_fallback,
+                               metrics.total, metrics.wire + init_wire)
+    return state, meta, ScanLoopResult(
+        committed=done & ~trunc,
+        commit_round=commit_round,
+        truncated=trunc,
+        scan_keys=skeys, scan_values=svals, scan_mask=smask,
+        round_committed=ys["committed"],
+        round_attempts=ys["attempts"],
+        round_retries=ys["retries"],
+        round_abort_lock=ys["abort_lock"],
+        round_abort_validate=ys["abort_validate"],
+        round_abort_overflow=ys["abort_overflow"],
+        metrics=metrics,
+        round_trips=jnp.sum(ys["round_trips"]) + init_wire.round_trips,
+    )

@@ -1,0 +1,60 @@
+"""Wire protocol registry: every opcode and reply status in ONE place.
+
+Storm registers each data structure's operations with the dataplane
+(Table 3: ``rpc_handler`` per structure); the wire-level contract between
+client-built request records and owner-side handlers is the opcode in word 0
+of the record and the status in word 0 of the reply.  Those constants used to
+be scattered across ``rpc.py`` / ``tx.py`` / ``datastructs/hashtable.py`` —
+this module is the single registration point, so a new data structure (e.g.
+the ordered B-link index, ``datastructs/btree.py``) claims its opcode block
+here and every layer agrees on the numbering by construction.
+
+``rpc.py`` re-exports everything for backward compatibility (``R.OP_LOOKUP``
+keeps working), but core modules import this module directly.
+
+Opcode blocks:
+  *  0 –  9  dataplane + hash table (Storm §5.4/§5.5 + PR-4 replication)
+  * 16 – 23  ordered index (B-link tree, ``datastructs/btree.py``)
+
+Statuses are shared by every handler: word 0 of every reply is one of the
+``ST_*`` codes below.  ``ST_DROPPED`` is special — it is stamped by the
+TRANSPORT (roundsched) for requests that were never delivered (send-queue
+overflow or parked lane), so it can never alias a handler-returned status.
+"""
+from __future__ import annotations
+
+# --- dataplane + hash table opcodes (word 0 of every request record) -------
+OP_NOP = 0
+OP_LOOKUP = 1
+OP_INSERT = 2
+OP_UPDATE = 3
+OP_DELETE = 4
+OP_LOCK = 5           # lock write-set entry (returns version at lock time)
+OP_COMMIT_UNLOCK = 6  # install value, version += 2, unlock
+OP_ABORT_UNLOCK = 7   # release lock without installing
+OP_READ_VERSION = 8   # validation re-read by RPC (fallback path)
+OP_BACKUP_WRITE = 9   # install a committed record image on a backup replica
+
+# --- ordered index (B-link tree) opcodes -----------------------------------
+OP_BT_LOOKUP = 16     # point lookup (owner-side separator walk)
+OP_BT_INSERT = 17     # upsert; may split a full leaf (B-link structural op)
+OP_BT_DELETE = 18     # remove a key (no structural merge — leaves persist)
+OP_BT_LOCK = 19       # lock the key's LEAF for a tx write (pre-splits a full
+                      # leaf so the later commit can never lack space)
+OP_BT_COMMIT = 20     # install the write into the locked leaf, bump leaf
+                      # version, unlock
+OP_BT_ABORT = 21      # release the leaf lock without installing
+OP_BT_SCAN = 22       # return the full image of the leaf covering a key
+                      # (the range-scan RPC fallback; read-only)
+OP_BT_BACKUP = 23     # install a committed (key, value) on a backup replica's
+                      # own tree (logical replication of the ordered index)
+
+# --- reply status codes (word 0 of every reply) ----------------------------
+ST_OK = 0
+ST_NOT_FOUND = 1
+ST_LOCK_FAIL = 2
+ST_NO_SPACE = 3   # handler-returned: storage full (request WAS delivered)
+ST_BAD_OP = 4
+ST_DROPPED = 5    # transport-level: request never delivered (send-queue
+                  # overflow or parked lane) — retryable back-pressure,
+                  # distinct from the permanent ST_NO_SPACE

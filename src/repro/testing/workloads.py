@@ -31,3 +31,17 @@ def zipf_write_keys(n_nodes: int, lanes: int, *, n_hot: int = 4,
     pick = rng.choice(n_hot, size=(n_nodes, lanes, 1), p=p)
     klo = jnp.asarray(hot[pick], jnp.uint32)
     return jnp.asarray(hot), klo, jnp.zeros_like(klo)
+
+
+def distinct_uint32(rng, n, lo=0, hi=2**32 - 2):
+    """n DISTINCT uint32 keys uniform over [lo, hi) — via randint + dedup.
+
+    Never use ``rng.choice(big_range, replace=False)`` for this: numpy
+    materializes a permutation of the WHOLE population (tens of GB for the
+    32-bit key space)."""
+    out = np.array([], dtype=np.uint64)
+    while out.size < n:
+        draw = rng.randint(lo, hi, size=2 * n).astype(np.uint64)
+        out = np.unique(np.concatenate([out, draw]))
+    rng.shuffle(out)
+    return out[:n].astype(np.uint32)

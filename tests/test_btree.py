@@ -1,0 +1,306 @@
+"""Ordered remote index (B-link tree): handler semantics, structural
+invariants across splits, leaf locking (incl. the lock-time pre-split that
+keeps commits space-safe), the generic one-two-sided probe, and the
+wireproto single-registration satellite."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hybrid as hy
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core import wireproto as W
+from repro.core.datastructs import btree as bt
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport
+from repro.testing.workloads import distinct_uint32, value_for
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return bt.BTreeConfig(n_nodes=N, n_leaves=16, leaf_width=4,
+                          max_scan_leaves=4)
+
+
+@pytest.fixture(scope="module")
+def layout(cfg):
+    return bt.build_layout(cfg)
+
+
+def rpc(t, state, cfg, layout, op, keys, aux=None, values=None, key_hi=None,
+        dest=None):
+    h = bt.make_rpc_handler(cfg, layout)
+    dest = bt.home_of(cfg, keys) if dest is None else dest
+    kh = jnp.zeros_like(keys) if key_hi is None else key_hi
+    recs = bt.make_record(op, keys, kh, aux=aux, value=values)
+    state, rep, ovf, _ = R.rpc_call(t, state, dest, recs, h)
+    assert not bool(np.asarray(ovf).any())
+    return state, np.asarray(rep)
+
+
+def node_keys(cfg, n_per_node, seed=0):
+    """n distinct keys inside every node's partition: (N, n) uint32."""
+    rng = np.random.RandomState(seed)
+    lo, hi = (np.asarray(x) for x in
+              bt.partition_bounds(cfg, jnp.arange(N, dtype=jnp.int32)))
+    out = np.stack([
+        np.sort(distinct_uint32(rng, n_per_node, int(lo[n]), int(hi[n])))
+        for n in range(N)])
+    return jnp.asarray(out, jnp.uint32)
+
+
+def walk_leaves(state, cfg, layout, node):
+    """Follow right-links from leaf 0, asserting every B-link invariant:
+    fences tile the node's partition with no gap or overlap, records are
+    sorted and in-fence, the separator directory mirrors the fences, and
+    the walk visits every allocated leaf.  Returns the ordered key list."""
+    arena = np.asarray(state["arena"])[node]
+    lv = layout["leaves"]
+    nleaf = int(arena[layout["nleaf"].base])
+    sep = arena[layout["sep"].base:layout["sep"].base + nleaf]
+    leaves = arena[lv.base:lv.base + cfg.n_leaves * cfg.leaf_words].reshape(
+        cfg.n_leaves, cfg.leaf_slots, sl.SLOT_WORDS)
+    p_lo, p_hi = (int(np.asarray(x)) for x in
+                  bt.partition_bounds(cfg, jnp.int32(node)))
+    i, prev_hi, seen, keys = 0, p_lo - 1, 0, []
+    while True:
+        hdr = leaves[i, 0]
+        flo, fhi = int(hdr[sl.KEY_LO]), int(hdr[sl.KEY_HI])
+        cnt = int(hdr[sl.VALUE0])
+        assert flo == prev_hi + 1, "fence gap/overlap"
+        assert int(hdr[sl.VERSION]) % 2 == 0
+        assert (sep == flo).sum() == 1, "separator directory out of sync"
+        ks = leaves[i, 1:1 + cnt, sl.KEY_LO].tolist()
+        assert ks == sorted(ks) and all(flo <= k <= fhi for k in ks)
+        keys += ks
+        prev_hi, seen = fhi, seen + 1
+        nxt = int(hdr[sl.NEXT_PTR])
+        if nxt == 0xFFFFFFFF:
+            break
+        i = nxt
+    assert prev_hi == p_hi, "chain must end at the partition bound"
+    assert seen == nleaf, "walk must visit every allocated leaf"
+    return keys
+
+
+def test_insert_lookup_update_delete(cfg, layout):
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    keys = node_keys(cfg, 10)
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_INSERT, keys,
+                     values=value_for(keys))
+    assert (rep[..., 0] == W.ST_OK).all()
+
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_LOOKUP, keys)
+    assert (rep[..., 0] == W.ST_OK).all()
+    np.testing.assert_array_equal(rep[..., 3:], np.asarray(value_for(keys)))
+
+    # upsert: re-insert with a different value updates in place
+    v2 = value_for(keys + jnp.uint32(3))
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_INSERT, keys, values=v2)
+    assert (rep[..., 0] == W.ST_OK).all()
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_LOOKUP, keys)
+    np.testing.assert_array_equal(rep[..., 3:], np.asarray(v2))
+
+    # delete the even columns; they disappear, the rest stay, and absent
+    # deletes report NOT_FOUND
+    dk = keys[:, ::2]
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_DELETE, dk)
+    assert (rep[..., 0] == W.ST_OK).all()
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_DELETE, dk)
+    assert (rep[..., 0] == W.ST_NOT_FOUND).all()
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_LOOKUP, keys)
+    st = rep[..., 0]
+    assert (st[:, ::2] == W.ST_NOT_FOUND).all() and (st[:, 1::2] == W.ST_OK).all()
+    for n in range(N):
+        assert walk_leaves(state, cfg, layout, n) == \
+            sorted(int(k) for k in np.asarray(keys)[n, 1::2])
+
+
+def test_split_invariants_and_vector_lookup(cfg, layout):
+    """Enough inserts to split repeatedly; every B-link invariant holds and
+    every key stays findable (serial AND vector lookup handlers)."""
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    keys = node_keys(cfg, 24, seed=3)   # 24 keys -> several splits per node
+    for i in range(0, 24, 8):           # batched so shapes stay identical
+        state, rep = rpc(t, state, cfg, layout, W.OP_BT_INSERT,
+                         keys[:, i:i + 8], values=value_for(keys[:, i:i + 8]))
+        assert (rep[..., 0] == W.ST_OK).all()
+    for n in range(N):
+        assert walk_leaves(state, cfg, layout, n) == \
+            sorted(int(k) for k in np.asarray(keys)[n]), "keys lost by splits"
+    vec = bt.make_lookup_handler_vector(cfg, layout)
+    _, rep, _, _ = R.rpc_call(t, state, bt.home_of(cfg, keys),
+                              bt.make_record(W.OP_BT_LOOKUP, keys,
+                                             jnp.zeros_like(keys)), vec)
+    assert (np.asarray(rep[..., 0]) == W.ST_OK).all()
+    np.testing.assert_array_equal(np.asarray(rep[..., 3:]),
+                                  np.asarray(value_for(keys)))
+
+
+def test_leaf_exhaustion_reports_no_space(layout):
+    """A tree out of leaves back-pressures with ST_NO_SPACE and loses
+    nothing it already holds."""
+    small = bt.BTreeConfig(n_nodes=N, n_leaves=2, leaf_width=2,
+                           max_scan_leaves=2)
+    lay = bt.build_layout(small)
+    t = SimTransport(N)
+    state = bt.init_cluster_state(small)
+    keys = node_keys(small, 8, seed=5)
+    state, rep = rpc(t, state, small, lay, W.OP_BT_INSERT, keys,
+                     values=value_for(keys))
+    st = rep[..., 0]
+    assert (st == W.ST_NO_SPACE).any(), "capacity 2x2 must exhaust on 8 keys"
+    assert ((st == W.ST_OK) | (st == W.ST_NO_SPACE)).all()
+    state, rep2 = rpc(t, state, small, lay, W.OP_BT_LOOKUP, keys)
+    np.testing.assert_array_equal(rep2[..., 0] == W.ST_OK, st == W.ST_OK)
+    for n in range(N):
+        walk_leaves(state, small, lay, n)   # invariants survive exhaustion
+
+
+def test_leaf_lock_blocks_mutations_and_unlocks(cfg, layout):
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    keys = node_keys(cfg, 4, seed=7)
+    state, _ = rpc(t, state, cfg, layout, W.OP_BT_INSERT, keys,
+                   values=value_for(keys))
+    k0 = keys[:, :1]
+    tag = jnp.full(k0.shape, 77, jnp.uint32)
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_LOCK, k0, aux=tag)
+    assert (rep[..., 0] == W.ST_OK).all()
+    hslot = jnp.asarray(rep[..., 1], jnp.uint32)
+    lock_ver = rep[..., 2].copy()
+    # read-for-update: the LOCK reply carries the current value
+    np.testing.assert_array_equal(rep[..., 3:], np.asarray(value_for(k0)))
+
+    # the LEAF is locked: mutating the same key or a sibling key both fail
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_INSERT, k0,
+                     values=value_for(k0))
+    assert (rep[..., 0] == W.ST_LOCK_FAIL).all()
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_DELETE, k0)
+    assert (rep[..., 0] == W.ST_LOCK_FAIL).all()
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_LOCK, k0,
+                     aux=tag + jnp.uint32(1))
+    assert (rep[..., 0] == W.ST_LOCK_FAIL).all()
+
+    # unlock ownership requires the EXACT tag
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_ABORT, k0,
+                     key_hi=tag + jnp.uint32(1), aux=hslot)
+    assert (rep[..., 0] == W.ST_LOCK_FAIL).all()
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_ABORT, k0, key_hi=tag,
+                     aux=hslot)
+    assert (rep[..., 0] == W.ST_OK).all()
+    # abort released without bumping: versions unchanged, mutations work
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_LOOKUP, k0)
+    np.testing.assert_array_equal(rep[..., 2], lock_ver)
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_DELETE, k0)
+    assert (rep[..., 0] == W.ST_OK).all()
+
+
+def test_lock_presplits_full_leaf_then_commit(layout):
+    """OP_BT_LOCK on a FULL leaf pre-splits it (split on the way down), so
+    OP_BT_COMMIT always has room; the committed version is the predicted
+    lock_ver + 2 and every invariant survives."""
+    small = bt.BTreeConfig(n_nodes=N, n_leaves=8, leaf_width=2,
+                           max_scan_leaves=2)
+    lay = bt.build_layout(small)
+    t = SimTransport(N)
+    state = bt.init_cluster_state(small)
+    base = node_keys(small, 2, seed=9)      # exactly fills leaf 0 (width 2)
+    state, rep = rpc(t, state, small, lay, W.OP_BT_INSERT, base,
+                     values=value_for(base))
+    assert (rep[..., 0] == W.ST_OK).all()
+    nleaf0 = np.asarray(state["arena"])[:, lay["nleaf"].base].copy()
+
+    # one above each node's largest key: guaranteed absent, still inside the
+    # partition (node_keys draws below the inclusive bound), same (only) leaf
+    fresh = base[:, 1:2] + jnp.uint32(1)
+    tag = jnp.full(fresh.shape, 5, jnp.uint32)
+    state, rep = rpc(t, state, small, lay, W.OP_BT_LOCK, fresh, aux=tag)
+    assert (rep[..., 0] == W.ST_OK).all()
+    nleaf1 = np.asarray(state["arena"])[:, lay["nleaf"].base]
+    assert (nleaf1 == nleaf0 + 1).all(), "lock must pre-split the full leaf"
+    hslot, lock_ver = jnp.asarray(rep[..., 1], jnp.uint32), rep[..., 2]
+
+    state, rep = rpc(t, state, small, lay, W.OP_BT_COMMIT, fresh, key_hi=tag,
+                     aux=hslot, values=value_for(fresh))
+    assert (rep[..., 0] == W.ST_OK).all()
+    np.testing.assert_array_equal(rep[..., 2], lock_ver + 2)
+    state, rep = rpc(t, state, small, lay, W.OP_BT_LOOKUP, fresh)
+    assert (rep[..., 0] == W.ST_OK).all()
+    np.testing.assert_array_equal(rep[..., 3:], np.asarray(value_for(fresh)))
+    for n in range(N):
+        ks = walk_leaves(state, small, lay, n)
+        assert int(np.asarray(fresh)[n, 0]) in ks
+
+
+def test_hybrid_probe_onesided_fast_path_and_stale_fallback(cfg, layout):
+    """The generic probe (hybrid ds=btree): fresh separators resolve every
+    lookup with ONE one-sided read — including validated MISSES, which need
+    no RPC (unlike the hash table); stale separators fall back to RPC and
+    still resolve."""
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    keys = node_keys(cfg, 12, seed=11)
+    state, _ = rpc(t, state, cfg, layout, W.OP_BT_INSERT, keys,
+                   values=value_for(keys))
+    meta = bt.local_meta(cfg, layout, state)
+
+    kk = keys[:, ::2]
+    state, _, found, val, ver, _, _, ovf, m = hy.hybrid_lookup(
+        t, state, kk, jnp.zeros_like(kk), cfg, layout, cache=meta, ds=bt)
+    assert bool(np.asarray(found).all())
+    assert float(m.rpc_fallback) == 0.0, "fresh meta must be pure one-sided"
+    np.testing.assert_array_equal(np.asarray(val), np.asarray(value_for(kk)))
+    assert (np.asarray(ver) % 2 == 0).all()
+
+    # a validated miss is RESOLVED one-sided: no fallback, found=False
+    miss = kk + jnp.uint32(1)
+    state, _, found, _, _, _, _, _, m2 = hy.hybrid_lookup(
+        t, state, miss, jnp.zeros_like(miss), cfg, layout, cache=meta, ds=bt)
+    assert not bool(np.asarray(found).any())
+    assert float(m2.rpc_fallback) == 0.0, \
+        "an in-fence stable miss needs no RPC (definitive absence)"
+
+    # stale meta: splits after the snapshot -> fallback resolves
+    extra = keys + jnp.uint32(1)
+    state, rep = rpc(t, state, cfg, layout, W.OP_BT_INSERT, extra,
+                     values=value_for(extra))
+    assert (rep[..., 0] == W.ST_OK).all()
+    state, _, found, val, _, _, _, _, m3 = hy.hybrid_lookup(
+        t, state, extra, jnp.zeros_like(extra), cfg, layout, cache=meta,
+        ds=bt)
+    assert bool(np.asarray(found).all())
+    assert float(m3.rpc_fallback) > 0.0, "stale route must use the fallback"
+    np.testing.assert_array_equal(np.asarray(val),
+                                  np.asarray(value_for(extra)))
+    # refreshed meta restores the pure one-sided fast path
+    meta2, _ = bt.refresh_meta(t, state, cfg, layout)
+    state, _, found, _, _, _, _, _, m4 = hy.hybrid_lookup(
+        t, state, extra, jnp.zeros_like(extra), cfg, layout, cache=meta2,
+        ds=bt)
+    assert bool(np.asarray(found).all()) and float(m4.rpc_fallback) == 0.0
+
+
+def test_wireproto_is_the_single_registration_point():
+    """Satellite: rpc.py re-exports ARE wireproto's constants (one place to
+    register an opcode), and both data structures' record builders stamp
+    them into word 0."""
+    for name in dir(W):
+        if name.startswith(("OP_", "ST_")):
+            assert getattr(R, name) == getattr(W, name), name
+    rec = ht.make_record(W.OP_LOOKUP, jnp.uint32(1), jnp.uint32(2))
+    assert int(rec[0]) == W.OP_LOOKUP
+    rec = bt.make_record(W.OP_BT_SCAN, jnp.uint32(1), jnp.uint32(0))
+    assert int(rec[0]) == W.OP_BT_SCAN
+    # the two structures' opcode blocks never collide
+    ht_ops = {W.OP_NOP, W.OP_LOOKUP, W.OP_INSERT, W.OP_UPDATE, W.OP_DELETE,
+              W.OP_LOCK, W.OP_COMMIT_UNLOCK, W.OP_ABORT_UNLOCK,
+              W.OP_READ_VERSION, W.OP_BACKUP_WRITE}
+    bt_ops = {W.OP_BT_LOOKUP, W.OP_BT_INSERT, W.OP_BT_DELETE, W.OP_BT_LOCK,
+              W.OP_BT_COMMIT, W.OP_BT_ABORT, W.OP_BT_SCAN, W.OP_BT_BACKUP}
+    assert not (ht_ops & bt_ops)
+    assert len(ht_ops) == 10 and len(bt_ops) == 8

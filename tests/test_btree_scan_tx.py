@@ -1,0 +1,323 @@
+"""Transactional range scans over the ordered index: fused ≡ unfused and
+rep=None ≡ f=0 bit-identity, the zero-extra-rounds claim (fast-path scan ==
+point-lookup schedule), OCC conflict aborts + scan_loop convergence,
+truncation reporting, and f=1 logical replication."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import replication as repl
+from repro.core import rpc as R
+from repro.core import tx as txm
+from repro.core import txloop as txl
+from repro.core import wireproto as W
+from repro.core.datastructs import btree as bt
+from repro.core.transport import SimTransport
+from repro.testing.workloads import distinct_uint32, value_for
+
+N = 4
+B = 4
+
+WIRE_FIELDS = ("round_trips", "messages", "ops", "req_bytes", "reply_bytes",
+               "nic_hit_ops", "nic_penalty_us")
+RESULT_FIELDS = ("committed", "scan_keys", "scan_values", "scan_mask",
+                 "scan_complete", "truncated", "locked_values",
+                 "aborted_lock", "aborted_validate", "aborted_overflow")
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return bt.BTreeConfig(n_nodes=N, n_leaves=32, leaf_width=4,
+                          max_scan_leaves=4)
+
+
+@pytest.fixture(scope="module")
+def layout(cfg):
+    return bt.build_layout(cfg)
+
+
+def insert(t, state, cfg, layout, keys):
+    h = bt.make_rpc_handler(cfg, layout)
+    state, rep, _, _ = R.rpc_call(
+        t, state, bt.home_of(cfg, keys),
+        bt.make_record(W.OP_BT_INSERT, keys, jnp.zeros_like(keys),
+                       value=value_for(keys)), h)
+    assert (np.asarray(rep[..., 0]) == W.ST_OK).all()
+    return state
+
+
+@pytest.fixture(scope="module")
+def populated(cfg, layout):
+    """A populated tree + fresh meta + deterministic scan ranges that each
+    span a handful of keys (and sometimes a node boundary)."""
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    rng = np.random.RandomState(17)
+    allk = np.sort(distinct_uint32(rng, N * 12).astype(np.uint64))
+    keys = jnp.asarray(allk.reshape(N, 12), jnp.uint32)
+    state = insert(t, state, cfg, layout, keys)
+    meta = bt.local_meta(cfg, layout, state)
+    # each lane scans from a chosen key to 5 keys later (inclusive)
+    starts = rng.choice(len(allk) - 6, N * B, replace=False)
+    lo = jnp.asarray(allk[starts].reshape(N, B), jnp.uint32)
+    hi = jnp.asarray(allk[starts + 5].reshape(N, B), jnp.uint32)
+    return t, state, meta, allk, lo, hi
+
+
+def expected_range(allk, lo, hi):
+    return sorted(int(k) for k in allk if lo <= k <= hi)
+
+
+def mixed_workload(allk, lo, hi, seed=29):
+    """Half the lanes scan, half upsert a fresh GAP key (a lane must not
+    write into leaves its own scan reads — the documented leaf-grain
+    self-conflict rule; cross-LANE conflicts are exactly what OCC handles)."""
+    rng = np.random.RandomState(seed)
+    is_scan = np.arange(B) % 2 == 0
+    slo = jnp.asarray(np.where(is_scan[None], np.asarray(lo), 1), jnp.uint32)
+    shi = jnp.asarray(np.where(is_scan[None], np.asarray(hi), 0), jnp.uint32)
+    g = rng.randint(0, len(allk) - 1, (N, B))
+    wkn = allk[g] + np.maximum((allk[g + 1] - allk[g]) // 2, 1)
+    assert len(np.intersect1d(wkn.ravel(), allk)) == 0, "gap keys not fresh"
+    wk = jnp.asarray(wkn, jnp.uint32)[..., None]
+    wen = jnp.asarray(np.broadcast_to((~is_scan)[None, :, None], (N, B, 1)))
+    return slo, shi, wk, wen
+
+
+def scanned(res, n, b):
+    sk, sm = np.asarray(res.scan_keys), np.asarray(res.scan_mask)
+    return sorted(sk[n, b][sm[n, b]].tolist())
+
+
+def test_pure_scan_matches_reference_and_costs_point_rounds(cfg, layout,
+                                                            populated):
+    t, state, meta, allk, lo, hi = populated
+    _, res = txm.run_scan_transactions(t, state, cfg, layout, scan_lo=lo,
+                                       scan_hi=hi, meta=meta)
+    assert bool(np.asarray(res.committed).all())
+    assert bool(np.asarray(res.scan_complete).all())
+    assert not bool(np.asarray(res.truncated).any())
+    for n in range(N):
+        for b in range(B):
+            assert scanned(res, n, b) == expected_range(
+                allk, int(np.asarray(lo)[n, b]), int(np.asarray(hi)[n, b]))
+    # values travel with the records
+    sv, sm = np.asarray(res.scan_values), np.asarray(res.scan_mask)
+    exp = np.asarray(value_for(res.scan_keys))
+    np.testing.assert_array_equal(sv[sm], exp[sm])
+    # fresh meta => every leaf read resolved one-sided, and the scan costs
+    # EXACTLY the point-lookup schedule's exchange rounds: read + fused
+    # (validate) round = 2, zero extra
+    assert float(res.metrics.rpc_fallback) == 0.0
+    assert float(res.round_trips) == 2.0
+
+
+def test_fused_unfused_bit_identical(cfg, layout, populated):
+    t, state, meta, allk, lo, hi = populated
+    slo, shi, wk, wen = mixed_workload(allk, lo, hi)
+    wv = value_for(wk)
+    for kwargs in (dict(scan_lo=lo, scan_hi=hi),
+                   dict(scan_lo=slo, scan_hi=shi, write_keys=wk,
+                        write_values=wv, write_enabled=wen)):
+        s_ref, r_ref = txm.run_scan_transactions(
+            t, state, cfg, layout, meta=meta, fused=False, **kwargs)
+        s_fus, r_fus = txm.run_scan_transactions(
+            t, state, cfg, layout, meta=meta, fused=True, **kwargs)
+        for f in RESULT_FIELDS:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(r_ref, f)), np.asarray(getattr(r_fus, f)),
+                err_msg=f"fused changed {f}")
+        np.testing.assert_array_equal(np.asarray(s_ref["arena"]),
+                                      np.asarray(s_fus["arena"]),
+                                      err_msg="fused changed committed state")
+        assert float(r_ref.metrics.wire.ops) == float(r_fus.metrics.wire.ops)
+        assert float(r_fus.round_trips) <= float(r_ref.round_trips)
+
+
+def test_rep_none_equals_f0(cfg, layout, populated):
+    t, state, meta, allk, lo, hi = populated
+    slo, shi, wk, wen = mixed_workload(allk, lo, hi)
+    wv = value_for(wk)
+    for fused in (False, True):
+        s_a, r_a = txm.run_scan_transactions(
+            t, state, cfg, layout, scan_lo=slo, scan_hi=shi, meta=meta,
+            write_keys=wk, write_values=wv, write_enabled=wen, fused=fused,
+            rep=None)
+        s_b, r_b = txm.run_scan_transactions(
+            t, state, cfg, layout, scan_lo=slo, scan_hi=shi, meta=meta,
+            write_keys=wk, write_values=wv, write_enabled=wen, fused=fused,
+            rep=repl.ReplicaConfig(N, 0))
+        for f in RESULT_FIELDS + ("round_trips",):
+            np.testing.assert_array_equal(np.asarray(getattr(r_a, f)),
+                                          np.asarray(getattr(r_b, f)),
+                                          err_msg=f"f=0 changed {f}")
+        for f in WIRE_FIELDS:
+            assert float(getattr(r_a.metrics.wire, f)) == \
+                float(getattr(r_b.metrics.wire, f)), f
+        np.testing.assert_array_equal(np.asarray(s_a["arena"]),
+                                      np.asarray(s_b["arena"]))
+
+
+def test_f1_zero_extra_rounds_and_logical_copies(cfg, layout, populated):
+    t, state, meta, allk, lo, hi = populated
+    slo, shi, wk, wen = mixed_workload(allk, lo, hi)
+    wv = value_for(wk)
+    _, r0 = txm.run_scan_transactions(
+        t, state, cfg, layout, scan_lo=slo, scan_hi=shi, meta=meta,
+        write_keys=wk, write_values=wv, write_enabled=wen)
+    rc = repl.ReplicaConfig(N, 1)
+    s1, r1 = txm.run_scan_transactions(
+        t, state, cfg, layout, scan_lo=slo, scan_hi=shi, meta=meta,
+        write_keys=wk, write_values=wv, write_enabled=wen, rep=rc)
+    assert float(r1.round_trips) == float(r0.round_trips), \
+        "backup classes must ride the commit round (zero extra rounds)"
+    np.testing.assert_array_equal(np.asarray(r1.committed),
+                                  np.asarray(r0.committed))
+    # every committed WRITE lane's key is served, with the SAME value, by
+    # both the primary and its backup (logical replication)
+    h = bt.make_rpc_handler(cfg, layout)
+    com_w = np.asarray(r1.committed) & np.asarray(wen)[..., 0]
+    assert com_w.any(), "vacuous: no write lane committed"
+    wkf = wk.reshape(N, B)
+    pn = bt.home_of(cfg, wkf)
+    for dest in (pn, rc.replica_of(pn, 1)):
+        _, rep, _, _ = R.rpc_call(
+            t, s1, dest, bt.make_record(W.OP_BT_LOOKUP, wkf,
+                                        jnp.zeros_like(wkf)), h)
+        st = np.asarray(rep[..., 0])
+        vals = np.asarray(rep[..., 3:])
+        assert (st[com_w] == W.ST_OK).all()
+        np.testing.assert_array_equal(vals[com_w],
+                                      np.asarray(wv)[..., 0, :][com_w])
+
+
+def test_scan_write_conflict_aborts_scanner_then_loop_converges(cfg, layout):
+    """Lane X scans a range; lane Y (another node) commits a write INTO that
+    range in the same protocol round.  The scanner must observe the leaf
+    lock/version change at validation and abort (cause: validate); the retry
+    loop then converges both."""
+    # a roomier scan bound: the 6-key range may fragment across more leaves
+    # than the module fixture's 4 once the conflicting insert splits one
+    cfg = bt.BTreeConfig(n_nodes=N, n_leaves=32, leaf_width=4,
+                         max_scan_leaves=8)
+    layout = bt.build_layout(cfg)
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    rng = np.random.RandomState(23)
+    allk = np.sort(distinct_uint32(rng, N * 8, 0, 2**31))
+    keys = jnp.asarray(allk.reshape(N, 8), jnp.uint32)
+    state = insert(t, state, cfg, layout, keys)
+    meta = bt.local_meta(cfg, layout, state)
+
+    # node 0 lane 0 scans [allk[0], allk[5]]; node 1 lane 0 writes a fresh
+    # key inside that range; everyone else idles
+    lo = jnp.zeros((N, 1), jnp.uint32).at[0, 0].set(jnp.uint32(allk[0]))
+    hi = jnp.zeros((N, 1), jnp.uint32)          # lo > hi = no scan
+    hi = hi.at[0, 0].set(jnp.uint32(allk[5]))
+    wkey = jnp.uint32(allk[2] + 1) if allk[2] + 1 != allk[3] \
+        else jnp.uint32(allk[2] + 2)
+    wk = jnp.zeros((N, 1, 1), jnp.uint32)
+    wen = jnp.zeros((N, 1, 1), bool).at[1, 0, 0].set(True)
+    wk = wk.at[1, 0, 0].set(wkey)
+    wv = value_for(wk)
+
+    _, res = txm.run_scan_transactions(
+        t, state, cfg, layout, scan_lo=lo, scan_hi=hi, meta=meta,
+        write_keys=wk, write_values=wv, write_enabled=wen)
+    r = np.asarray
+    assert r(res.committed)[1, 0], "the writer must commit"
+    assert not r(res.committed)[0, 0], "the scanner must abort"
+    assert r(res.aborted_validate)[0, 0], "cause must be validate (OCC)"
+
+    st2, _, resL = txl.scan_loop(
+        t, state, cfg, layout, scan_lo=lo, scan_hi=hi, meta=meta,
+        write_keys=wk, write_values=wv, write_enabled=wen, max_rounds=4)
+    assert bool(r(resL.committed).all()), "the loop must converge everyone"
+    assert int(r(resL.round_abort_validate)[0]) > 0
+    # the converged scan INCLUDES the concurrently committed key
+    got = sorted(r(resL.scan_keys)[0, 0][r(resL.scan_mask)[0, 0]].tolist())
+    exp = sorted([int(k) for k in allk[:6]] + [int(wkey)])
+    assert got == exp
+
+
+def test_truncated_scan_reported_never_clipped(cfg, layout):
+    """A range needing more than max_scan_leaves leaves is REPORTED truncated
+    (parked by the loop), never returned as a silently clipped success."""
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    # 40 dense keys, ALL inside node 0's partition: splits it into far more
+    # than max_scan_leaves leaves
+    p_lo = int(np.asarray(bt.partition_bounds(
+        cfg, jnp.arange(N, dtype=jnp.int32))[0])[0])
+    keys = jnp.asarray((p_lo + 64 + 8 * np.arange(40)).reshape(N, 10),
+                       jnp.uint32)
+    h = bt.make_rpc_handler(cfg, layout)
+    state, rep, _, _ = R.rpc_call(
+        t, state, bt.home_of(cfg, keys),
+        bt.make_record(W.OP_BT_INSERT, keys, jnp.zeros_like(keys),
+                       value=value_for(keys)), h)
+    assert (np.asarray(rep[..., 0]) == W.ST_OK).all()
+    meta = bt.local_meta(cfg, layout, state)
+    nleaf0 = int(np.asarray(state["arena"])[0, layout["nleaf"].base])
+    assert nleaf0 > cfg.max_scan_leaves, "setup must split past the bound"
+
+    lo = jnp.zeros((N, 1), jnp.uint32).at[0, 0].set(jnp.uint32(p_lo))
+    hi = jnp.zeros((N, 1), jnp.uint32).at[0, 0].set(
+        jnp.uint32(p_lo + 64 + 8 * 39))
+    _, res = txm.run_scan_transactions(t, state, cfg, layout, scan_lo=lo,
+                                       scan_hi=hi, meta=meta)
+    r = np.asarray
+    assert r(res.truncated)[0, 0] and not r(res.committed)[0, 0]
+    _, _, resL = txl.scan_loop(t, state, cfg, layout, scan_lo=lo, scan_hi=hi,
+                               meta=meta, max_rounds=3)
+    assert r(resL.truncated)[0, 0] and not r(resL.committed)[0, 0]
+
+
+def test_backup_installs_never_corrupt_the_primary_tree(cfg, layout):
+    """Regression (code review): ring placement makes EVERY replicated key
+    sit outside the backup node's partition.  A storm of OP_BT_BACKUP
+    installs — enough to split repeatedly — must land in the backup node's
+    full-range backup tree and leave its primary fence chain, separators
+    and OWN committed keys fully intact."""
+    from tests.test_btree import node_keys, walk_leaves
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    own = node_keys(cfg, 8, seed=41)
+    state = insert(t, state, cfg, layout, own)
+
+    # node 0's keys backed up onto node 1: 16 foreign installs, far below
+    # node 1's partition, splitting the backup tree several times
+    rng = np.random.RandomState(43)
+    part = int(np.asarray(bt.partition_bounds(
+        cfg, jnp.arange(N, dtype=jnp.int32))[0])[1])   # node 1's lo bound
+    foreign = distinct_uint32(rng, N * 16, 0, part // 2).reshape(N, 16)
+    fk = jnp.asarray(foreign, jnp.uint32)
+    dest = jnp.ones_like(fk, dtype=jnp.int32)          # all to node 1
+    h = bt.make_rpc_handler(cfg, layout)
+    state, rep, _, _ = R.rpc_call(
+        t, state, dest, bt.make_record(W.OP_BT_BACKUP, fk,
+                                       jnp.zeros_like(fk),
+                                       value=value_for(fk)), h)
+    assert (np.asarray(rep[..., 0]) == W.ST_OK).all()
+    bnleaf = int(np.asarray(state["arena"])[1, layout["bnleaf"].base])
+    assert bnleaf > 1, "setup must split the backup tree"
+    assert int(np.asarray(state["arena"])[1, layout["nleaf"].base]) == \
+        int(np.asarray(state["arena"])[0, layout["nleaf"].base]), \
+        "backup installs must not allocate PRIMARY leaves"
+
+    # primary invariants and node 1's own keys survive untouched
+    for n in range(N):
+        assert walk_leaves(state, cfg, layout, n) == \
+            sorted(int(k) for k in np.asarray(own)[n])
+    state, rep, _, _ = R.rpc_call(
+        t, state, bt.home_of(cfg, own),
+        bt.make_record(W.OP_BT_LOOKUP, own, jnp.zeros_like(own)), h)
+    assert (np.asarray(rep[..., 0]) == W.ST_OK).all(), \
+        "own committed keys must stay reachable after backup traffic"
+    # ... and the backup copies are served (from the backup tree) on node 1
+    state, rep, _, _ = R.rpc_call(
+        t, state, dest, bt.make_record(W.OP_BT_LOOKUP, fk,
+                                       jnp.zeros_like(fk)), h)
+    assert (np.asarray(rep[..., 0]) == W.ST_OK).all()
+    np.testing.assert_array_equal(np.asarray(rep[..., 3:]),
+                                  np.asarray(value_for(fk)))
