@@ -18,7 +18,14 @@ Collects the protocol's headline numbers into a JSON snapshot:
     workload): ``scan_round_trips`` (the one-sided fast-path scan schedule —
     MUST stay equal to the point-lookup schedule's rounds; any increase
     fails), commit rate and modeled Mtx/node at 32 emulated nodes for the
-    scan-heavy mix (5% threshold).
+    scan-heavy mix (5% threshold);
+  * ``membership`` — the placement subsystem (membership_churn.py):
+    ``round_trips_stable`` (the f=1 workload routed through an epoch-stable
+    placement table — MUST equal the rep-only schedule; any increase fails),
+    ``refresh_round_trips`` (a table refresh is ONE one-sided read),
+    ``stale_round_trips`` (the abort-refresh-retry schedule after an epoch
+    flip) and ``rereplication_bytes`` (recovery traffic for one node death
+    at f=1, 5% threshold).
 
 CI runs this twice: ``--out BENCH_PR.json`` on the PR (uploaded as an
 artifact) and compares against the checked-in ``BENCH_BASELINE.json``:
@@ -90,6 +97,7 @@ def _tx_smoke():
 
 def collect() -> dict:
     import conn_scaling
+    import membership_churn
     import range_scan
     import replication_cost
     import table5_latency
@@ -110,7 +118,7 @@ def collect() -> dict:
         dict(bytes_tx=f1["bytes_tx"], ops_tx=f1["ops_tx"]), 1,
         qn.ConnTable(n_nodes=96, threads=20, mode=mode)), 4)
         for mode in qn.MODES}
-    return {
+    out = {
         "round_trips": tx["round_trips"],
         "rt_round": round(tx["rt_round"], 4),
         "commit_rate": round(tx["commit_rate"], 4),
@@ -128,7 +136,17 @@ def collect() -> dict:
         # that the fast-path scan costs exactly the point-lookup schedule
         # and that f=1 adds zero rounds to it
         "ordered": range_scan.gate_numbers(),
+        # membership_churn.gate_numbers() asserts that the epoch-stable
+        # placement-routed schedule equals the rep-only one and that a table
+        # refresh is ONE one-sided read; the snapshot then pins the recovery
+        # traffic and the stale-retry schedule
+        "membership": membership_churn.gate_numbers(),
     }
+    assert out["membership"]["round_trips_stable"] == out["round_trips"], \
+        f"epoch-stable placement routing must cost the rep-only schedule " \
+        f"({out['membership']['round_trips_stable']} vs " \
+        f"{out['round_trips']} round trips)"
+    return out
 
 
 def compare(pr: dict, base: dict) -> list[str]:
@@ -189,6 +207,26 @@ def compare(pr: dict, base: dict) -> list[str]:
             fails.append(f"ordered.mops_node_32 regressed: "
                          f"{ob['mops_node_32']} -> {p} "
                          f"(<{TPUT_TOL:.0%} of baseline)")
+    mb = base.get("membership")
+    if mb is not None:
+        mp = pr.get("membership") or {}
+        for k in ("round_trips_stable", "refresh_round_trips",
+                  "stale_round_trips"):
+            p = mp.get(k)
+            if p is None or p > mb[k]:
+                fails.append(f"membership.{k} increased: {mb[k]} -> {p} "
+                             f"(any increase fails: the epoch-stable/"
+                             f"refresh/stale-retry schedules are pinned)")
+        p = mp.get("commit_rate_stable")
+        if p is None or p < mb["commit_rate_stable"]:
+            fails.append(f"membership.commit_rate_stable dropped: "
+                         f"{mb['commit_rate_stable']} -> {p} "
+                         f"(any drop fails: deterministic workload)")
+        p = mp.get("rereplication_bytes")
+        if p is None or p > mb["rereplication_bytes"] * LAT_TOL:
+            fails.append(f"membership.rereplication_bytes regressed: "
+                         f"{mb['rereplication_bytes']} -> {p} "
+                         f"(>{LAT_TOL:.0%} of baseline)")
     return fails
 
 

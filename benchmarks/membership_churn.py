@@ -1,0 +1,272 @@
+"""Membership churn: what do join / leave / kill cost the dataplane?
+
+The placement subsystem's bargain is: epoch-STABLE execution pays nothing
+(routing is a client-side table lookup; the published region is only read
+after a stale-route abort), and every membership event is billed explicitly
+— re-replication bytes, epoch-refresh round trips, and one round of
+``stale_route`` aborts for clients caught with the old table.  This
+benchmark measures each term of that bill on deterministic workloads:
+
+  * ``steady``    — the bench-gate OCC workload (f=1) run twice, with and
+    without a placement table.  Exchange rounds are asserted IDENTICAL: the
+    identity table routes every key to its static home and the refresh read
+    is gated off while no lane aborts stale, so placement adds ZERO wire to
+    the epoch-stable fast path (the bench gate pins this forever).
+  * ``refresh``   — one table refresh is ONE one-sided read of the
+    coordinator-published routing region, ``placement.routing_words(n)``
+    words; reported in round trips and bytes.
+  * ``kill``      — fail a node at f=1: ``repair_plan`` promotes surviving
+    copies and ``rereplicate`` streams the dead node's partitions to fresh
+    backups over the existing backup classes.  Reports the re-replication
+    bytes (the paper's recovery-traffic term) and the transfer count.
+  * ``stale``     — a partition is migrated away and clients still holding
+    the pre-flip table run a write batch: the flipped partition's lanes are
+    refused by the old owner (``stale_route`` aborts in round 0), pay ONE
+    refresh read in round 1, and commit; valid routes commit in round 0
+    untouched — the abort-cause mix and rounds-to-converge are printed and
+    gated.
+  * ``leave``     — graceful exit: ``drain_plan`` + ``migrate_partition``
+    per owned partition (source-lock -> copy -> epoch flip), then
+    ``leave_node``; reports migration wire bytes.
+  * ``join``      — a node (re)joins and one partition is migrated onto it;
+    same accounting.
+
+    PYTHONPATH=src python benchmarks/membership_churn.py [--smoke]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import csv_line, make_tx_workload, time_jit
+from repro.core import placement as pl
+from repro.core import txloop as txl
+from repro.core.datastructs import hashtable as ht
+from repro.core.replication import ReplicaConfig
+from repro.core.transport import SimTransport
+
+N_NODES, LANES, MAX_ROUNDS = 4, 8, 2
+
+
+def _cluster(seed=5):
+    """The bench-gate cluster + workload (common.make_tx_workload) so the
+    steady-state schedule here and the gated one can never diverge."""
+    cfg = ht.HashTableConfig(n_nodes=N_NODES, n_buckets=256, bucket_width=1,
+                             n_overflow=64, max_chain=8)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(N_NODES)
+    state = ht.init_cluster_state(cfg)
+    state, rk, wk, wv = make_tx_workload(t, cfg, layout, state, lanes=LANES,
+                                         n_keys=64, seed=seed)
+    return cfg, layout, t, state, rk, wk, wv
+
+
+def steady_state():
+    """f=1 workload with vs without a placement table: identical rounds."""
+    cfg, layout, t, state, rk, wk, wv = _cluster()
+    rep = ReplicaConfig(N_NODES, 1)
+    pcfg = pl.PlacementConfig(N_NODES, f=1)
+    table = pl.initial_table(pcfg)
+
+    run_rep = jax.jit(lambda st: txl.tx_loop(
+        t, st, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        max_rounds=MAX_ROUNDS, rep=rep))
+    run_pl = jax.jit(lambda st: txl.tx_loop(
+        t, st, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        max_rounds=MAX_ROUNDS, rep=rep, ptable=table, pcfg=pcfg))
+    (_, _, res0), _ = time_jit(run_rep, state)
+    (_, _, res1), secs = time_jit(run_pl, state)
+
+    rt0, rt1 = float(res0.round_trips), float(res1.round_trips)
+    assert rt1 == rt0, \
+        f"identity placement table must add ZERO exchange rounds ({rt0} -> {rt1})"
+    assert float(jnp.sum(res1.round_abort_stale)) == 0.0, \
+        "no stale-route aborts at a stable epoch"
+    np.testing.assert_array_equal(np.asarray(res0.committed),
+                                  np.asarray(res1.committed))
+    return dict(
+        round_trips_stable=rt1,
+        round_trips_rep_only=rt0,
+        commit_rate_stable=round(float(jnp.mean(res1.committed)), 4),
+        wire_bytes_stable=round(
+            float(res1.metrics.wire.total_bytes) / (N_NODES * LANES), 2),
+        secs=secs,
+    )
+
+
+def refresh_cost():
+    """ONE one-sided read per table refresh; gated-off refresh = zero wire."""
+    cfg, layout, t, state, *_ = _cluster()
+    pcfg = pl.PlacementConfig(N_NODES, f=1)
+    table = pl.initial_table(pcfg)
+    _, stats = pl.refresh_table(t, state, layout, pcfg, table)
+    _, s_off = pl.refresh_table(t, state, layout, pcfg, table,
+                                enabled=jnp.asarray(False))
+    assert float(s_off.round_trips) == 0.0 and float(s_off.ops) == 0.0, \
+        "a gated-off refresh must issue nothing"
+    return dict(round_trips=float(stats.round_trips),
+                bytes=float(stats.total_bytes))
+
+
+def _populated_placement_cluster(seed=5):
+    """Cluster populated THROUGH the replicated commit path at f=1 with
+    placement routing (write-only lanes; the churn events below reuse it)."""
+    cfg, layout, t, state, rk, wk, wv = _cluster(seed=seed)
+    rep = ReplicaConfig(N_NODES, 1)
+    pcfg = pl.PlacementConfig(N_NODES, f=1)
+    table = pl.initial_table(pcfg)
+    no_reads = jnp.zeros((N_NODES, LANES, 0, 2), jnp.uint32)
+    state, _, res = txl.tx_loop(
+        t, state, cfg, layout, read_keys=no_reads, write_keys=wk,
+        write_values=wv, max_rounds=4, rep=rep, ptable=table, pcfg=pcfg)
+    assert bool(np.asarray(res.committed).all())
+    return cfg, layout, t, state, wk, wv, rep, pcfg, table
+
+
+def kill_event():
+    """Fail a node at f=1: repair_plan + rereplicate restore the copy count;
+    report the recovery traffic (the dead node's partitions streamed from
+    surviving copies to fresh backups)."""
+    cfg, layout, t, state, wk, wv, rep, pcfg, table = \
+        _populated_placement_cluster()
+    dead = 1
+    table = pl.kill_node(pcfg, table, dead)
+    table, transfers = pl.repair_plan(pcfg, table)
+    state = dict(state,
+                 arena=state["arena"].at[dead].set(jnp.uint32(0xDEAD)))
+    state = pl.install_local(state, layout, pcfg, table,
+                             nodes=[n for n in range(N_NODES) if n != dead])
+    state, s_rr = pl.rereplicate(t, state, cfg, layout, pcfg, transfers)
+    return dict(rereplication_bytes=round(float(s_rr.total_bytes), 2),
+                transfers=len(transfers))
+
+
+def stale_mix():
+    """The abort-cause mix for clients caught by an epoch flip: partition 0
+    is migrated away, stale clients' partition-0 lanes are refused by the
+    OLD owner (ST_WRONG_EPOCH, a node cannot mutate a partition it lost),
+    refresh the table for ONE one-sided read, and commit on the retry.
+    Lanes whose routes stayed valid commit in round 0, untouched."""
+    cfg, layout, t, state, wk, wv, rep, pcfg, table = \
+        _populated_placement_cluster()
+    stale_table = table                       # the pre-flip client view
+    table, state, _, ok = pl.migrate_partition(
+        t, state, cfg, layout, pcfg, table, 0, 3)
+    assert ok, "uncontended migration must succeed"
+
+    wk2 = wk ^ jnp.uint32(0x5DEECE66)
+    no_reads = jnp.zeros((N_NODES, LANES, 0, 2), jnp.uint32)
+    _, _, res = txl.tx_loop(
+        t, state, cfg, layout, read_keys=no_reads, write_keys=wk2,
+        write_values=wv, max_rounds=3, rep=rep, ptable=stale_table,
+        pcfg=pcfg)
+    stale_r = np.asarray(res.round_abort_stale)
+    assert bool(np.asarray(res.committed).all()), \
+        "stale clients must converge after one refresh"
+    assert int(stale_r[0]) > 0, \
+        "the flipped partition's lanes must abort stale_route in round 0"
+    assert int(stale_r[1:].sum()) == 0, \
+        "one refresh resolves every stale route"
+    converge = int(np.asarray(res.commit_round).max()) + 1
+    return dict(
+        abort_stale_round0=int(stale_r[0]),
+        abort_lock=int(np.asarray(res.round_abort_lock).sum()),
+        abort_validate=int(np.asarray(res.round_abort_validate).sum()),
+        abort_overflow=int(np.asarray(res.round_abort_overflow).sum()),
+        stale_rounds_to_converge=converge,
+        stale_round_trips=float(res.round_trips),
+    )
+
+
+def leave_gracefully():
+    """drain_plan + migrate_partition each owned partition, then leave."""
+    cfg, layout, t, state, wk, wv, rep, pcfg, table = \
+        _populated_placement_cluster(seed=6)
+    node = 2
+    plan = pl.drain_plan(pcfg, table, node)
+    total = 0.0
+    for part, dst in plan:
+        table, state, stats, ok = pl.migrate_partition(
+            t, state, cfg, layout, pcfg, table, part, dst)
+        assert ok, f"uncontended migration of part {part} must succeed"
+        total += float(stats.total_bytes)
+    table = pl.leave_node(pcfg, table, node)
+    assert int(np.asarray(table.copies)[:, 0].tolist().count(node)) == 0, \
+        "a drained node owns nothing"
+    return dict(migrations=len(plan), migration_bytes=round(total, 2),
+                epoch=int(table.epoch))
+
+
+def join_and_rebalance():
+    """A node rejoins; one partition is migrated onto it."""
+    cfg, layout, t, state, wk, wv, rep, pcfg, table = \
+        _populated_placement_cluster(seed=7)
+    node = 3
+    table = pl.leave_node(pcfg, table, node)
+    table, transfers = pl.repair_plan(pcfg, table)
+    state = pl.install_local(state, layout, pcfg, table)
+    state, _ = pl.rereplicate(t, state, cfg, layout, pcfg, transfers)
+
+    table = pl.join_node(pcfg, table, node)
+    part = node                                    # give it its ring slot back
+    table, state, stats, ok = pl.migrate_partition(
+        t, state, cfg, layout, pcfg, table, part, node)
+    assert ok and int(np.asarray(table.copies)[part, 0]) == node
+    return dict(migration_bytes=round(float(stats.total_bytes), 2),
+                epoch=int(table.epoch))
+
+
+def gate_numbers():
+    """Deterministic membership numbers for bench_gate.py.  Collect-time
+    structural asserts (schedule equality, one-read refresh, single-round
+    stale convergence) fire BEFORE any baseline comparison."""
+    ss = steady_state()
+    rf = refresh_cost()
+    kl = kill_event()
+    sm = stale_mix()
+    assert rf["round_trips"] == 1.0, \
+        "a table refresh is ONE one-sided read"
+    return {
+        "round_trips_stable": ss["round_trips_stable"],
+        "commit_rate_stable": ss["commit_rate_stable"],
+        "refresh_round_trips": rf["round_trips"],
+        "rereplication_bytes": kl["rereplication_bytes"],
+        "stale_round_trips": sm["stale_round_trips"],
+    }
+
+
+def main(smoke=False):
+    ss = steady_state()
+    csv_line("membership/steady", ss["secs"] * 1e6,
+             f"rt={ss['round_trips_stable']};"
+             f"rt_rep_only={ss['round_trips_rep_only']};"
+             f"commit={ss['commit_rate_stable']};"
+             f"bytes_tx={ss['wire_bytes_stable']}")
+    rf = refresh_cost()
+    csv_line("membership/refresh", 0.0,
+             f"round_trips={rf['round_trips']};bytes={rf['bytes']}")
+    kl = kill_event()
+    csv_line("membership/kill", 0.0,
+             f"rereplication_bytes={kl['rereplication_bytes']};"
+             f"transfers={kl['transfers']}")
+    sm = stale_mix()
+    csv_line("membership/stale_mix", 0.0,
+             f"abort_stale_r0={sm['abort_stale_round0']};"
+             f"abort_lock={sm['abort_lock']};"
+             f"abort_validate={sm['abort_validate']};"
+             f"abort_overflow={sm['abort_overflow']};"
+             f"rounds_to_converge={sm['stale_rounds_to_converge']}")
+    lv = leave_gracefully()
+    csv_line("membership/leave", 0.0,
+             f"migrations={lv['migrations']};"
+             f"bytes={lv['migration_bytes']};epoch={lv['epoch']}")
+    if not smoke:
+        jn = join_and_rebalance()
+        csv_line("membership/join", 0.0,
+                 f"bytes={jn['migration_bytes']};epoch={jn['epoch']}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(smoke="--smoke" in sys.argv)

@@ -16,8 +16,8 @@ import sys
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-ALL = ["fig4", "fig5", "fig6", "table5", "fig7", "conn", "range", "physseg",
-       "hybrid", "roofline"]
+ALL = ["fig4", "fig5", "fig6", "table5", "fig7", "conn", "range",
+       "membership", "physseg", "hybrid", "roofline"]
 
 
 def main() -> None:
@@ -46,6 +46,9 @@ def main() -> None:
     if "range" in want:
         import range_scan
         range_scan.main(node_counts=(4,) if smoke else (4, 8), smoke=smoke)
+    if "membership" in want:
+        import membership_churn
+        membership_churn.main(smoke=smoke)
     if smoke:
         for name in ("physseg", "hybrid", "roofline"):
             if name in want:

@@ -84,6 +84,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import onesided as osd
+from repro.core import placement as pl
 from repro.core import regions as rg
 from repro.core import rpc as R
 from repro.core import slots as sl
@@ -149,6 +150,9 @@ def build_layout(cfg: BTreeConfig) -> rg.RegionTable:
     tbl.register("bsep", cfg.n_leaves)
     tbl.register("bnleaf", 1)
     tbl.register("pbounds", 2)          # this node's inclusive partition [lo, hi]
+    # coordinator-published placement table (core/placement.py) — same layout
+    # and role as the hash table's: owner check + one-read client refresh
+    tbl.register("routing", pl.routing_words(cfg.n_nodes))
     tbl.register("scratch", 1)          # must stay LAST (write sink)
     return tbl
 
@@ -167,6 +171,12 @@ def home_of(cfg: BTreeConfig, key):
         return jnp.zeros(key.shape, jnp.int32)
     node = key // jnp.uint32(_part(cfg))
     return jnp.minimum(node, jnp.uint32(cfg.n_nodes - 1)).astype(jnp.int32)
+
+
+def part_of(cfg: BTreeConfig, key_lo, key_hi=None):
+    """The key's PARTITION (generic placement interface): the static range
+    partition — placement maps it to whatever node currently owns it."""
+    return home_of(cfg, key_lo)
 
 
 def partition_bounds(cfg: BTreeConfig, node):
@@ -205,6 +215,11 @@ def init_node_state(cfg: BTreeConfig, layout: rg.RegionTable, node_id):
         arena = arena.at[nleaf.base].set(jnp.uint32(1))
     pb = layout["pbounds"].base
     arena = arena.at[pb].set(lo).at[pb + 1].set(hi)
+    rb = layout["routing"].base
+    arena = lax.dynamic_update_slice(
+        arena, pl.identity_region_image(cfg.n_nodes), (rb,))
+    arena = arena.at[rb + pl.SELF_WORD].set(
+        jnp.asarray(node_id, jnp.uint32))
     return {"arena": arena}
 
 
@@ -256,6 +271,29 @@ def refresh_meta(t, state, cfg: BTreeConfig, layout: rg.RegionTable, *,
             "nleaf": buf[..., cfg.n_leaves]}, stats
 
 
+def refresh_backup_meta(t, state, cfg: BTreeConfig, layout: rg.RegionTable, *,
+                        nic=None):
+    """The BACKUP trees' separator directories (``bsep``/``bnleaf`` are
+    adjacent like the primary pair, so it is again ONE one-sided read per
+    node).  A scan that must be served by a backup tree — its partition's
+    primary died — plans against this directory; see
+    tests/test_replication.py's btree failover scans."""
+    n_local = t.n_local
+    dest = jnp.tile(jnp.arange(cfg.n_nodes, dtype=jnp.int32)[None],
+                    (n_local, 1))
+    off = jnp.full((n_local, cfg.n_nodes), layout["bsep"].base, jnp.uint32)
+    buf, _, stats = osd.remote_read(t, state["arena"], dest, off,
+                                    length=cfg.n_leaves + 1, nic=nic)
+    return {"sep": buf[..., :cfg.n_leaves],
+            "nleaf": buf[..., cfg.n_leaves]}, stats
+
+
+def backup_leaf_offset(cfg: BTreeConfig, layout: rg.RegionTable, leaf):
+    """Arena word offset of BACKUP-tree leaf `leaf`."""
+    return (jnp.uint32(layout["bleaves"].base)
+            + jnp.asarray(leaf, jnp.uint32) * jnp.uint32(cfg.leaf_words))
+
+
 def _route_leaf(cfg: BTreeConfig, fences, nleaf, key):
     """fences: (..., n_leaves) fence_lo per arena leaf; nleaf: (...,).
     Returns (leaf, fence): the allocated leaf with the largest fence_lo <= key
@@ -284,11 +322,19 @@ def probe_words(cfg: BTreeConfig) -> int:
 
 
 def lookup_start(cfg: BTreeConfig, layout: rg.RegionTable, key_lo, key_hi,
-                 cache=None):
+                 cache=None, ptable=None):
     """Client-side metadata walk: range-partition to the node, walk the
     CACHED separator directory to the leaf.  Without a cache the probe
-    targets leaf 0 and the RPC fallback resolves (correct, never fast)."""
+    targets leaf 0 and the RPC fallback resolves (correct, never fast).
+
+    ``ptable``: optional placement.PlacementTable — route to the first LIVE
+    copy instead of the static home (identity table ≡ home_of, bit-identical).
+    A failed-over probe reads the backup's PRIMARY region and misses its
+    fences, so the RPC fallback (which tree-selects owner-side) resolves —
+    correct, never fast, exactly the no-cache degradation mode."""
     node = home_of(cfg, key_lo)
+    if ptable is not None:
+        node, _ = pl.live_dest(ptable, node)
     if cache is None:
         leaf = jnp.zeros(jnp.shape(key_lo), jnp.uint32)
         hit = jnp.zeros(jnp.shape(key_lo), bool)
@@ -497,6 +543,21 @@ def _make_rpc_handler(cfg: BTreeConfig, layout: rg.RegionTable) -> R.Handler:
         known = (is_lookup | is_ins | is_del | is_lock | is_commit | is_abort
                  | is_bkw)
 
+        # ---- placement epoch check (lock-class ops only) -----------------
+        # A request routed by a STALE table lands on a node that no longer
+        # owns the key's partition: reject with ST_WRONG_EPOCH before any
+        # write, so rebalance is invisible to in-flight transactions (they
+        # abort `stale_route`, refresh, retry).  COMMIT/ABORT stay unchecked
+        # — locks taken under the old epoch must remain releasable — and
+        # backups/lookups are replica traffic by design.
+        rb = layout["routing"].base
+        checked = is_ins | is_del | is_lock
+        part_ = home_of(cfg, key).astype(jnp.uint32)
+        owner = arena[(jnp.uint32(rb + pl.COPIES_WORD)
+                       + part_ * jnp.uint32(pl.MAX_COPIES)).astype(jnp.int32)]
+        self_id = arena[rb + pl.SELF_WORD]
+        wrong = checked & (owner != self_id)
+
         # COMMIT/ABORT address their leaf directly (header slot from LOCK)
         direct = is_commit | is_abort
         leaf = jnp.where(direct, aux // jnp.uint32(lslots), routed)
@@ -593,6 +654,7 @@ def _make_rpc_handler(cfg: BTreeConfig, layout: rg.RegionTable) -> R.Handler:
         status = jnp.where(direct,
                            jnp.where(own, ok32, jnp.uint32(W.ST_LOCK_FAIL)),
                            status)
+        status = jnp.where(wrong, jnp.uint32(W.ST_WRONG_EPOCH), status)
 
         tgt_leaf = jnp.where(key_right, right_idx, leaf)
         out_aux = header_slot(cfg, tgt_leaf)
@@ -604,7 +666,7 @@ def _make_rpc_handler(cfg: BTreeConfig, layout: rg.RegionTable) -> R.Handler:
                             jnp.zeros_like(cur_val))
 
         # ---- apply (all addressed through the selected tree's bases) -----
-        go = valid & known
+        go = valid & known & ~wrong
         arena = _write_leaf(cfg, layout, arena, leaf, left_img, wrote & go,
                             base=leaves_base)
         safe_right = jnp.minimum(right_idx, jnp.uint32(cfg.n_leaves - 1))
@@ -615,6 +677,27 @@ def _make_rpc_handler(cfg: BTreeConfig, layout: rg.RegionTable) -> R.Handler:
             jnp.where(do_split & go, split_key, arena[sep_idx]))
         arena = arena.at[nleaf_off].set(
             jnp.where(do_split & go, nleaf + 1, nleaf))
+
+        # ---- OP_PL_INSTALL: update the routing region (placement-table
+        # broadcast; PL is not in `known`, so no leaf write above fired).
+        # Record: [op, part, epoch, 0, copies row ++ alive bits ++ 0...].
+        is_pli = op == W.OP_PL_INSTALL
+        pli_go = is_pli & valid
+        aw = pl.alive_words(cfg.n_nodes)
+        row_off = (jnp.uint32(rb + pl.COPIES_WORD)
+                   + jnp.minimum(key, jnp.uint32(cfg.n_nodes - 1))
+                   * jnp.uint32(pl.MAX_COPIES)).astype(jnp.int32)
+        cur_row = lax.dynamic_slice(arena, (row_off,), (pl.MAX_COPIES,))
+        arena = lax.dynamic_update_slice(
+            arena, jnp.where(pli_go, val[:pl.MAX_COPIES], cur_row), (row_off,))
+        alive_off = rb + pl.COPIES_WORD + cfg.n_nodes * pl.MAX_COPIES
+        cur_al = lax.dynamic_slice(arena, (alive_off,), (aw,))
+        arena = lax.dynamic_update_slice(
+            arena, jnp.where(pli_go, val[pl.MAX_COPIES:pl.MAX_COPIES + aw],
+                             cur_al), (alive_off,))
+        arena = arena.at[rb + pl.EPOCH_WORD].set(
+            jnp.where(pli_go, key_hi, arena[rb + pl.EPOCH_WORD]))
+        status = jnp.where(is_pli, jnp.uint32(W.ST_OK), status)
 
         status = jnp.where(valid, status, jnp.uint32(W.ST_BAD_OP))
         reply = jnp.concatenate(

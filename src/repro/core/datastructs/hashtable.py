@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import placement as pl
 from repro.core import regions as rg
 from repro.core import rpc as R
 from repro.core import wireproto as W
@@ -70,23 +71,37 @@ def build_layout(cfg: HashTableConfig) -> rg.RegionTable:
     tbl = rg.RegionTable()
     tbl.register("slots", cfg.n_slots * sl.SLOT_WORDS)
     tbl.register("alloc", 1)
+    # coordinator-published placement table (core/placement.py): epoch, the
+    # per-partition copy rows, and the liveness bitmap — refreshed by clients
+    # with ONE one-sided read, consulted by the handler's owner check
+    tbl.register("routing", pl.routing_words(cfg.n_nodes))
     tbl.register("scratch", 1)     # must stay LAST (write sink)
     return tbl
 
 
 def init_node_state(cfg: HashTableConfig, layout: rg.RegionTable):
-    """Arena with every slot formatted empty."""
+    """Arena with every slot formatted empty and the epoch-0 identity
+    placement table published (node p owns partition p — what keeps the
+    placement-routed fast path bit-identical to static partition math)."""
     arena = rg.make_arena(layout)
     slots_r = layout["slots"]
     empty = jnp.tile(sl.make_empty_slot(), (cfg.n_slots,))
     arena = lax.dynamic_update_slice(arena, empty, (slots_r.base,))
+    arena = lax.dynamic_update_slice(
+        arena, pl.identity_region_image(cfg.n_nodes),
+        (layout["routing"].base,))
     return {"arena": arena}
 
 
 def init_cluster_state(cfg: HashTableConfig):
     layout = build_layout(cfg)
     one = init_node_state(cfg, layout)
-    return jax.tree.map(lambda x: jnp.tile(x[None], (cfg.n_nodes,) + (1,) * x.ndim), one)
+    st = jax.tree.map(
+        lambda x: jnp.tile(x[None], (cfg.n_nodes,) + (1,) * x.ndim), one)
+    rb = layout["routing"].base
+    st["arena"] = st["arena"].at[:, rb + pl.SELF_WORD].set(
+        jnp.arange(cfg.n_nodes, dtype=jnp.uint32))
+    return st
 
 
 # ---------------------------------------------------------------------------
@@ -98,6 +113,14 @@ def home_of(cfg: HashTableConfig, key_lo, key_hi):
     node = (h1 % jnp.uint32(cfg.n_nodes)).astype(jnp.int32)
     bucket = h2 % jnp.uint32(cfg.n_buckets)
     return node, bucket
+
+
+def part_of(cfg: HashTableConfig, key_lo, key_hi):
+    """The key's PARTITION (generic placement interface).  Partition ids
+    coincide with home nodes under the identity table; placement maps them
+    to whatever node currently owns them."""
+    node, _ = home_of(cfg, key_lo, key_hi)
+    return node
 
 
 def bucket_offset(cfg: HashTableConfig, layout: rg.RegionTable, bucket):
@@ -114,14 +137,23 @@ def slot_idx_offset(layout: rg.RegionTable, slot_idx):
 # Client side: lookup_start / lookup_end (Storm Table 3)
 # ---------------------------------------------------------------------------
 def lookup_start(cfg: HashTableConfig, layout: rg.RegionTable, key_lo, key_hi,
-                 cache=None):
+                 cache=None, ptable=None):
     """Client-side metadata lookup: where *might* the item live?
 
     Returns (node, offset, read_slots, cache_hit).  With an address cache
     (Storm(perfect) / DrTM+H), a hit yields the EXACT slot (1-slot read);
     otherwise the home bucket (bucket_width-slot read).
+
+    ptable: optional placement.PlacementTable — reads route to the
+    partition's first LIVE copy (owner when everything is up, so the
+    epoch-stable path is bit-identical; a backup after a failure — the
+    bucket half of the hash is node-independent, so the copy lives in the
+    SAME bucket of the replica's table).  No live copy routes to -1, which
+    the transport parks.
     """
     node, bucket = home_of(cfg, key_lo, key_hi)
+    if ptable is not None:
+        node, _ = pl.live_dest(ptable, node)
     off = bucket_offset(cfg, layout, bucket)
     hit = jnp.zeros(jnp.shape(key_lo), bool)
     if cache is not None and cfg.cache_slots > 0:
@@ -304,9 +336,22 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
     """The serial (mutating-capable) rpc_handler.  Record layout:
     [op, key_lo, key_hi, aux, value...]; reply [status, aux, value...].
     COMMIT_UNLOCK/ABORT_UNLOCK records repurpose the key_lo word to carry the
-    caller's lock tag (the slot is addressed directly by aux = slot idx)."""
+    caller's lock tag (the slot is addressed directly by aux = slot idx).
+
+    Lock-class ops (LOCK / INSERT / UPDATE / DELETE) are OWNER-CHECKED
+    against the published placement table: if this node no longer owns the
+    key's partition the op is refused with ST_WRONG_EPOCH and writes
+    nothing — the stale-routed lane aborts (cause ``stale_route``),
+    refreshes its table and retries.  COMMIT/ABORT are deliberately
+    unchecked (a granted lock must always be releasable wherever it was
+    granted), as are reads (version-validated) and OP_BACKUP_WRITE
+    (driver/commit-directed).  OP_PL_INSTALL updates this node's routing
+    region (one partition row + epoch + liveness per record)."""
     alloc_off = layout["alloc"].base
     ovf_base = cfg.n_bucket_slots
+    rb = layout["routing"].base
+    alive_off = rb + pl.COPIES_WORD + cfg.n_nodes * pl.MAX_COPIES
+    aw = pl.alive_words(cfg.n_nodes)
 
     def fn(state, rec, valid):
         arena = state["arena"]
@@ -491,6 +536,21 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
         out_aux = jnp.where(wr_bk_upd | wr_bk_ins, write_idx, out_aux)
         out_ver = jnp.where(is_bkw, aux, out_ver)
 
+        # ---- owner check (placement epoch validation) ----------------------
+        # lock-class ops only: a node that lost the key's partition since the
+        # client cached its table refuses the op instead of mutating state it
+        # no longer owns.  part = static hash math; owner = column 0 of this
+        # node's PUBLISHED routing region (updated by OP_PL_INSTALL).
+        checked = is_ins | is_upd | is_del | is_lock
+        h1_, _ = sl.hash_key(key_lo, key_hi)
+        part_ = h1_ % jnp.uint32(cfg.n_nodes)
+        owner = arena[jnp.uint32(rb + pl.COPIES_WORD)
+                      + part_ * jnp.uint32(pl.MAX_COPIES)]
+        self_id = arena[rb + pl.SELF_WORD]
+        wrong = checked & (owner != self_id)
+        status = jnp.where(wrong, jnp.uint32(W.ST_WRONG_EPOCH), status)
+        do_write = do_write & ~wrong
+
         # ---- apply ----------------------------------------------------------
         do_write = do_write & valid & ~is_nop
         arena = _write_slot(cfg, layout, arena, write_idx, write_slot, do_write)
@@ -501,6 +561,24 @@ def make_rpc_handler(cfg: HashTableConfig, layout: rg.RegionTable) -> R.Handler:
                             link_tail & do_write)
         new_alloc = jnp.where(bump_alloc & do_write, alloc + 1, alloc)
         arena = arena.at[alloc_off].set(new_alloc)
+
+        # ---- PL_INSTALL (update the published routing region) ---------------
+        # record: [op, part, epoch, 0, copies row (MAX_COPIES) ++ alive bits]
+        is_pli = op == W.OP_PL_INSTALL
+        pli_go = is_pli & valid
+        row_off = (jnp.uint32(rb + pl.COPIES_WORD)
+                   + jnp.minimum(key_lo, jnp.uint32(cfg.n_nodes - 1))
+                   * jnp.uint32(pl.MAX_COPIES)).astype(jnp.int32)
+        cur_row = lax.dynamic_slice(arena, (row_off,), (pl.MAX_COPIES,))
+        arena = lax.dynamic_update_slice(
+            arena, jnp.where(pli_go, val[:pl.MAX_COPIES], cur_row), (row_off,))
+        cur_al = lax.dynamic_slice(arena, (alive_off,), (aw,))
+        arena = lax.dynamic_update_slice(
+            arena, jnp.where(pli_go, val[pl.MAX_COPIES:pl.MAX_COPIES + aw],
+                             cur_al), (alive_off,))
+        arena = arena.at[rb + pl.EPOCH_WORD].set(
+            jnp.where(pli_go, key_hi, arena[rb + pl.EPOCH_WORD]))
+        status = jnp.where(is_pli, jnp.uint32(W.ST_OK), status)
 
         status = jnp.where(is_nop | ~valid, jnp.uint32(W.ST_BAD_OP), status)
         reply = jnp.concatenate(

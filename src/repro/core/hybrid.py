@@ -64,7 +64,7 @@ class HybridMetrics:
 def onesided_probe(t: Transport, state, key_lo, key_hi, cfg, layout, *,
                    cache=None, use_onesided: bool = True,
                    capacity: Optional[int] = None, enabled=None, nic=None,
-                   ds=ht):
+                   ds=ht, ptable=None):
     """Phase 1 of Algorithm 1: lookup_start + one-sided read + lookup_end,
     for any registered data structure (``ds=`` module; default hash table).
 
@@ -75,15 +75,21 @@ def onesided_probe(t: Transport, state, key_lo, key_hi, cfg, layout, *,
     and the read round's WireStats.  The RPC fallback for the `need_rpc`
     lanes can then ride any later exchange round (hybrid_lookup issues it
     immediately; tx's fused protocol piggybacks it on the LOCK round) and be
-    folded in with merge_rpc_fallback."""
+    folded in with merge_rpc_fallback.
+
+    ``ptable``: optional ``placement.PlacementTable`` — lookup_start routes
+    each key to its partition's first LIVE copy instead of the static home
+    (identity table when all nodes are up == static home, bit-identical)."""
     if enabled is None:
         enabled = jnp.ones(key_lo.shape, bool)
     if cache is not None and ds.uses_probe_cache(cfg):
         node, off, hit = jax.vmap(
-            lambda c, kl, kh: ds.lookup_start(cfg, layout, kl, kh, c)
+            lambda c, kl, kh: ds.lookup_start(cfg, layout, kl, kh, c,
+                                              ptable=ptable)
         )(cache, key_lo, key_hi)
     else:
-        node, off, hit = ds.lookup_start(cfg, layout, key_lo, key_hi, None)
+        node, off, hit = ds.lookup_start(cfg, layout, key_lo, key_hi, None,
+                                         ptable=ptable)
 
     if use_onesided:
         buf, ovf, s_read = osd.remote_read(
@@ -140,7 +146,7 @@ def update_lookup_cache(cfg, cache, key_lo, key_hi, node, slot_idx, found,
 def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg, layout, *,
                   cache=None, use_onesided: bool = True,
                   rpc_serial: bool = False, capacity: Optional[int] = None,
-                  enabled=None, nic=None, ds=ht):
+                  enabled=None, nic=None, ds=ht, ptable=None):
     """Batched one-two-sided lookup (any registered data structure via
     ``ds=``; default hash table).
 
@@ -156,7 +162,7 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg, layout, *,
     """
     probe = onesided_probe(t, state, key_lo, key_hi, cfg, layout, cache=cache,
                            use_onesided=use_onesided, capacity=capacity,
-                           enabled=enabled, nic=nic, ds=ds)
+                           enabled=enabled, nic=nic, ds=ds, ptable=ptable)
 
     # ---- phase 2: write-based RPC for the failed lanes --------------------
     recs = ds.lookup_records(cfg, key_lo, key_hi)

@@ -1,0 +1,723 @@
+"""Placement & membership: epoch-stamped routing as a first-class subsystem.
+
+Storm keeps per-connection state small precisely so that ROUTING state can be
+client-cached: a client that knows (partition -> owner, backups) talks to the
+dataplane with zero metadata round trips.  This module extracts every
+owner/replica/routing decision — previously smeared across
+``transport.route_by_dest`` call sites, ``ReplicaConfig.replica_of`` ring
+math, and the ad-hoc ``failover_dest`` / ``failover_lookup`` helpers — into
+one epoch-stamped ``PlacementTable``:
+
+  * **The table** maps each of ``n_parts`` partitions (== the provisioned
+    node-slot count; elastic membership operates within that static ceiling,
+    the standard slot model) to an ordered copy list: column 0 is the OWNER
+    (the only node that accepts lock-class ops for the partition), columns
+    1.. are the backups, -1 = unused slot.  Plus a cluster liveness mask and
+    a monotonically increasing ``epoch``.
+
+  * **Publication** mirrors the btree separator-directory idiom: every node
+    carries a ``routing`` region in its arena (the coordinator-published
+    image), and ``refresh_table`` is ONE one-sided read of that region —
+    "The Impact of RDMA on Agreement" (PAPERS.md) is the grounding for
+    driving membership decisions with one-sided primitives.
+
+  * **Staleness is owner-checked**: the serial handlers compare the partition
+    owner recorded in their OWN routing region against their node id for
+    lock-class ops (OP_LOCK / OP_INSERT / OP_UPDATE / OP_DELETE and the
+    btree structural/lock ops).  A request routed with a stale table gets
+    ``ST_WRONG_EPOCH``; the lane aborts with cause ``stale_route``, refreshes
+    its table (``txloop``), and retries — exactly like a stale separator.
+    COMMIT/ABORT-class ops are deliberately UNCHECKED (an acquired lock must
+    always be releasable, and a commit's install target is wherever the lock
+    was granted), as are reads (version-validated) and driver-directed backup
+    installs.  The epoch conceptually rides the existing 1-word message
+    header (see ``transport.wire_for``), so the epoch-stable wire format and
+    round schedule are bit-identical to the pre-placement dataplane.
+
+  * **Membership**: ``kill_node`` / ``join_node`` / ``leave_node`` bump the
+    epoch and emit a new table; ``repair_plan`` + ``rereplicate`` restore the
+    replication factor after a failure by streaming the dead node's
+    partitions to new backups via the existing OP_BACKUP_WRITE / OP_BT_BACKUP
+    classes; ``migrate_partition`` moves a partition transactionally
+    (source-lock -> copy -> epoch flip) on the OCC machinery itself, so a
+    rebalance concurrent with committing transactions loses no write: any
+    key (hash) or leaf (btree) with an in-flight client lock makes the
+    migration's own locks fail and the whole migration aborts cleanly.
+
+Layering: this module sits ABOVE transport/onesided/rpc and BELOW
+replication/tx — ``replication.py`` is now a thin policy (its ring placement
+is expressed as a table via ``table_from_replica`` and its failover helpers
+delegate here).  The data-structure modules are imported lazily to keep the
+dependency graph acyclic (they import this module for the region codec).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import onesided as osd
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core import wireproto as W
+from repro.core.transport import Transport, WireStats, placement_dest
+
+# Static ceiling on copies per partition (owner + up to 3 backups) — what
+# bounds the published routing-region size and the install record layout.
+MAX_COPIES = 4
+NONE = 0xFFFFFFFF          # "no copy in this slot" in the arena image
+
+# routing-region word layout (relative to layout["routing"].base):
+EPOCH_WORD = 0             # current epoch
+NPARTS_WORD = 1            # n_parts (sanity / decoder self-description)
+SELF_WORD = 2              # THIS node's id — what the owner check compares
+COPIES_WORD = 3            # n_parts rows of MAX_COPIES words, then alive bits
+
+# lock tag used by migration's source-lock phase (nonzero, and outside the
+# per-lane tag space tx.py generates)
+MIG_TAG = 0xB1C00000
+
+
+def alive_words(n_nodes: int) -> int:
+    return (n_nodes + 31) // 32
+
+
+def routing_words(n_nodes: int) -> int:
+    """Published routing-region size in words (n_parts == n_nodes)."""
+    return COPIES_WORD + n_nodes * MAX_COPIES + alive_words(n_nodes)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementConfig:
+    """Static placement parameters (trace-time).
+
+    n_nodes: provisioned node-slot count — also the partition count (each
+             initial node owns exactly one partition; membership changes
+             re-home partitions but never re-shard the key space).
+    f:       backup copies per partition (f + 1 copies total).
+    """
+    n_nodes: int
+    f: int = 0
+
+    def __post_init__(self):
+        if not 0 <= self.f < self.n_nodes:
+            raise ValueError(
+                f"placement needs 0 <= f < n_nodes (got f={self.f}, "
+                f"n_nodes={self.n_nodes})")
+        if self.f + 1 > MAX_COPIES:
+            raise ValueError(
+                f"f={self.f} exceeds MAX_COPIES={MAX_COPIES} copies")
+
+    @property
+    def n_parts(self) -> int:
+        return self.n_nodes
+
+    @property
+    def n_copies(self) -> int:
+        return self.f + 1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PlacementTable:
+    """The client-cached routing state (a pytree; shared across a
+    SimTransport's clients — they all read the same coordinator bytes)."""
+    epoch: jnp.ndarray    # ()           uint32
+    copies: jnp.ndarray   # (n_parts, K) int32 — col 0 = owner, -1 = none
+    alive: jnp.ndarray    # (n_nodes,)   bool
+
+
+def initial_table(pcfg: PlacementConfig) -> PlacementTable:
+    """Epoch-0 identity table: partition p is owned by node p with its f
+    backups on the ring — exactly ``ReplicaConfig``'s placement, so routing
+    through this table is bit-identical to the static partition math."""
+    p = np.arange(pcfg.n_parts)[:, None]
+    i = np.arange(MAX_COPIES)[None, :]
+    copies = np.where(i < pcfg.n_copies, (p + i) % pcfg.n_nodes, -1)
+    return PlacementTable(
+        epoch=jnp.uint32(0),
+        copies=jnp.asarray(copies, jnp.int32),
+        alive=jnp.ones((pcfg.n_nodes,), bool))
+
+
+def table_from_replica(rep, alive) -> PlacementTable:
+    """Express a ``ReplicaConfig`` (ring rotation or a test's pathological
+    placement fn) + liveness mask as a PlacementTable, so every failover
+    decision reduces to the ONE first-live-copy scan
+    (``transport.placement_dest``)."""
+    n = rep.n_nodes
+    p = jnp.arange(n, dtype=jnp.int32)
+    cols = [rep.replica_of(p, i).astype(jnp.int32) for i in range(rep.n_copies)]
+    while len(cols) < MAX_COPIES:
+        cols.append(jnp.full((n,), -1, jnp.int32))
+    return PlacementTable(epoch=jnp.uint32(0),
+                          copies=jnp.stack(cols, axis=1),
+                          alive=jnp.asarray(alive, bool))
+
+
+# ---------------------------------------------------------------------------
+# Routing queries (all traced; part may be any batch shape)
+# ---------------------------------------------------------------------------
+def owner_of(table: PlacementTable, part):
+    """The partition's owner — the only valid target for lock-class ops."""
+    return table.copies[jnp.asarray(part, jnp.int32), 0]
+
+
+def owner_dest(table: PlacementTable, part):
+    """Owner if alive, else -1 (parked by route_by_dest -> ST_DROPPED).
+    A dead owner means writes are unavailable until repair promotes a
+    backup — primary-backup semantics, never a silent write to a replica."""
+    own = owner_of(table, part)
+    ok = (own >= 0) & table.alive[jnp.clip(own, 0, table.alive.shape[0] - 1)]
+    return jnp.where(ok, own, -1).astype(jnp.int32)
+
+
+def copy_nodes(table: PlacementTable, part):
+    """All copy slots of a partition: (..., K) int32 (-1 = none)."""
+    return table.copies[jnp.asarray(part, jnp.int32)]
+
+
+def live_dest(table: PlacementTable, part):
+    """(dest, reachable): first LIVE copy in owner-priority order — the read
+    fail-over rule (owner when everything is up)."""
+    return placement_dest(table.copies, table.alive, part)
+
+
+# ---------------------------------------------------------------------------
+# Region codec: PlacementTable <-> published routing-region words
+# ---------------------------------------------------------------------------
+def _alive_bits(n_nodes: int, alive) -> jnp.ndarray:
+    idx = jnp.arange(n_nodes)
+    bits = jnp.zeros((alive_words(n_nodes),), jnp.uint32)
+    return bits.at[idx // 32].add(
+        jnp.asarray(alive, jnp.uint32) << (idx % 32).astype(jnp.uint32))
+
+
+def region_image(pcfg: PlacementConfig, table: PlacementTable) -> jnp.ndarray:
+    """(routing_words,) uint32 image of the published region.  The SELF_WORD
+    is left 0 — init/install preserve each node's own id."""
+    cps = jnp.where(table.copies >= 0, table.copies.astype(jnp.uint32),
+                    jnp.uint32(NONE))
+    head = jnp.stack([jnp.asarray(table.epoch, jnp.uint32),
+                      jnp.uint32(pcfg.n_parts), jnp.uint32(0)])
+    return jnp.concatenate(
+        [head, cps.reshape(-1), _alive_bits(pcfg.n_nodes, table.alive)])
+
+
+def identity_region_image(n_nodes: int) -> jnp.ndarray:
+    """The epoch-0 image the data structures install at init (f-agnostic:
+    the full ring is published; decoders mask copies beyond their pcfg.f,
+    and the owner check only ever reads column 0)."""
+    pcfg = PlacementConfig(n_nodes, f=min(MAX_COPIES, n_nodes) - 1)
+    return region_image(pcfg, initial_table(pcfg))
+
+
+def decode_region(pcfg: PlacementConfig, words) -> PlacementTable:
+    """Inverse of region_image (SELF_WORD ignored; copy slots beyond
+    pcfg.n_copies masked to -1 so the decode is pcfg-consistent)."""
+    n = pcfg.n_nodes
+    cps = words[COPIES_WORD:COPIES_WORD + n * MAX_COPIES].reshape(
+        n, MAX_COPIES).astype(jnp.int32)
+    col_ok = jnp.arange(MAX_COPIES) < pcfg.n_copies
+    copies = jnp.where(col_ok[None, :], cps, -1)
+    bw = words[COPIES_WORD + n * MAX_COPIES:
+               COPIES_WORD + n * MAX_COPIES + alive_words(n)]
+    idx = jnp.arange(n)
+    alive = ((bw[idx // 32] >> (idx % 32).astype(jnp.uint32)) & 1).astype(bool)
+    return PlacementTable(epoch=words[EPOCH_WORD].astype(jnp.uint32),
+                          copies=copies, alive=alive)
+
+
+# ---------------------------------------------------------------------------
+# Publication: refresh (one-sided read) and install (RPC broadcast / local)
+# ---------------------------------------------------------------------------
+def refresh_table(t: Transport, state, layout, pcfg: PlacementConfig,
+                  table: PlacementTable, *, enabled=None, nic=None):
+    """Refresh the client-cached table with ONE one-sided read of the
+    coordinator-published routing region (the lowest live node per the
+    CURRENT — possibly stale — table; a freshly-dead coordinator is caught
+    on the next retry once the read returns its successor's view).
+
+    enabled: optional scalar/() bool — when False the read issues nothing
+    (zero wire, zero round trips) and the decoded result is garbage; callers
+    select old-vs-new with a tree_map, mirroring btree.refresh_meta's
+    retry-round gating.  Returns (table, WireStats)."""
+    n_local = t.n_local
+    rb = layout["routing"].base
+    length = routing_words(pcfg.n_nodes)
+    coord = jnp.argmax(table.alive).astype(jnp.int32)   # first live node
+    dest = jnp.full((n_local, 1), coord, jnp.int32)
+    off = jnp.full((n_local, 1), rb, jnp.uint32)
+    en = None
+    if enabled is not None:
+        en = jnp.broadcast_to(jnp.asarray(enabled, bool), (n_local, 1))
+    buf, _, stats = osd.remote_read(t, state["arena"], dest, off,
+                                    length=length, enabled=en, nic=nic)
+    # every SimTransport client reads identical coordinator bytes -> decode
+    # one lane into the one shared table
+    return decode_region(pcfg, buf[0, 0]), stats
+
+
+def install_records(pcfg: PlacementConfig, table: PlacementTable):
+    """(n_parts, record_words) OP_PL_INSTALL records — one per partition:
+    [op, part, epoch, 0, copies row (MAX_COPIES) ++ alive bits ++ 0...]."""
+    n = pcfg.n_parts
+    rows = jnp.where(table.copies[:, :MAX_COPIES] >= 0,
+                     table.copies[:, :MAX_COPIES].astype(jnp.uint32),
+                     jnp.uint32(NONE))
+    bits = jnp.broadcast_to(_alive_bits(pcfg.n_nodes, table.alive)[None],
+                            (n, alive_words(pcfg.n_nodes)))
+    pad = jnp.zeros((n, sl.VALUE_WORDS - MAX_COPIES
+                     - alive_words(pcfg.n_nodes)), jnp.uint32)
+    value = jnp.concatenate([rows, bits, pad], axis=-1)
+    part = jnp.arange(n, dtype=jnp.uint32)
+    epoch = jnp.broadcast_to(jnp.asarray(table.epoch, jnp.uint32), (n,))
+    head = jnp.stack([jnp.full((n,), W.OP_PL_INSTALL, jnp.uint32),
+                      part, epoch, jnp.zeros((n,), jnp.uint32)], axis=-1)
+    return jnp.concatenate([head, value], axis=-1)
+
+
+def install_table(t: Transport, state, layout, pcfg: PlacementConfig,
+                  table: PlacementTable, handler, *, targets=None,
+                  issuer: int = 0, capacity: Optional[int] = None, nic=None):
+    """Broadcast the table to ``targets`` (node-id list; default: every node
+    slot) as OP_PL_INSTALL RPCs from ``issuer`` — the wire-honest path the
+    membership/migration drivers use.  Returns (state, WireStats)."""
+    tg = (list(range(pcfg.n_nodes)) if targets is None
+          else [int(x) for x in targets])
+    recs1 = install_records(pcfg, table)                       # (P, Wrec)
+    B = len(tg) * pcfg.n_parts
+    dest_row = jnp.repeat(jnp.asarray(tg, jnp.int32), pcfg.n_parts)
+    recs_row = jnp.tile(recs1, (len(tg), 1))
+    n_local = t.n_local
+    dest = jnp.broadcast_to(dest_row[None], (n_local, B))
+    recs = jnp.broadcast_to(recs_row[None], (n_local, B, recs1.shape[-1]))
+    en = ((t.node_ids() == issuer)[:, None]
+          & jnp.ones((1, B), bool))
+    state, _, _, stats = R.rpc_call(t, state, dest, recs, handler,
+                                    capacity=capacity, enabled=en, nic=nic)
+    return state, stats
+
+
+def install_local(state, layout, pcfg: PlacementConfig, table: PlacementTable,
+                  nodes=None):
+    """Write the table straight into the routing regions (no wire) — test
+    setup / the coordinator updating its own published copy."""
+    rb = layout["routing"].base
+    length = routing_words(pcfg.n_nodes)
+    arena = state["arena"]
+    n_local = arena.shape[0]
+    img = jnp.broadcast_to(region_image(pcfg, table)[None], (n_local, length))
+    img = img.at[:, SELF_WORD].set(arena[:, rb + SELF_WORD])
+    if nodes is not None:
+        mask = jnp.zeros((n_local,), bool).at[jnp.asarray(nodes)].set(True)
+        img = jnp.where(mask[:, None], img, arena[:, rb:rb + length])
+    return {**state, "arena": arena.at[:, rb:rb + length].set(img)}
+
+
+# ---------------------------------------------------------------------------
+# Membership: epoch-bumping table transitions + the repair planner
+# ---------------------------------------------------------------------------
+def kill_node(pcfg: PlacementConfig, table: PlacementTable,
+              node) -> PlacementTable:
+    """Failure: mark dead, bump the epoch.  Routing immediately fails over
+    reads (live_dest) and parks writes to partitions the node owned until
+    ``repair_plan`` promotes a backup."""
+    return PlacementTable(table.epoch + 1, table.copies,
+                          table.alive.at[jnp.asarray(node)].set(False))
+
+
+def join_node(pcfg: PlacementConfig, table: PlacementTable,
+              node) -> PlacementTable:
+    """(Re)join: mark live, bump the epoch.  The joiner serves no partition
+    until ``migrate_partition`` / ``repair_plan`` route one to it."""
+    return PlacementTable(table.epoch + 1, table.copies,
+                          table.alive.at[jnp.asarray(node)].set(True))
+
+
+def leave_node(pcfg: PlacementConfig, table: PlacementTable,
+               node) -> PlacementTable:
+    """Graceful departure — same table transition as ``kill_node``, but the
+    caller is expected to drain first (``drain_plan`` + migrate each owned
+    partition away), so no committed data becomes under-replicated."""
+    return kill_node(pcfg, table, node)
+
+
+def drain_plan(pcfg: PlacementConfig, table: PlacementTable, node: int):
+    """Partitions owned by ``node`` with a suggested new owner each (the
+    next live node on the ring that holds no copy yet) — the graceful-leave
+    recipe: ``migrate_partition`` each, then ``leave_node``."""
+    copies = np.asarray(table.copies)
+    alive = np.asarray(table.alive)
+    out = []
+    for p in range(pcfg.n_parts):
+        if copies[p, 0] != node:
+            continue
+        row = {int(c) for c in copies[p] if c >= 0}
+        for step in range(1, pcfg.n_nodes):
+            c = (p + step) % pcfg.n_nodes
+            if c != node and alive[c] and c not in row:
+                out.append((p, c))
+                break
+    return out
+
+
+def repair_plan(pcfg: PlacementConfig, table: PlacementTable):
+    """Re-replication planner (host-level, deterministic): for every
+    partition with dead copies, promote the first surviving copy to owner
+    and refill the copy list with live ring successors.
+
+    Returns (new_table, transfers) where transfers is a list of
+    (part, src, dst): stream partition ``part`` from live copy ``src`` to
+    new backup ``dst`` (``rereplicate`` executes them).  A partition whose
+    EVERY copy is dead is left as-is (unrecoverable: routed lanes park).
+    The epoch bumps iff anything changed."""
+    copies = np.asarray(table.copies)
+    alive = np.asarray(table.alive)
+    new = copies.copy()
+    transfers = []
+    changed = False
+    for p in range(pcfg.n_parts):
+        row = [int(c) for c in copies[p] if c >= 0]
+        live_row = [c for c in row if alive[c]]
+        if live_row == row and len(live_row) >= pcfg.n_copies:
+            continue
+        if not live_row:
+            continue
+        newrow = list(live_row)
+        for step in range(1, pcfg.n_nodes):
+            if len(newrow) >= pcfg.n_copies:
+                break
+            c = (p + step) % pcfg.n_nodes
+            if alive[c] and c not in newrow:
+                transfers.append((p, newrow[0], c))
+                newrow.append(c)
+        if newrow == row:
+            continue
+        new[p, :] = newrow + [-1] * (copies.shape[1] - len(newrow))
+        changed = True
+    if not changed:
+        return table, []
+    return PlacementTable(table.epoch + 1, jnp.asarray(new, jnp.int32),
+                          table.alive), transfers
+
+
+# ---------------------------------------------------------------------------
+# Data movement: re-replication streaming + transactional migration
+# ---------------------------------------------------------------------------
+def _ds_for(cfg):
+    from repro.core.datastructs import btree as bt
+    from repro.core.datastructs import hashtable as ht
+    if isinstance(cfg, ht.HashTableConfig):
+        return ht, "hash"
+    if isinstance(cfg, bt.BTreeConfig):
+        return bt, "btree"
+    raise TypeError(f"unknown data-structure config {type(cfg).__name__}")
+
+
+def _read_region_images(t, state, layout, dest_node, puller, offsets, length,
+                        nic=None):
+    """One-sided bulk read: ``puller`` reads ``len(offsets)`` images of
+    ``length`` words each from ``dest_node``.  Returns (images np, stats)."""
+    B = offsets.shape[0]
+    n_local = t.n_local
+    dest = jnp.full((n_local, B), dest_node, jnp.int32)
+    off = jnp.broadcast_to(offsets[None].astype(jnp.uint32), (n_local, B))
+    en = jnp.broadcast_to((t.node_ids() == puller)[:, None], (n_local, B))
+    buf, _, stats = osd.remote_read(t, state["arena"], dest, off,
+                                    length=length, enabled=en, nic=nic)
+    return np.asarray(jax.device_get(buf[puller])), stats
+
+
+def _enumerate_hash(cfg, layout, images, part):
+    """Clean, in-partition records from a full slot sweep (np host-side).
+    Returns dict of np arrays (key_lo, key_hi, version, value, locked)."""
+    from repro.core.datastructs import hashtable as ht
+    klo = images[:, sl.KEY_LO]
+    khi = images[:, sl.KEY_HI]
+    ver = images[:, sl.VERSION]
+    lock = images[:, sl.LOCK]
+    present = klo != np.uint32(sl.EMPTY_KEY)
+    in_part = np.asarray(ht.part_of(cfg, jnp.asarray(klo), jnp.asarray(khi))
+                         ) == part
+    sel = present & in_part
+    return dict(key_lo=klo, key_hi=khi, version=ver,
+                value=images[:, sl.VALUE0:], lock=lock, sel=sel,
+                clean=sel & (ver % 2 == 0))
+
+
+def rereplicate(t: Transport, state, cfg, layout, pcfg: PlacementConfig,
+                transfers, *, nic=None):
+    """Execute ``repair_plan`` transfers: for each (part, src, dst), the new
+    backup ``dst`` pulls the partition's records from the surviving copy
+    ``src`` with one-sided reads, then installs them through the existing
+    backup classes (OP_BACKUP_WRITE byte-equal images for the hash table,
+    OP_BT_BACKUP logical upserts for the btree).
+
+    Install the repaired table (``install_table``) BEFORE streaming: new
+    commits then already fan out to ``dst``, and any record committed while
+    the stream is in flight is (re)installed by its own commit's backup
+    class — the stream only has to carry the pre-failure state.  Locked or
+    mid-commit (odd-version) records are skipped for the same reason.
+
+    Returns (state, WireStats) — the stats are the re-replication bytes the
+    membership benchmark reports."""
+    ds, kind = _ds_for(cfg)
+    handler = ds.make_rpc_handler(cfg, layout)
+    total = WireStats.zero()
+    for part, src, dst in transfers:
+        part, src, dst = int(part), int(src), int(dst)
+        if kind == "hash":
+            offs = jnp.asarray(
+                [int(ds.slot_idx_offset(layout, jnp.uint32(i)))
+                 for i in range(cfg.n_slots)], jnp.uint32)
+            images, s = _read_region_images(t, state, layout, src, dst, offs,
+                                            sl.SLOT_WORDS, nic=nic)
+            total = total + s
+            e = _enumerate_hash(cfg, layout, images, part)
+            recs = ds.make_record(
+                W.OP_BACKUP_WRITE, jnp.asarray(e["key_lo"]),
+                jnp.asarray(e["key_hi"]), aux=jnp.asarray(e["version"]),
+                value=jnp.asarray(e["value"]))
+            live = jnp.asarray(e["clean"])
+        else:
+            base = (layout["leaves"].base if part == src
+                    else layout["bleaves"].base)
+            offs = jnp.asarray([base + i * cfg.leaf_words
+                                for i in range(cfg.n_leaves)], jnp.uint32)
+            images, s = _read_region_images(t, state, layout, src, dst, offs,
+                                            cfg.leaf_words, nic=nic)
+            total = total + s
+            p = jax.device_get(ds.parse_leaf(cfg, jnp.asarray(images)))
+            lo, hi = (int(np.asarray(x)) for x in
+                      ds.partition_bounds(cfg, part))
+            stable = (p["version"] % 2 == 0) & (p["lock"] == 0)
+            sel = (p["live"] & stable[:, None]
+                   & (p["keys"] >= lo) & (p["keys"] <= hi))
+            keys = p["keys"].reshape(-1)
+            vals = p["values"].reshape(-1, sl.VALUE_WORDS)
+            recs = ds.make_record(W.OP_BT_BACKUP, jnp.asarray(keys),
+                                  jnp.zeros_like(jnp.asarray(keys)),
+                                  value=jnp.asarray(vals))
+            live = jnp.asarray(sel.reshape(-1))
+        B = recs.shape[0]
+        n_local = t.n_local
+        dest = jnp.full((n_local, B), dst, jnp.int32)
+        recs_b = jnp.broadcast_to(recs[None], (n_local, B, recs.shape[-1]))
+        en = (t.node_ids() == dst)[:, None] & live[None, :]
+        state, _, _, s2 = R.rpc_call(t, state, dest, recs_b, handler,
+                                     enabled=en, nic=nic)
+        total = total + s2
+    return state, total
+
+
+def migrate_partition(t: Transport, state, cfg, layout,
+                      pcfg: PlacementConfig, table: PlacementTable,
+                      part: int, dst: int, *, nic=None):
+    """Transactionally move partition ``part`` to new owner ``dst``
+    (source-lock -> copy -> epoch flip), riding the OCC machinery:
+
+      1. ENUMERATE  — one-sided sweep of the source's slot/leaf region.
+      2. SOURCE-LOCK — OP_LOCK / OP_BT_LOCK every record/leaf that carries
+         the partition's keys, with the migration tag.  Any in-flight client
+         transaction holds one of those locks, so the migration's lock fails
+         and the whole migration ABORTS (unlock, table unchanged) — that is
+         the no-lost-write guarantee: a migration never races a commit.
+      3. FREEZE     — install the bumped table on the SOURCE only: it stops
+         granting NEW lock-class ops for the partition (ST_WRONG_EPOCH),
+         while reads and in-flight unlocks still work.
+      4. COPY       — re-read the (now lock-stable) records and install them
+         on ``dst`` via the backup classes.
+      5. FLIP       — install the bumped table everywhere; clients that still
+         route with the old table get ST_WRONG_EPOCH and refresh.
+      6. UNLOCK     — release the migration locks at the source (abort-class,
+         installs nothing).
+
+    The new copy row is [dst] + old copies (minus dst), truncated to f+1 —
+    the old owner stays on as a backup when f >= 1, so it keeps receiving
+    the commit fan-out and stale-table reads against it stay consistent.
+
+    Returns (table', state, WireStats, migrated: bool) — table' is the input
+    table when the migration aborted (retry after the blocking transactions
+    drain)."""
+    ds, kind = _ds_for(cfg)
+    handler = ds.make_rpc_handler(cfg, layout)
+    part, dst = int(part), int(dst)
+    src = int(np.asarray(table.copies)[part, 0])
+    total = WireStats.zero()
+    if src == dst:
+        return table, state, total, True
+    n_local = t.n_local
+
+    old_row = [int(c) for c in np.asarray(table.copies)[part] if c >= 0]
+    new_row = ([dst] + [c for c in old_row if c != dst])[:pcfg.n_copies]
+    new_row += [-1] * (np.asarray(table.copies).shape[1] - len(new_row))
+    table2 = PlacementTable(table.epoch + 1,
+                            table.copies.at[part].set(
+                                jnp.asarray(new_row, jnp.int32)),
+                            table.alive)
+
+    def src_rpc(recs, live):
+        nonlocal state, total
+        B = recs.shape[0]
+        dd = jnp.full((n_local, B), src, jnp.int32)
+        rb = jnp.broadcast_to(recs[None], (n_local, B, recs.shape[-1]))
+        en = (t.node_ids() == dst)[:, None] & live[None, :]
+        state, rep, _, s = R.rpc_call(t, state, dd, rb, handler, enabled=en,
+                                      nic=nic)
+        total = total + s
+        return np.asarray(jax.device_get(rep[dst]))
+
+    # -- 1. enumerate ------------------------------------------------------
+    if kind == "hash":
+        offs = jnp.asarray([int(ds.slot_idx_offset(layout, jnp.uint32(i)))
+                            for i in range(cfg.n_slots)], jnp.uint32)
+        words = sl.SLOT_WORDS
+    else:
+        base = (layout["leaves"].base if part == src
+                else layout["bleaves"].base)
+        offs = jnp.asarray([base + i * cfg.leaf_words
+                            for i in range(cfg.n_leaves)], jnp.uint32)
+        words = cfg.leaf_words
+    images, s = _read_region_images(t, state, layout, src, dst, offs, words,
+                                    nic=nic)
+    total = total + s
+
+    # -- 2. source-lock ----------------------------------------------------
+    tag = np.uint32(MIG_TAG | part)
+    if kind == "hash":
+        e = _enumerate_hash(cfg, layout, images, part)
+        sel = e["sel"]                     # every in-partition record,
+        lock_recs = ds.make_record(        # locked/mid-commit ones included:
+            W.OP_LOCK, jnp.asarray(e["key_lo"]),      # they DETECT conflicts
+            jnp.asarray(e["key_hi"]), aux=jnp.full((len(sel),), tag))
+        lock_keys = (e["key_lo"], e["key_hi"])
+    else:
+        p = jax.device_get(ds.parse_leaf(cfg, jnp.asarray(images)))
+        lo, hi = (int(np.asarray(x)) for x in ds.partition_bounds(cfg, part))
+        in_rng = p["live"] & (p["keys"] >= lo) & (p["keys"] <= hi)
+        sel = in_rng.any(axis=1)           # leaves carrying partition keys
+        first = np.where(in_rng, p["keys"],
+                         np.uint32(0xFFFFFFFF)).min(axis=1)
+        lock_recs = ds.make_record(W.OP_BT_LOCK, jnp.asarray(first),
+                                   jnp.zeros((len(sel),), jnp.uint32),
+                                   aux=jnp.full((len(sel),), tag))
+        lock_keys = (first, np.zeros_like(first))
+    rep = src_rpc(lock_recs, jnp.asarray(sel))
+    got = sel & (rep[:, 0] == W.ST_OK)
+    lock_aux = rep[:, 1]                   # slot/header idx for the unlock
+
+    def unlock():
+        if kind == "hash":
+            recs = ds.make_record(W.OP_ABORT_UNLOCK,
+                                  jnp.full((len(got),), tag),
+                                  jnp.zeros((len(got),), jnp.uint32),
+                                  aux=jnp.asarray(lock_aux))
+        else:
+            recs = ds.make_record(W.OP_BT_ABORT, jnp.asarray(lock_keys[0]),
+                                  jnp.full((len(got),), tag),
+                                  aux=jnp.asarray(lock_aux))
+        src_rpc(recs, jnp.asarray(got))
+
+    if bool((sel & ~got).any()):
+        # an in-flight transaction holds part of the partition: abort
+        unlock()
+        return table, state, total, False
+
+    # -- 3. freeze (source learns the new epoch first) ---------------------
+    state, s = install_table(t, state, layout, pcfg, table2, handler,
+                             targets=[src], issuer=dst, nic=nic)
+    total = total + s
+
+    # -- 4. copy (records are lock-stable now) -----------------------------
+    images, s = _read_region_images(t, state, layout, src, dst, offs, words,
+                                    nic=nic)
+    total = total + s
+    B = offs.shape[0]
+    if kind == "hash":
+        e = _enumerate_hash(cfg, layout, images, part)
+        recs = ds.make_record(W.OP_BACKUP_WRITE, jnp.asarray(e["key_lo"]),
+                              jnp.asarray(e["key_hi"]),
+                              aux=jnp.asarray(e["version"]),
+                              value=jnp.asarray(e["value"]))
+        live = jnp.asarray(e["sel"] & (e["version"] % 2 == 0))
+    else:
+        p = jax.device_get(ds.parse_leaf(cfg, jnp.asarray(images)))
+        in_rng = p["live"] & (p["keys"] >= lo) & (p["keys"] <= hi)
+        keys = p["keys"].reshape(-1)
+        vals = p["values"].reshape(-1, sl.VALUE_WORDS)
+        recs = ds.make_record(W.OP_BT_BACKUP, jnp.asarray(keys),
+                              jnp.zeros_like(jnp.asarray(keys)),
+                              value=jnp.asarray(vals))
+        live = jnp.asarray(in_rng.reshape(-1))
+    Bc = recs.shape[0]
+    dd = jnp.full((n_local, Bc), dst, jnp.int32)
+    rb_ = jnp.broadcast_to(recs[None], (n_local, Bc, recs.shape[-1]))
+    en = (t.node_ids() == dst)[:, None] & live[None, :]
+    state, _, _, s = R.rpc_call(t, state, dd, rb_, handler, enabled=en,
+                                nic=nic)
+    total = total + s
+
+    # -- 5. flip everywhere -------------------------------------------------
+    state, s = install_table(t, state, layout, pcfg, table2, handler,
+                             issuer=dst, nic=nic)
+    total = total + s
+
+    # -- 6. unlock the source ----------------------------------------------
+    unlock()
+    return table2, state, total, True
+
+
+# ---------------------------------------------------------------------------
+# Read fail-over (generic over the data-structure interface)
+# ---------------------------------------------------------------------------
+def failover_lookup(t: Transport, state, cfg, layout, table: PlacementTable,
+                    key_lo, key_hi, *, ds=None,
+                    capacity: Optional[int] = None, enabled=None, nic=None):
+    """Point reads routed to each key's first LIVE copy: the one-two-sided
+    hybrid probe + RPC fallback, with the destination resolved through the
+    placement table (the ONE failover rule) instead of hash-only ring math —
+    this is what serves both the hash table and the btree's backup tree
+    after a primary dies.  Returns dict(found, value, version, node,
+    slot_idx, overflow, dead_route, wire)."""
+    if ds is None:
+        from repro.core.datastructs import hashtable as ht
+        ds = ht
+    if enabled is None:
+        enabled = jnp.ones(jnp.shape(key_lo), bool)
+    part = ds.part_of(cfg, key_lo, key_hi)
+    dest, reachable = live_dest(table, part)
+    en = enabled & reachable
+    _, off, hit = ds.lookup_start(cfg, layout, key_lo, key_hi, None)
+
+    buf, ovf1, s1 = osd.remote_read(
+        t, state["arena"], dest, off, length=ds.probe_words(cfg),
+        capacity=capacity, enabled=en, nic=nic)
+    pe = ds.probe_end(cfg, layout, buf, key_lo, key_hi, off, hit)
+    success = pe["found"] & ~ovf1 & en
+    resolved = pe["resolved"] & ~ovf1 & en
+
+    # RPC fallback at the SAME live copy (chained / stale-routed / torn lanes)
+    need = en & ~resolved
+    _, rep2, ovf2, s2 = R.rpc_call(
+        t, state, dest, ds.lookup_records(cfg, key_lo, key_hi),
+        ds.make_lookup_handler_vector(cfg, layout), capacity=capacity,
+        enabled=need, nic=nic)
+    rpc_ok = need & (rep2[..., 0] == W.ST_OK) & ~ovf2
+    value = jnp.where(rpc_ok[..., None], rep2[..., 3:], pe["value"])
+    version = jnp.where(rpc_ok, rep2[..., 2], pe["version"])
+    slot_idx = jnp.where(rpc_ok, rep2[..., 1], pe["slot_idx"])
+
+    return dict(
+        found=success | rpc_ok,
+        value=value,
+        version=version,
+        node=dest,
+        slot_idx=slot_idx,
+        overflow=need & ovf2,
+        dead_route=enabled & ~reachable,
+        wire=s1 + s2,
+    )

@@ -51,8 +51,6 @@ from typing import Callable, Optional
 
 import jax.numpy as jnp
 
-from repro.core import onesided as osd
-from repro.core import rpc as R
 from repro.core import wireproto as W
 from repro.core import slots as sl
 from repro.core.datastructs import hashtable as ht
@@ -159,18 +157,15 @@ def kill_node(alive, node):
 def failover_dest(rep: ReplicaConfig, alive, primary):
     """Route each lane to the FIRST live replica on the ring.
 
-    primary: (...,) int32.  Returns (dest, reachable) where ``reachable`` is
-    False for lanes whose every replica (primary included) is dead — those
-    lanes must be parked, not routed."""
-    primary = jnp.asarray(primary, jnp.int32)
-    dest = primary
-    reachable = alive[primary]
-    for i in range(1, rep.f + 1):
-        cand = rep.replica_of(primary, i)
-        take = ~reachable & alive[cand]
-        dest = jnp.where(take, cand, dest)
-        reachable = reachable | alive[cand]
-    return dest, reachable
+    Thin policy over the placement subsystem: the ring placement is expressed
+    as a ``PlacementTable`` (``placement.table_from_replica``) and the scan
+    itself is THE one first-live-copy rule, ``placement.live_dest`` — there
+    is no second failover implementation.  primary: (...,) int32.  Returns
+    (dest, reachable); unreachable lanes (every copy dead) carry the parked
+    sentinel dest = -1 and must not be routed."""
+    from repro.core import placement as pl
+    table = pl.table_from_replica(rep, alive)
+    return pl.live_dest(table, primary)
 
 
 def failover_lookup(t: Transport, state, key_lo, key_hi,
@@ -180,49 +175,17 @@ def failover_lookup(t: Transport, state, key_lo, key_hi,
     """Reads fail over to the backup: the one-two-sided hybrid lookup issued
     at each key's first LIVE replica instead of its (possibly dead) primary.
 
-    The bucket half of the hash is node-independent (``hashtable.home_of``),
-    so the backup copy lives in the SAME bucket of the replica's table; the
-    probe is therefore byte-for-byte the ordinary hybrid lookup, just routed
-    by ``failover_dest``.  Returns a dict with found / value / version /
-    node / slot_idx / overflow / dead_route / wire.  ``dead_route`` lanes
-    (no live replica) issue nothing and report found=False."""
-    if enabled is None:
-        enabled = jnp.ones(jnp.shape(key_lo), bool)
-    home, off, _ = ht.lookup_start(cfg, layout, key_lo, key_hi, None)
-    dest, reachable = failover_dest(rep, alive, home)
-    en = enabled & reachable
-    read_words = cfg.bucket_width * sl.SLOT_WORDS
-
-    buf, ovf1, s1 = osd.remote_read(
-        t, state["arena"], dest, off, length=read_words, capacity=capacity,
-        enabled=en, nic=nic)
-    success, value, local_idx = ht.lookup_end(cfg, buf, key_lo, key_hi)
-    success = success & ~ovf1 & en
-    _, bucket = ht.home_of(cfg, key_lo, key_hi)
-    slot_idx = bucket * jnp.uint32(cfg.bucket_width) + local_idx
-    slots_v = buf.reshape(buf.shape[:-1] + (cfg.bucket_width, sl.SLOT_WORDS))
-    version = jnp.take_along_axis(
-        slots_v[..., sl.VERSION], local_idx[..., None].astype(jnp.int32),
-        axis=-1)[..., 0]
-
-    # RPC fallback (chained / overflowed lanes) — served by the SAME replica
-    need = en & ~success
-    state, rep2, ovf2, s2 = R.rpc_call(
-        t, state, dest, ht.make_record(W.OP_LOOKUP, key_lo, key_hi),
-        ht.make_lookup_handler_vector(cfg, layout), capacity=capacity,
-        enabled=need, nic=nic)
-    rpc_ok = need & (rep2[..., 0] == W.ST_OK) & ~ovf2
-    value = jnp.where(rpc_ok[..., None], rep2[..., 3:], value)
-    version = jnp.where(rpc_ok, rep2[..., 2], version)
-    slot_idx = jnp.where(rpc_ok, rep2[..., 1], slot_idx)
-
-    return dict(
-        found=success | rpc_ok,
-        value=value,
-        version=version,
-        node=dest,
-        slot_idx=slot_idx,
-        overflow=need & ovf2,
-        dead_route=enabled & ~reachable,
-        wire=s1 + s2,
-    )
+    Thin wrapper over the generic ``placement.failover_lookup`` (which also
+    serves the btree's backup tree — the hash-only special case this module
+    used to carry is gone).  The bucket half of the hash is node-independent
+    (``hashtable.home_of``), so the backup copy lives in the SAME bucket of
+    the replica's table and the probe is byte-for-byte the ordinary hybrid
+    lookup, just routed through the table.  Returns a dict with found /
+    value / version / node / slot_idx / overflow / dead_route / wire.
+    ``dead_route`` lanes (no live replica) issue nothing, report
+    found=False."""
+    from repro.core import placement as pl
+    table = pl.table_from_replica(rep, alive)
+    return pl.failover_lookup(t, state, cfg, layout, table, key_lo, key_hi,
+                              ds=ht, capacity=capacity, enabled=enabled,
+                              nic=nic)

@@ -266,10 +266,13 @@ def _finalize_reply(s, out, all_dropped: bool = False):
     c = s["cls"]
     if c["kind"] != "rpc":
         return out
-    en = c.get("enabled")
     if all_dropped:
         no_reply = jnp.ones(c["dest"].shape, bool)
     else:
-        no_reply = s["ovf"] if en is None else (s["ovf"] | ~en)
+        # pos == cap is route_by_dest's "no live cell": capacity overflow,
+        # disabled lanes, AND enabled lanes parked by an out-of-range dest
+        # (placement's unreachable sentinel -1) — the last would otherwise
+        # read back zeros and alias ST_OK
+        no_reply = s["pos"] >= s["cap"]
     return out.at[..., 0].set(
         jnp.where(no_reply, jnp.uint32(ST_DROPPED), out[..., 0]))

@@ -39,8 +39,8 @@ from repro.core.wireproto import (  # noqa: F401  (re-export)
     OP_ABORT_UNLOCK, OP_BACKUP_WRITE, OP_BT_ABORT, OP_BT_BACKUP, OP_BT_COMMIT,
     OP_BT_DELETE, OP_BT_INSERT, OP_BT_LOCK, OP_BT_LOOKUP, OP_BT_SCAN,
     OP_COMMIT_UNLOCK, OP_DELETE, OP_INSERT, OP_LOCK, OP_LOOKUP, OP_NOP,
-    OP_READ_VERSION, OP_UPDATE, ST_BAD_OP, ST_DROPPED, ST_LOCK_FAIL,
-    ST_NOT_FOUND, ST_NO_SPACE, ST_OK)
+    OP_PL_INSTALL, OP_READ_VERSION, OP_UPDATE, ST_BAD_OP, ST_DROPPED,
+    ST_LOCK_FAIL, ST_NOT_FOUND, ST_NO_SPACE, ST_OK, ST_WRONG_EPOCH)
 
 
 @dataclasses.dataclass(frozen=True)

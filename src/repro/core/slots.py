@@ -28,11 +28,16 @@ NULL_PTR = jnp.uint32(0xFFFFFFFF)
 EMPTY_KEY = jnp.uint32(0xFFFFFFFF)   # key_lo of an empty slot
 
 
+# Built once at import (never under a trace): callers memoize closures over
+# this value (e.g. the btree handler cache), and a slot image minted inside a
+# lax.scan trace would leak that trace into every later caller.
+_EMPTY_SLOT = (jnp.zeros((SLOT_WORDS,), jnp.uint32)
+               .at[KEY_LO].set(EMPTY_KEY)
+               .at[NEXT_PTR].set(NULL_PTR))
+
+
 def make_empty_slot() -> jnp.ndarray:
-    s = jnp.zeros((SLOT_WORDS,), jnp.uint32)
-    s = s.at[KEY_LO].set(EMPTY_KEY)
-    s = s.at[NEXT_PTR].set(NULL_PTR)
-    return s
+    return _EMPTY_SLOT
 
 
 def pack_slot(key_lo, key_hi, version, lock, next_ptr, value) -> jnp.ndarray:

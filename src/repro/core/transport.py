@@ -112,6 +112,12 @@ def route_by_dest(dest, payload, n_dst: int, capacity: int, enabled=None):
     NOT consume destination capacity, so a retry round that re-enables only
     the previously-overflowed lanes can always make progress.
 
+    A dest outside [0, n_dst) is parked exactly like a disabled lane: the
+    placement layer (core/placement.py) encodes "no reachable copy" as
+    dest = -1, and a parked lane reads back ST_DROPPED — an unreachable
+    partition surfaces as retryable back-pressure, never as a wrapped-around
+    delivery to some arbitrary node.
+
     Returns:
       buf      (n_dst, capacity, W) uint32 — dest-major send buffer
       mask     (n_dst, capacity)    bool   — which cells hold live requests
@@ -122,6 +128,9 @@ def route_by_dest(dest, payload, n_dst: int, capacity: int, enabled=None):
     B = dest.shape[0]
     dest = dest.astype(jnp.int32)
     live = jnp.ones((B,), bool) if enabled is None else enabled
+    # out-of-range dests (placement's "unreachable" sentinel -1) are parked
+    live = live & (dest >= 0) & (dest < n_dst)
+    dest = jnp.clip(dest, 0, n_dst - 1)
     # rank of each lane within its destination group (stable order, live only)
     onehot = ((dest[:, None] == jnp.arange(n_dst, dtype=jnp.int32)[None, :])
               & live[:, None])
@@ -136,6 +145,48 @@ def route_by_dest(dest, payload, n_dst: int, capacity: int, enabled=None):
     mask = jnp.zeros((n_dst, capacity + 1), bool)
     mask = mask.at[dest, pos].set(live)
     return buf[:, :capacity], mask[:, :capacity], pos, overflow
+
+
+def placement_dest(copies, alive, part):
+    """Resolve a partition to its first LIVE copy under a placement table.
+
+    copies: (n_parts, K) int32 — copy list per partition, column 0 = owner,
+            -1 = no copy in that slot (core/placement.py's PlacementTable).
+    alive:  (n_nodes,) bool.
+    part:   int32, any batch shape.
+
+    Returns (dest, reachable): dest is the first copy (owner-priority order)
+    whose node is alive, or -1 when every copy is dead — which route_by_dest
+    parks, so an unreachable partition becomes ST_DROPPED back-pressure.
+    This one scan is THE failover rule: replication.failover_dest and the
+    read-side failover paths all reduce to it.
+    """
+    row = copies[part]                                   # (..., K)
+    ok = (row >= 0) & alive[jnp.clip(row, 0, alive.shape[0] - 1)]
+    idx = jnp.argmax(ok, axis=-1)                        # first live slot
+    reachable = jnp.any(ok, axis=-1)
+    dest = jnp.take_along_axis(row, idx[..., None], axis=-1)[..., 0]
+    return jnp.where(reachable, dest, -1).astype(jnp.int32), reachable
+
+
+def route_by_placement(table, part, payload, n_dst: int, capacity: int,
+                       enabled=None):
+    """route_by_dest with the destination resolved THROUGH a placement table
+    instead of supplied by static partition math.
+
+    table: anything with ``.copies`` (n_parts, K) int32 and ``.alive``
+    (n_nodes,) bool — i.e. a core/placement.py PlacementTable.  part: (B,)
+    int32 partition of each lane.  Lanes whose partition has no live copy
+    route to -1 and are parked (ST_DROPPED).
+
+    Returns (dest, reachable, buf, mask, pos, overflow) — the extra leading
+    pair lets callers thread dest into reply pickup and surface
+    ``dead_route = enabled & ~reachable``.
+    """
+    dest, reachable = placement_dest(table.copies, table.alive, part)
+    buf, mask, pos, overflow = route_by_dest(dest, payload, n_dst, capacity,
+                                             enabled)
+    return dest, reachable, buf, mask, pos, overflow
 
 
 def pick_replies(replies, dest, pos, overflow):
@@ -224,6 +275,12 @@ def wire_for(mask, req_words: int, reply_words: int, header_words: int = 1,
     the replies coming back, so `messages` counts live pairs (both ways) while
     `ops` keeps the per-request count the paper reports as IOPS.  Each
     coalesced message pays the header once; each record pays its payload.
+
+    The single header word is the immediate: it packs the (src, slot) reply
+    coordinates AND the sender's placement-table epoch (core/placement.py).
+    Epoch bumps therefore add zero bytes per record — staleness is detected
+    owner-side against the published routing region and surfaced as
+    ST_WRONG_EPOCH, so the epoch-stable wire format is unchanged.
     """
     live = jnp.sum(mask.astype(jnp.float32))
     pairs = jnp.sum(jnp.any(mask, axis=-1).astype(jnp.float32))

@@ -62,6 +62,7 @@ import jax.numpy as jnp
 
 from repro.core import hybrid as hy
 from repro.core import onesided as osd
+from repro.core import placement as pl
 from repro.core import regions as rg
 from repro.core import replication as repl
 from repro.core import roundsched as rs
@@ -83,6 +84,8 @@ class TxResult:
     aborted_lock: jnp.ndarray     # (N, B) bool — lost a lock race
     aborted_validate: jnp.ndarray  # (N, B) bool — read-set changed underfoot
     aborted_overflow: jnp.ndarray  # (N, B) bool — back-pressure / no space
+    aborted_stale: jnp.ndarray    # (N, B) bool — routed by a stale placement
+                                  # table (ST_WRONG_EPOCH): refresh + retry
     metrics: hy.HybridMetrics
     round_trips: jnp.ndarray      # scalar
 
@@ -93,19 +96,31 @@ class TxResult:
 # construction at the record level.
 # ---------------------------------------------------------------------------
 def _lock_requests(t: Transport, cfg: ht.HashTableConfig, layout, *,
-                   write_keys, write_enabled):
-    """Flatten the write set and build the OP_LOCK records (+ unique tags)."""
+                   write_keys, write_enabled, ptable=None):
+    """Flatten the write set and build the OP_LOCK records (+ unique tags).
+
+    With a ``ptable`` (placement.PlacementTable), lock-class ops route to the
+    partition OWNER — never a backup, so a lane can never fake a grant at a
+    replica: a dead owner parks the lane (dest -1 -> ST_DROPPED -> abort
+    overflow) until repair promotes a backup.  The lane stays ENABLED —
+    masking it instead would make the all-locks-held conjunction vacuously
+    true and commit an unlocked write set."""
     N, B, Wr = write_keys.shape[:3]
     wk_lo = write_keys[..., 0].reshape(N, B * Wr)
     wk_hi = write_keys[..., 1].reshape(N, B * Wr)
     en = write_enabled.reshape(N, B * Wr)
-    wnode, _, _ = ht.lookup_start(cfg, layout, wk_lo, wk_hi, None)
+    part = ht.part_of(cfg, wk_lo, wk_hi)
+    if ptable is None:
+        wnode, _, _ = ht.lookup_start(cfg, layout, wk_lo, wk_hi, None)
+    else:
+        wnode = pl.owner_dest(ptable, part)
     # unique nonzero lock tag per (node, lane)
     lane = jnp.arange(B * Wr, dtype=jnp.uint32) // jnp.uint32(max(Wr, 1))
     tag = (t.node_ids().astype(jnp.uint32)[:, None] * jnp.uint32(B)
            + lane[None, :] + jnp.uint32(1))
     recs = ht.make_record(W.OP_LOCK, wk_lo, wk_hi, aux=tag)
-    return dict(key_lo=wk_lo, key_hi=wk_hi, enabled=en, node=wnode, tag=tag), recs
+    return dict(key_lo=wk_lo, key_hi=wk_hi, enabled=en, node=wnode, tag=tag,
+                part=part), recs
 
 
 def _parse_lock_replies(lk, lrep, lovf, N, B, Wr):
@@ -122,6 +137,10 @@ def _parse_lock_replies(lk, lrep, lovf, N, B, Wr):
         lock_ver=lrep[..., 2],
         locked_values=lrep[..., 3:].reshape(N, B, Wr, sl.VALUE_WORDS),
         lock_fail=(status == W.ST_LOCK_FAIL) & en,
+        # the routing table this lane used is stale: the addressed node no
+        # longer owns the key's partition (abort cause stale_route — txloop
+        # refreshes the table and retries)
+        stale=(status == W.ST_WRONG_EPOCH) & en,
         # overflow-class outcomes: dropped by back-pressure (retryable) or
         # table full (ST_NO_SPACE, delivered) — both abort with cause overflow
         no_space=((status == W.ST_NO_SPACE) | (status == W.ST_DROPPED)
@@ -151,7 +170,7 @@ def _validate_from_bytes(read_ctx, vbuf, vovf):
 def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                      read_keys, read_enabled, cache=None,
                      use_onesided: bool = True, capacity: Optional[int] = None,
-                     nic=None):
+                     nic=None, ptable=None):
     """EXECUTE phase, read half: one-two-sided lookups of the read set.
 
     read_keys: (N, B, Rd, 2); read_enabled: (N, B, Rd) bool.
@@ -165,7 +184,7 @@ def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
     state, cache, found, rvals, rvers, rnode, rslot, rovf, m = hy.hybrid_lookup(
         t, state, rk_lo, rk_hi, cfg, layout, cache=cache,
         use_onesided=use_onesided, rpc_serial=False, capacity=capacity,
-        enabled=en, nic=nic)
+        enabled=en, nic=nic, ptable=ptable)
     return state, cache, dict(
         key_lo=rk_lo, key_hi=rk_hi, enabled=en, found=found, values=rvals,
         versions=rvers, node=rnode, slot=rslot, overflow=rovf, metrics=m)
@@ -173,14 +192,14 @@ def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
 
 def lock_write_set(t: Transport, state, cfg: ht.HashTableConfig, layout,
                    serial_h, *, write_keys, write_enabled,
-                   capacity: Optional[int] = None, nic=None):
+                   capacity: Optional[int] = None, nic=None, ptable=None):
     """EXECUTE phase, write half: LOCK + read-for-update the write set.
 
     write_keys: (N, B, Wr, 2); write_enabled: (N, B, Wr) bool.
     """
     N, B, Wr = write_keys.shape[:3]
     lk, lock_recs = _lock_requests(t, cfg, layout, write_keys=write_keys,
-                                   write_enabled=write_enabled)
+                                   write_enabled=write_enabled, ptable=ptable)
     state, lrep, lovf, s_lock = R.rpc_call(
         t, state, lk["node"], lock_recs, serial_h, capacity=capacity,
         enabled=lk["enabled"], nic=nic)
@@ -214,9 +233,27 @@ def validate_read_set(t: Transport, state, layout, read_ctx, *,
     return vctx
 
 
+def _backup_dest(lock_ctx, rep, i, ptable):
+    """Destination of backup copy ``i`` for each write item.
+
+    Without a placement table this is the ring rotation off the LOCK
+    destination (the pre-placement dataplane, bit-identical).  With one, the
+    copy list comes from the table's row for the item's PARTITION — which is
+    what keeps the commit fan-out correct after a migration or repair has
+    re-homed the partition.  A dead or absent copy slot routes to -1: the
+    transport parks the record, the lane aborts (cause overflow) and retries
+    until repair re-points the copy — never a silent under-replication."""
+    if ptable is None:
+        return rep.replica_of(lock_ctx["node"], i)
+    cand = pl.copy_nodes(ptable, lock_ctx["part"])[..., i]
+    ok = (cand >= 0) & ptable.alive[
+        jnp.clip(cand, 0, ptable.alive.shape[0] - 1)]
+    return jnp.where(ok, cand, -1).astype(jnp.int32)
+
+
 def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
                     write_values, capacity: Optional[int] = None, nic=None,
-                    rep=None):
+                    rep=None, ptable=None):
     """COMMIT / ABORT phase: lanes that hold locks either install their values
     (version += 2, unlock) or roll back.  commit_lane: (N, B) bool;
     write_values: anything reshapeable to (N, B*Wr, VALUE_WORDS).
@@ -271,7 +308,7 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
         bk_en = commit_item & lock_ctx["lock_ok"]
         for i in range(1, rep.f + 1):
             classes.append(rs.rpc_class(
-                rep.replica_of(lock_ctx["node"], i), bk_recs, serial_h,
+                _backup_dest(lock_ctx, rep, i, ptable), bk_recs, serial_h,
                 enabled=bk_en, capacity=capacity))
     state, results, s_cm = rs.fused_round(t, state, classes, nic=nic)
     overflow = results[0][1] & lock_ctx["lock_ok"]
@@ -287,7 +324,7 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
 def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
                        write_values, rctx, lctx, vctx, read_wire,
                        onesided_success, rpc_fallback, total,
-                       capacity, nic=None, rep=None):
+                       capacity, nic=None, rep=None, ptable=None):
     lane_locks_ok = jnp.all(
         (lctx["lock_ok"] | ~lctx["enabled"]).reshape(N, B, Wr), axis=-1)
     lane_valid = jnp.all(
@@ -300,7 +337,8 @@ def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
     commit_lane = lane_locks_ok & lane_valid & lane_reads_ok    # (N, B)
     state, cctx = commit_or_abort(
         t, state, serial_h, lctx, commit_lane=commit_lane,
-        write_values=write_values, capacity=capacity, nic=nic, rep=rep)
+        write_values=write_values, capacity=capacity, nic=nic, rep=rep,
+        ptable=ptable)
 
     has_writes = jnp.any(write_enabled, axis=-1)
     # commit RPCs provably never overflow (see commit_or_abort); the gate is
@@ -309,16 +347,19 @@ def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
     committed = jnp.where(has_writes, commit_lane & commit_delivered,
                           lane_valid & lane_reads_ok)
 
-    # ---------------- abort causes (priority: overflow > lock > validate) --
+    # -------- abort causes (priority: overflow > stale > lock > validate) --
     lane_ovf = (~lane_reads_ok
                 | jnp.any(lctx["no_space"].reshape(N, B, Wr), axis=-1)
                 | jnp.any(vctx["overflow"].reshape(N, B, Rd), axis=-1)
                 | jnp.any(cctx["overflow"].reshape(N, B, Wr), axis=-1))
+    lane_stale = jnp.any(lctx["stale"].reshape(N, B, Wr), axis=-1)
     lane_lock_fail = jnp.any(lctx["lock_fail"].reshape(N, B, Wr), axis=-1)
     aborted = ~committed
     aborted_overflow = aborted & lane_ovf
-    aborted_lock = aborted & ~lane_ovf & lane_lock_fail
-    aborted_validate = aborted & ~lane_ovf & ~lane_lock_fail & ~lane_valid
+    aborted_stale = aborted & ~lane_ovf & lane_stale
+    aborted_lock = aborted & ~lane_ovf & ~lane_stale & lane_lock_fail
+    aborted_validate = (aborted & ~lane_ovf & ~lane_stale & ~lane_lock_fail
+                        & ~lane_valid)
 
     wire = read_wire + lctx["wire"] + vctx["wire"] + cctx["wire"]
     metrics = hy.HybridMetrics(
@@ -337,6 +378,7 @@ def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
         aborted_lock=aborted_lock,
         aborted_validate=aborted_validate,
         aborted_overflow=aborted_overflow,
+        aborted_stale=aborted_stale,
         metrics=metrics,
         round_trips=rts,
     )
@@ -348,7 +390,7 @@ def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
 def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
                             write_keys, write_values, write_enabled,
                             read_enabled, cache, use_onesided, capacity,
-                            nic=None, rep=None):
+                            nic=None, rep=None, ptable=None):
     N, B, Rd = read_keys.shape[:3]
     Wr = write_keys.shape[2]
     serial_h = ht.make_rpc_handler(cfg, layout)
@@ -359,7 +401,7 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
     # ---- round 1: one-sided read of the read set --------------------------
     probe = hy.onesided_probe(t, state, rk_lo, rk_hi, cfg, layout, cache=cache,
                               use_onesided=use_onesided, capacity=capacity,
-                              enabled=ren, nic=nic)
+                              enabled=ren, nic=nic, ptable=ptable)
 
     # ---- round 2: read-set RPC fallback ∥ LOCK ∥ validate(one-sided hits) -
     # The fallback is independent of LOCK (different key sets, the lookup is
@@ -370,7 +412,7 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
     # keeps its own round instead, so its send-queue back-pressure policy
     # stays bit-identical to the reference's single validate round.
     lk, lock_recs = _lock_requests(t, cfg, layout, write_keys=write_keys,
-                                   write_enabled=write_enabled)
+                                   write_enabled=write_enabled, ptable=ptable)
     lookup_recs = ht.make_record(W.OP_LOOKUP, rk_lo, rk_hi)
     vector_h = ht.make_lookup_handler_vector(cfg, layout)
     classes = [
@@ -424,7 +466,7 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
         onesided_success=jnp.sum(probe["success"].astype(jnp.float32)),
         rpc_fallback=jnp.sum(probe["need_rpc"].astype(jnp.float32)),
         total=jnp.sum(ren.astype(jnp.float32)),
-        capacity=capacity, nic=nic, rep=rep)
+        capacity=capacity, nic=nic, rep=rep, ptable=ptable)
     return state, cache, res
 
 
@@ -432,7 +474,7 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                      read_keys, write_keys, write_values, write_enabled=None,
                      read_enabled=None, cache=None, use_onesided: bool = True,
                      capacity: Optional[int] = None, fused: bool = True,
-                     nic=None, rep=None):
+                     nic=None, rep=None, ptable=None):
     """Execute a batch of transactions, one per lane (single shot — aborted
     lanes report their cause and stop; see txloop.tx_loop for bounded retry).
 
@@ -455,6 +497,14 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                   classes (zero additional exchange rounds; only the commit
                   round's (src, dst) fan-out widens).  rep=None and f=0 are
                   bit-identical to the unreplicated dataplane.
+    ptable:       optional repro.core.placement.PlacementTable — ALL routing
+                  (read probes, lock-class ops, commit backup fan-out) goes
+                  through the epoch-stamped table instead of static
+                  home/ring math.  Reads go to the first LIVE copy,
+                  lock-class ops to the OWNER only; a stale table surfaces
+                  as ``aborted_stale`` (owner-side ST_WRONG_EPOCH) for
+                  txloop to refresh-and-retry.  The identity table with all
+                  nodes up is bit-identical to ptable=None.
 
     Read/write sets are assumed disjoint per lane (read-for-update goes in the
     write set — its LOCK reply returns the current value, Fig. 3).
@@ -471,20 +521,22 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             t, state, cfg, layout, read_keys=read_keys, write_keys=write_keys,
             write_values=write_values, write_enabled=write_enabled,
             read_enabled=read_enabled, cache=cache, use_onesided=use_onesided,
-            capacity=capacity, nic=nic, rep=rep)
+            capacity=capacity, nic=nic, rep=rep, ptable=ptable)
 
     serial_h = ht.make_rpc_handler(cfg, layout)
 
     # ---------------- EXECUTE: read set (hybrid one-two-sided) -------------
     state, cache, rctx = execute_read_set(
         t, state, cfg, layout, read_keys=read_keys, read_enabled=read_enabled,
-        cache=cache, use_onesided=use_onesided, capacity=capacity, nic=nic)
+        cache=cache, use_onesided=use_onesided, capacity=capacity, nic=nic,
+        ptable=ptable)
     m = rctx["metrics"]
 
     # ---------------- EXECUTE: lock + read-for-update the write set --------
     state, lctx = lock_write_set(
         t, state, cfg, layout, serial_h, write_keys=write_keys,
-        write_enabled=write_enabled, capacity=capacity, nic=nic)
+        write_enabled=write_enabled, capacity=capacity, nic=nic,
+        ptable=ptable)
 
     # ---------------- VALIDATE: one-sided re-read of read-set versions -----
     vctx = validate_read_set(t, state, layout, rctx, capacity=capacity,
@@ -495,7 +547,7 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         write_enabled=write_enabled, write_values=write_values,
         rctx=rctx, lctx=lctx, vctx=vctx, read_wire=m.wire,
         onesided_success=m.onesided_success, rpc_fallback=m.rpc_fallback,
-        total=m.total, capacity=capacity, nic=nic, rep=rep)
+        total=m.total, capacity=capacity, nic=nic, rep=rep, ptable=ptable)
     return state, cache, res
 
 
@@ -549,24 +601,29 @@ class ScanTxResult:
     aborted_lock: jnp.ndarray     # (N, B) bool
     aborted_validate: jnp.ndarray
     aborted_overflow: jnp.ndarray
+    aborted_stale: jnp.ndarray    # (N, B) bool — stale placement table
     metrics: hy.HybridMetrics
     round_trips: jnp.ndarray      # scalar
 
 
 def _bt_lock_requests(t: Transport, cfg: bt.BTreeConfig, *, write_keys,
-                      write_enabled):
+                      write_enabled, ptable=None):
     """Flatten the btree write set and build OP_BT_LOCK records (leaf-grain
-    locks; unique nonzero tag per (node, lane) like the hash-table path)."""
+    locks; unique nonzero tag per (node, lane) like the hash-table path).
+    With a ``ptable``, lock-class ops route to the partition OWNER only
+    (see _lock_requests — same dead-owner parking, same stale-epoch
+    rejection owner-side)."""
     N, B, Wr = write_keys.shape
     wk = write_keys.reshape(N, B * Wr)
     en = write_enabled.reshape(N, B * Wr)
-    wnode = bt.home_of(cfg, wk)
+    part = bt.part_of(cfg, wk)
+    wnode = part if ptable is None else pl.owner_dest(ptable, part)
     lane = jnp.arange(B * Wr, dtype=jnp.uint32) // jnp.uint32(max(Wr, 1))
     tag = (t.node_ids().astype(jnp.uint32)[:, None] * jnp.uint32(B)
            + lane[None, :] + jnp.uint32(1))
     recs = bt.make_record(W.OP_BT_LOCK, wk, jnp.zeros_like(wk), aux=tag)
     return dict(key_lo=wk, key_hi=jnp.zeros_like(wk), enabled=en, node=wnode,
-                tag=tag), recs
+                tag=tag, part=part), recs
 
 
 def _bt_leaf_offset_of(layout, slot_idx):
@@ -577,7 +634,8 @@ def _bt_leaf_offset_of(layout, slot_idx):
 
 def _bt_commit_or_abort(t: Transport, state, serial_h, lock_ctx, *,
                         commit_lane, write_values,
-                        capacity: Optional[int] = None, nic=None, rep=None):
+                        capacity: Optional[int] = None, nic=None, rep=None,
+                        ptable=None):
     """COMMIT/ABORT for btree write sets.  Record layout: key in key_lo, the
     lock TAG in the (otherwise unused) key_hi word, the locked leaf's header
     slot in aux — the owner verifies the exact tag and installs the upsert
@@ -605,7 +663,7 @@ def _bt_commit_or_abort(t: Transport, state, serial_h, lock_ctx, *,
         bk_en = commit_item & lock_ctx["lock_ok"]
         for i in range(1, rep.f + 1):
             classes.append(rs.rpc_class(
-                rep.replica_of(lock_ctx["node"], i), bk_recs, serial_h,
+                _backup_dest(lock_ctx, rep, i, ptable), bk_recs, serial_h,
                 enabled=bk_en, capacity=capacity))
     state, results, s_cm = rs.fused_round(t, state, classes, nic=nic)
     overflow = results[0][1] & lock_ctx["lock_ok"]
@@ -643,7 +701,8 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
                           scan_lo, scan_hi, meta, write_keys=None,
                           write_values=None, write_enabled=None,
                           scan_enabled=None, capacity: Optional[int] = None,
-                          fused: bool = True, nic=None, rep=None):
+                          fused: bool = True, nic=None, rep=None,
+                          ptable=None):
     """Execute a batch of range-scan transactions over the ordered index,
     one per lane (single shot; see txloop.scan_loop for bounded retry).
 
@@ -659,7 +718,11 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
     reads (leaf-grain self-conflict aborts forever).
 
     Returns (state, ScanTxResult).  fused/nic/rep/capacity as in
-    run_transactions — fused changes ROUND COUNTS only, rep=None ≡ f=0."""
+    run_transactions — fused changes ROUND COUNTS only, rep=None ≡ f=0.
+    ptable routes the LOCK phase and commit backup fan-out through the
+    placement table (scan reads stay a primary-tree protocol planned from
+    ``meta``; stale routes abort ``aborted_stale`` for scan_loop to refresh
+    both the table AND the separator directory)."""
     N, B = scan_lo.shape
     S = cfg.max_scan_leaves
     if write_keys is None:
@@ -697,7 +760,8 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
     need = en_f & ~pos_ok
     scan_recs = bt.make_record(W.OP_BT_SCAN, pfence, jnp.zeros_like(pfence))
     lk, lock_recs = _bt_lock_requests(t, cfg, write_keys=write_keys,
-                                      write_enabled=write_enabled)
+                                      write_enabled=write_enabled,
+                                      ptable=ptable)
 
     fuse_v1 = fused and capacity is None and S > 0
     if fused:
@@ -765,7 +829,8 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
     commit_lane = lane_locks_ok & lane_valid & lane_reads_ok
     state, cctx = _bt_commit_or_abort(
         t, state, serial_h, lctx, commit_lane=commit_lane,
-        write_values=write_values, capacity=capacity, nic=nic, rep=rep)
+        write_values=write_values, capacity=capacity, nic=nic, rep=rep,
+        ptable=ptable)
 
     has_writes = jnp.any(write_enabled, axis=-1)
     commit_delivered = ~jnp.any(cctx["overflow"].reshape(N, B, Wr), axis=-1)
@@ -775,11 +840,14 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
     lane_ovf = (~lane_reads_ok
                 | jnp.any(lctx["no_space"].reshape(N, B, Wr), axis=-1)
                 | jnp.any(cctx["overflow"].reshape(N, B, Wr), axis=-1))
+    lane_stale = jnp.any(lctx["stale"].reshape(N, B, Wr), axis=-1)
     lane_lock_fail = jnp.any(lctx["lock_fail"].reshape(N, B, Wr), axis=-1)
     aborted = ~committed
     aborted_overflow = aborted & lane_ovf
-    aborted_lock = aborted & ~lane_ovf & lane_lock_fail
-    aborted_validate = aborted & ~lane_ovf & ~lane_lock_fail & ~lane_valid
+    aborted_stale = aborted & ~lane_ovf & lane_stale
+    aborted_lock = aborted & ~lane_ovf & ~lane_stale & lane_lock_fail
+    aborted_validate = (aborted & ~lane_ovf & ~lane_stale & ~lane_lock_fail
+                        & ~lane_valid)
 
     # ---- scan payload: records of validated leaves inside [lo, hi] --------
     keys = p["keys"].reshape(N, B, S, cfg.leaf_width)
@@ -803,5 +871,5 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
         scan_complete=complete, truncated=truncated,
         locked_values=lctx["locked_values"],
         aborted_lock=aborted_lock, aborted_validate=aborted_validate,
-        aborted_overflow=aborted_overflow,
+        aborted_overflow=aborted_overflow, aborted_stale=aborted_stale,
         metrics=metrics, round_trips=rts)

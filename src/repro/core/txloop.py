@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import hybrid as hy
+from repro.core import placement as pl
 from repro.core import slots as sl
 from repro.core import tx as txm
 from repro.core.datastructs import hashtable as ht
@@ -52,6 +53,7 @@ class TxLoopResult:
     round_abort_lock: jnp.ndarray     # aborts by cause, per round
     round_abort_validate: jnp.ndarray
     round_abort_overflow: jnp.ndarray
+    round_abort_stale: jnp.ndarray    # stale placement routes, per round
     metrics: hy.HybridMetrics         # totals across all rounds
     round_trips: jnp.ndarray          # scalar
 
@@ -66,7 +68,7 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             read_keys, write_keys, write_values, read_enabled=None,
             write_enabled=None, cache=None, use_onesided: bool = True,
             capacity: Optional[int] = None, max_rounds: int = 4, key=None,
-            fused: bool = True, nic=None, rep=None):
+            fused: bool = True, nic=None, rep=None, ptable=None, pcfg=None):
     """Run a batch of transactions to convergence (bounded by max_rounds).
 
     Arguments mirror tx.run_transactions; additionally:
@@ -84,6 +86,15 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                   (backup writes fused into the commit round, zero extra
                   exchange rounds); a backup write dropped by back-pressure
                   aborts its lane (cause: overflow), which THIS loop retries.
+      ptable/pcfg: optional placement.PlacementTable + PlacementConfig —
+                  every round routes through the table, and a retry round
+                  entered with stale-route aborts (``aborted_stale``, i.e.
+                  some owner answered ST_WRONG_EPOCH) first REFRESHES the
+                  table with one one-sided read of the coordinator's routing
+                  region, mirroring scan_loop's separator-directory refresh.
+                  Epoch-stable rounds never refresh — the read is
+                  enabled-gated off, so the steady-state round-trip schedule
+                  is EXACTLY the pre-placement one (bench-gated).
 
     Returns (state, cache, TxLoopResult).
     """
@@ -94,10 +105,14 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         write_enabled = jnp.ones(write_keys.shape[:3], bool)
     if key is None:
         key = jax.random.PRNGKey(0x5707)
+    use_pl = ptable is not None
+    if use_pl and pcfg is None:
+        raise ValueError("tx_loop: ptable requires pcfg (PlacementConfig)")
     ident = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None], (N, B))
 
     def body(carry, rnd):
-        state, cache, done, commit_round, rfound, rvals, key = carry
+        state, cache, ptab, stale_in, done, commit_round, rfound, rvals, \
+            key = carry
         key, sub = jax.random.split(key)
         perm = jax.vmap(lambda k: jax.random.permutation(k, B))(
             jax.random.split(sub, N)).astype(jnp.int32)
@@ -107,6 +122,21 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         p = lambda x: _perm_lanes(x, perm)
         u = lambda x: _perm_lanes(x, inv)
         act_p = p(active)
+
+        # a retry round entered with stale-route aborts refreshes the cached
+        # placement table first (one one-sided read of the coordinator's
+        # routing region); epoch-stable rounds gate the read OFF — zero wire,
+        # zero round trips — so the fast-path schedule stays untouched
+        s_ref = hy.WireStats.zero()
+        if use_pl:
+            want = (rnd > 0) & stale_in
+            ptab_new, s_r = pl.refresh_table(t, state, layout, pcfg, ptab,
+                                             enabled=want, nic=nic)
+            ptab = jax.tree.map(
+                lambda new, old: jnp.where(want, new, old), ptab_new, ptab)
+            s_ref = jax.tree.map(
+                lambda x: jnp.where(want, x, jnp.zeros_like(x)), s_r)
+
         state, cache, res = txm.run_transactions(
             t, state, cfg, layout,
             read_keys=p(read_keys), write_keys=p(write_keys),
@@ -114,7 +144,8 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             read_enabled=p(read_enabled) & act_p[..., None],
             write_enabled=p(write_enabled) & act_p[..., None],
             cache=cache, use_onesided=use_onesided, capacity=capacity,
-            fused=fused, nic=nic, rep=rep)
+            fused=fused, nic=nic, rep=rep,
+            ptable=ptab if use_pl else None)
         # fully-masked (parked) lanes report committed=True — gate on active
         newly = u(res.committed) & active
         done = done | newly
@@ -122,6 +153,8 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         rfound = jnp.where(active[..., None], u(res.read_found), rfound)
         rvals = jnp.where(active[..., None, None], u(res.read_values), rvals)
         count = lambda x: jnp.sum(x.astype(jnp.int32))
+        stale_out = jnp.any(u(res.aborted_stale) & active)
+        m = res.metrics
         stats = dict(
             committed=count(newly),
             attempts=count(active),
@@ -129,20 +162,25 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             abort_lock=count(u(res.aborted_lock) & active),
             abort_validate=count(u(res.aborted_validate) & active),
             abort_overflow=count(u(res.aborted_overflow) & active),
-            metrics=res.metrics,
-            round_trips=res.round_trips,
+            abort_stale=count(u(res.aborted_stale) & active),
+            metrics=hy.HybridMetrics(m.onesided_success, m.rpc_fallback,
+                                     m.total, m.wire + s_ref),
+            round_trips=res.round_trips + s_ref.round_trips,
         )
-        return (state, cache, done, commit_round, rfound, rvals, key), stats
+        return (state, cache, ptab, stale_out, done, commit_round, rfound,
+                rvals, key), stats
 
     init = (
         state, cache,
+        ptable if use_pl else jnp.zeros(()),
+        jnp.zeros((), bool),
         jnp.zeros((N, B), bool),
         jnp.full((N, B), -1, jnp.int32),
         jnp.zeros(read_enabled.shape, bool),
         jnp.zeros(read_enabled.shape + (sl.VALUE_WORDS,), jnp.uint32),
         key,
     )
-    (state, cache, done, commit_round, rfound, rvals, _), ys = lax.scan(
+    (state, cache, _, _, done, commit_round, rfound, rvals, _), ys = lax.scan(
         body, init, jnp.arange(max_rounds))
 
     metrics = jax.tree.map(lambda x: jnp.sum(x, axis=0), ys["metrics"])
@@ -157,6 +195,7 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         round_abort_lock=ys["abort_lock"],
         round_abort_validate=ys["abort_validate"],
         round_abort_overflow=ys["abort_overflow"],
+        round_abort_stale=ys["abort_stale"],
         metrics=metrics,
         round_trips=jnp.sum(ys["round_trips"]),
     )
@@ -191,6 +230,7 @@ class ScanLoopResult:
     round_abort_lock: jnp.ndarray
     round_abort_validate: jnp.ndarray
     round_abort_overflow: jnp.ndarray
+    round_abort_stale: jnp.ndarray    # stale placement routes, per round
     metrics: hy.HybridMetrics         # totals across rounds (+ meta refresh)
     round_trips: jnp.ndarray          # scalar
 
@@ -199,7 +239,8 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
               meta=None, write_keys=None, write_values=None,
               scan_enabled=None, write_enabled=None,
               capacity: Optional[int] = None, max_rounds: int = 4, key=None,
-              fused: bool = True, nic=None, rep=None, refresh: bool = True):
+              fused: bool = True, nic=None, rep=None, refresh: bool = True,
+              ptable=None, pcfg=None):
     """Run a batch of range-scan transactions to convergence.
 
     Arguments mirror tx.run_scan_transactions (cfg is a btree.BTreeConfig);
@@ -209,6 +250,11 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
       refresh:    refresh the directory before every RETRY round (default) —
                   stale-plan aborts then converge; refresh=False replays the
                   initial meta (useful to demonstrate the livelock it avoids).
+      ptable/pcfg: optional placement table + config — lock-class routing
+                  goes through the table; a retry round entered with
+                  stale-route aborts refreshes it first (enabled-gated read,
+                  zero wire on epoch-stable rounds — same idiom as the
+                  separator-directory refresh above).
     Returns (state, meta, ScanLoopResult)."""
     from repro.core.datastructs import btree as bt
 
@@ -224,6 +270,9 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
         write_enabled = jnp.ones((N, B, Wr), bool)
     if key is None:
         key = jax.random.PRNGKey(0x5C0A)
+    use_pl = ptable is not None
+    if use_pl and pcfg is None:
+        raise ValueError("scan_loop: ptable requires pcfg (PlacementConfig)")
     init_wire = hy.WireStats.zero()
     if meta is None:
         meta, s0 = bt.refresh_meta(t, state, cfg, layout, nic=nic)
@@ -231,8 +280,8 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
     ident = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None], (N, B))
 
     def body(carry, rnd):
-        (state, meta, done, trunc, commit_round, skeys, svals, smask,
-         key) = carry
+        (state, meta, ptab, stale_in, done, trunc, commit_round, skeys, svals,
+         smask, key) = carry
         key, sub = jax.random.split(key)
         perm = jax.vmap(lambda k: jax.random.permutation(k, B))(
             jax.random.split(sub, N)).astype(jnp.int32)
@@ -251,6 +300,16 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
                 lambda new, old: jnp.where(use, new, old), meta_new, meta)
             s_ref = jax.tree.map(
                 lambda x: jnp.where(use, x, jnp.zeros_like(x)), s_r)
+        if use_pl:
+            # placement-table refresh, gated exactly like tx_loop's: only a
+            # retry round entered with stale-route aborts pays the read
+            want = (rnd > 0) & stale_in
+            ptab_new, s_p = pl.refresh_table(t, state, layout, pcfg, ptab,
+                                             enabled=want, nic=nic)
+            ptab = jax.tree.map(
+                lambda new, old: jnp.where(want, new, old), ptab_new, ptab)
+            s_ref = s_ref + jax.tree.map(
+                lambda x: jnp.where(want, x, jnp.zeros_like(x)), s_p)
 
         state, res = txm.run_scan_transactions(
             t, state, cfg, layout,
@@ -258,7 +317,8 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
             write_keys=p(write_keys), write_values=p(write_values),
             scan_enabled=p(scan_enabled) & act_p,
             write_enabled=p(write_enabled) & act_p[..., None],
-            capacity=capacity, fused=fused, nic=nic, rep=rep)
+            capacity=capacity, fused=fused, nic=nic, rep=rep,
+            ptable=ptab if use_pl else None)
         newly = u(res.committed) & active
         newly_trunc = u(res.truncated) & active
         done = done | newly | newly_trunc           # truncation cannot retry
@@ -269,6 +329,7 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
         smask = jnp.where(upd, u(res.scan_mask), smask)
         svals = jnp.where(upd[..., None], u(res.scan_values), svals)
         count = lambda x: jnp.sum(x.astype(jnp.int32))
+        stale_out = jnp.any(u(res.aborted_stale) & active)
         m = res.metrics
         stats = dict(
             committed=count(newly),
@@ -277,15 +338,18 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
             abort_lock=count(u(res.aborted_lock) & active),
             abort_validate=count(u(res.aborted_validate) & active),
             abort_overflow=count(u(res.aborted_overflow) & active),
+            abort_stale=count(u(res.aborted_stale) & active),
             metrics=hy.HybridMetrics(m.onesided_success, m.rpc_fallback,
                                      m.total, m.wire + s_ref),
             round_trips=res.round_trips + s_ref.round_trips,
         )
-        return (state, meta, done, trunc, commit_round, skeys, svals, smask,
-                key), stats
+        return (state, meta, ptab, stale_out, done, trunc, commit_round,
+                skeys, svals, smask, key), stats
 
     init = (
         state, meta,
+        ptable if use_pl else jnp.zeros(()),
+        jnp.zeros((), bool),
         jnp.zeros((N, B), bool),
         jnp.zeros((N, B), bool),
         jnp.full((N, B), -1, jnp.int32),
@@ -294,8 +358,8 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
         jnp.zeros((N, B, S, LW), bool),
         key,
     )
-    (state, meta, done, trunc, commit_round, skeys, svals, smask, _), ys = \
-        lax.scan(body, init, jnp.arange(max_rounds))
+    (state, meta, _, _, done, trunc, commit_round, skeys, svals, smask,
+     _), ys = lax.scan(body, init, jnp.arange(max_rounds))
 
     metrics = jax.tree.map(lambda x: jnp.sum(x, axis=0), ys["metrics"])
     metrics = hy.HybridMetrics(metrics.onesided_success, metrics.rpc_fallback,
@@ -311,6 +375,7 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
         round_abort_lock=ys["abort_lock"],
         round_abort_validate=ys["abort_validate"],
         round_abort_overflow=ys["abort_overflow"],
+        round_abort_stale=ys["abort_stale"],
         metrics=metrics,
         round_trips=jnp.sum(ys["round_trips"]) + init_wire.round_trips,
     )

@@ -1,0 +1,524 @@
+"""Placement subsystem: epoch-stamped routing tables, the region codec,
+stale-route abort + refresh convergence, membership transitions with
+re-replication, and transactional partition migration (no lost writes)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import placement as pl
+from repro.core import replication as repl
+from repro.core import rpc as R
+from repro.core import slots as sl
+from repro.core import wireproto as W
+from repro.core.datastructs import btree as bt
+from repro.core.datastructs import hashtable as ht
+from repro.core.transport import SimTransport
+from repro.core.txloop import scan_loop, tx_loop
+from repro.testing.workloads import value_for
+
+N = 4
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return ht.HashTableConfig(n_nodes=N, n_buckets=16, bucket_width=2,
+                              n_overflow=64, max_chain=10)
+
+
+@pytest.fixture(scope="module")
+def layout(cfg):
+    return ht.build_layout(cfg)
+
+
+def keys_in_part(cfg, part, n, seed=0):
+    """n distinct uint32 keys (key_hi = 0) hashing to partition `part`."""
+    rng = np.random.RandomState(seed)
+    out = []
+    while len(out) < n:
+        cand = rng.randint(0, 2**31, 4 * n).astype(np.uint32)
+        p = np.asarray(ht.part_of(cfg, jnp.asarray(cand),
+                                  jnp.zeros_like(jnp.asarray(cand))))
+        out += [int(k) for k in cand[p == part]]
+    return np.unique(np.asarray(out[:n], np.uint32))[:n]
+
+
+def slots_of(state, cfg, layout, node):
+    srg = layout["slots"]
+    arena = np.asarray(state["arena"])
+    return arena[node, srg.base:srg.base
+                 + cfg.n_slots * sl.SLOT_WORDS].reshape(-1, sl.SLOT_WORDS)
+
+
+def find_copy(state, cfg, layout, node, klo, khi=0):
+    slots = slots_of(state, cfg, layout, node)
+    m = (slots[:, sl.KEY_LO] == klo) & (slots[:, sl.KEY_HI] == khi)
+    assert m.sum() <= 1, f"duplicate copies of one key on node {node}"
+    return slots[m.argmax()] if m.any() else None
+
+
+# ---------------------------------------------------------------------------
+# The identity table IS the static partition math (bit-identity)
+# ---------------------------------------------------------------------------
+def test_identity_table_bit_identical_tx(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    rng = np.random.RandomState(7)
+    B, Rd, Wr = 6, 2, 2
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B, Rd + Wr)), jnp.uint32)
+    khi = jnp.zeros_like(klo)
+    rk = jnp.stack([klo[..., :Rd], khi[..., :Rd]], -1)
+    wk = jnp.stack([klo[..., Rd:], khi[..., Rd:]], -1)
+    wv = value_for(klo[..., Rd:])
+    pcfg = pl.PlacementConfig(N, f=1)
+    rep = repl.ReplicaConfig(N, 1)
+    kw = dict(read_keys=rk, write_keys=wk, write_values=wv, max_rounds=4,
+              rep=rep)
+    s0, _, r0 = tx_loop(t, state, cfg, layout, **kw)
+    s1, _, r1 = tx_loop(t, state, cfg, layout, ptable=pl.initial_table(pcfg),
+                        pcfg=pcfg, **kw)
+    np.testing.assert_array_equal(np.asarray(s0["arena"]),
+                                  np.asarray(s1["arena"]))
+    np.testing.assert_array_equal(np.asarray(r0.committed),
+                                  np.asarray(r1.committed))
+    assert float(r0.round_trips) == float(r1.round_trips), \
+        "epoch-stable routing must not add a single exchange round"
+    assert int(np.asarray(r1.round_abort_stale).sum()) == 0
+
+
+def test_identity_table_bit_identical_scan():
+    cfg = bt.BTreeConfig(n_nodes=N, n_leaves=32, leaf_width=4)
+    layout = bt.build_layout(cfg)
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    rng = np.random.RandomState(11)
+    keys = jnp.asarray(rng.randint(0, 2**30, (N, 6)), jnp.uint32)
+    h = bt.make_rpc_handler(cfg, layout)
+    state, rep_, _, _ = R.rpc_call(
+        t, state, bt.home_of(cfg, keys),
+        bt.make_record(W.OP_BT_INSERT, keys, jnp.zeros_like(keys),
+                       value=value_for(keys)), h)
+    assert (np.asarray(rep_[..., 0]) == W.ST_OK).all()
+    B = 6
+    lo = jnp.asarray(rng.randint(0, 2**30, (N, B)), jnp.uint32)
+    hi = lo + jnp.uint32(1 << 20)
+    wk = jnp.asarray(rng.randint(0, 2**30, (N, B, 1)), jnp.uint32)
+    pcfg = pl.PlacementConfig(N)
+    kw = dict(scan_lo=lo, scan_hi=hi, write_keys=wk,
+              write_values=value_for(wk), max_rounds=3)
+    s0, _, r0 = scan_loop(t, state, cfg, layout, **kw)
+    s1, _, r1 = scan_loop(t, state, cfg, layout,
+                          ptable=pl.initial_table(pcfg), pcfg=pcfg, **kw)
+    np.testing.assert_array_equal(np.asarray(s0["arena"]),
+                                  np.asarray(s1["arena"]))
+    np.testing.assert_array_equal(np.asarray(r0.committed),
+                                  np.asarray(r1.committed))
+    assert float(r0.round_trips) == float(r1.round_trips)
+    assert int(np.asarray(r1.round_abort_stale).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# Region codec + wire publication round-trip
+# ---------------------------------------------------------------------------
+def test_region_codec_roundtrip():
+    pcfg = pl.PlacementConfig(N, f=1)
+    table = pl.initial_table(pcfg)
+    table = pl.kill_node(pcfg, table, 3)
+    table = pl.PlacementTable(
+        table.epoch, table.copies.at[2].set(jnp.asarray([1, 0, -1, -1],
+                                                        jnp.int32)),
+        table.alive)
+    dec = pl.decode_region(pcfg, pl.region_image(pcfg, table))
+    assert int(dec.epoch) == int(table.epoch) == 1
+    np.testing.assert_array_equal(np.asarray(dec.copies),
+                                  np.asarray(table.copies))
+    np.testing.assert_array_equal(np.asarray(dec.alive),
+                                  np.asarray(table.alive))
+
+
+def test_install_then_refresh_round_trips_the_table(cfg, layout):
+    """install_table broadcasts OP_PL_INSTALL records; refresh_table reads the
+    published region back with ONE one-sided read and decodes the same
+    table.  A disabled refresh issues zero wire."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    pcfg = pl.PlacementConfig(N, f=1)
+    table = pl.kill_node(pcfg, pl.initial_table(pcfg), 1)
+    table, _ = pl.repair_plan(pcfg, table)
+    h = ht.make_rpc_handler(cfg, layout)
+    state, _ = pl.install_table(t, state, layout, pcfg, table, h)
+    got, stats = pl.refresh_table(t, state, layout, pcfg,
+                                  pl.initial_table(pcfg))
+    assert int(got.epoch) == int(table.epoch)
+    np.testing.assert_array_equal(np.asarray(got.copies),
+                                  np.asarray(table.copies))
+    np.testing.assert_array_equal(np.asarray(got.alive),
+                                  np.asarray(table.alive))
+    assert float(stats.round_trips) == 1.0, \
+        "a table refresh is ONE one-sided read"
+    _, s_off = pl.refresh_table(t, state, layout, pcfg, table,
+                                enabled=jnp.asarray(False))
+    assert float(s_off.ops) == 0.0 and float(s_off.round_trips) == 0.0, \
+        "a gated-off refresh must cost zero wire"
+
+
+def test_routing_queries_and_parking():
+    pcfg = pl.PlacementConfig(N, f=1)
+    table = pl.initial_table(pcfg)
+    assert int(pl.owner_of(table, 2)) == 2
+    np.testing.assert_array_equal(np.asarray(pl.copy_nodes(table, 1))[:2],
+                                  [1, 2])
+    table = pl.kill_node(pcfg, table, 1)
+    # dead owner: writes park (-1), reads fail over to the live backup
+    assert int(pl.owner_dest(table, 1)) == -1
+    d, ok = pl.live_dest(table, 1)
+    assert int(d) == 2 and bool(ok)
+    # every copy dead: both park, and the lane reports unreachable
+    table = pl.kill_node(pcfg, table, 2)
+    d, ok = pl.live_dest(table, 1)
+    assert int(d) == -1 and not bool(ok)
+
+
+# ---------------------------------------------------------------------------
+# Stale-route abort -> refresh -> converge
+# ---------------------------------------------------------------------------
+def test_stale_route_aborts_then_refresh_converges(cfg, layout):
+    """A client whose cached table predates a migration routes lock-class ops
+    to the OLD owner, gets ST_WRONG_EPOCH (cause stale_route, no partial
+    state), refreshes its table on the retry round, and commits at the new
+    owner — the separator-directory retry idiom applied to routing."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    pcfg = pl.PlacementConfig(N)
+    fresh = pl.PlacementTable(
+        jnp.uint32(1),
+        pl.initial_table(pcfg).copies.at[0, 0].set(2),
+        jnp.ones((N,), bool))
+    state = pl.install_local(state, layout, pcfg, fresh)
+
+    B = 4
+    wk0 = keys_in_part(cfg, 0, N * B, seed=3).reshape(N, B, 1)
+    wk = jnp.stack([jnp.asarray(wk0, jnp.uint32),
+                    jnp.zeros((N, B, 1), jnp.uint32)], -1)
+    wv = value_for(wk[..., 0])
+    stale = pl.initial_table(pcfg)           # epoch 0: still says owner 0
+    state, _, res = tx_loop(
+        t, state, cfg, layout, read_keys=jnp.zeros((N, B, 0, 2), jnp.uint32),
+        write_keys=wk, write_values=wv, max_rounds=4, ptable=stale, pcfg=pcfg)
+    r = np.asarray
+    assert int(r(res.round_abort_stale)[0]) == N * B, \
+        "round 0 must abort every lane with cause stale_route"
+    assert int(r(res.round_abort_stale)[1:].sum()) == 0, \
+        "one refresh must clear the staleness"
+    assert bool(r(res.committed).all()), "retry must converge at the new owner"
+    for k in wk0.reshape(-1):
+        assert find_copy(state, cfg, layout, 2, k) is not None, \
+            "committed writes must land at the NEW owner"
+        assert find_copy(state, cfg, layout, 0, k) is None, \
+            "the old owner must reject (and not install) stale-routed locks"
+
+
+# ---------------------------------------------------------------------------
+# Membership: kill -> repair_plan -> rereplicate restores f+1 copies
+# ---------------------------------------------------------------------------
+def test_kill_repair_rereplicate_restores_copies_hash(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    pcfg = pl.PlacementConfig(N, f=1)
+    rep = repl.ReplicaConfig(N, 1)
+    table = pl.initial_table(pcfg)
+    rng = np.random.RandomState(23)
+    B = 6
+    klo = jnp.asarray(rng.randint(0, 2**31, (N, B, 1)), jnp.uint32)
+    wk = jnp.stack([klo, jnp.zeros_like(klo)], -1)
+    wv = value_for(klo)
+    state, _, res = tx_loop(
+        t, state, cfg, layout, read_keys=jnp.zeros((N, B, 0, 2), jnp.uint32),
+        write_keys=wk, write_values=wv, max_rounds=4, rep=rep, ptable=table,
+        pcfg=pcfg)
+    assert bool(np.asarray(res.committed).all())
+
+    dead = 1
+    table = pl.kill_node(pcfg, table, dead)
+    table2, transfers = pl.repair_plan(pcfg, table)
+    assert int(table2.epoch) == int(table.epoch) + 1
+    cps = np.asarray(table2.copies)
+    alive = np.asarray(table2.alive)
+    for p in range(N):
+        row = [c for c in cps[p] if c >= 0]
+        assert len(row) == pcfg.n_copies and all(alive[c] for c in row), \
+            "repair must refill every partition with live copies"
+    assert cps[dead, 0] != dead, "the dead owner must be demoted"
+    assert len(transfers) > 0
+
+    # scorch the dead arena; nothing below may read it
+    state = dict(state, arena=state["arena"].at[dead].set(jnp.uint32(0xDEAD)))
+    state = pl.install_local(state, layout, pcfg, table2,
+                             nodes=[n for n in range(N) if n != dead])
+    state, stats = pl.rereplicate(t, state, cfg, layout, pcfg, transfers)
+    assert float(stats.total_bytes) > 0.0
+
+    # every committed key now has f+1 LIVE byte-equal copies per the table
+    keep = [j for j in range(sl.SLOT_WORDS) if j != sl.NEXT_PTR]
+    part = np.asarray(ht.part_of(cfg, klo[..., 0],
+                                 jnp.zeros_like(klo[..., 0])))
+    for k, p in zip(np.asarray(klo[..., 0]).reshape(-1), part.reshape(-1)):
+        row = [int(c) for c in cps[p] if c >= 0]
+        imgs = [find_copy(state, cfg, layout, c, k) for c in row]
+        for c, img in zip(row, imgs):
+            assert img is not None, \
+                f"key {k} (part {p}) missing its copy on node {c}"
+            np.testing.assert_array_equal(imgs[0][keep], img[keep])
+
+
+def test_kill_repair_rereplicate_btree_logical():
+    cfg = bt.BTreeConfig(n_nodes=N, n_leaves=32, leaf_width=4)
+    layout = bt.build_layout(cfg)
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    pcfg = pl.PlacementConfig(N, f=1)
+    rep = repl.ReplicaConfig(N, 1)
+    rng = np.random.RandomState(29)
+    B = 6
+    wk = jnp.asarray(rng.randint(0, 2**32, (N, B, 1), dtype=np.uint32))
+    wv = value_for(wk)
+    # populate THROUGH the replicated scan-tx commit path (write-only lanes:
+    # a scan covering one's own write self-conflicts in validation)
+    state, _, res = scan_loop(t, state, cfg, layout, scan_lo=wk[..., 0],
+                              scan_hi=wk[..., 0],
+                              scan_enabled=jnp.zeros((N, B), bool),
+                              write_keys=wk, write_values=wv, max_rounds=10,
+                              rep=rep)
+    assert bool(np.asarray(res.committed).all())
+
+    dead = 1
+    table = pl.kill_node(pcfg, pl.initial_table(pcfg), dead)
+    table2, transfers = pl.repair_plan(pcfg, table)
+    state = pl.install_local(state, layout, pcfg, table2,
+                             nodes=[n for n in range(N) if n != dead])
+    state, stats = pl.rereplicate(t, state, cfg, layout, pcfg, transfers)
+    assert float(stats.total_bytes) > 0.0
+
+    # logical equality: every committed key is found with its value through
+    # the repaired table (dead partition served by the promoted owner's
+    # backup tree), and the NEW backup holds the dead partition's keys
+    out = pl.failover_lookup(t, state, cfg, layout, table2, wk[..., 0],
+                             jnp.zeros_like(wk[..., 0]), ds=bt)
+    assert bool(np.asarray(out["found"]).all())
+    np.testing.assert_array_equal(
+        np.asarray(out["value"]),
+        np.asarray(wv.reshape(N, B, sl.VALUE_WORDS)))
+    cps = np.asarray(table2.copies)
+    new_backup = int(cps[dead, 1])
+    assert new_backup != dead and new_backup != int(cps[dead, 0])
+    lo, hi = (int(np.asarray(x)) for x in bt.partition_bounds(cfg, dead))
+    kflat = np.asarray(wk[..., 0]).reshape(-1)
+    want = sorted(int(k) for k in kflat if lo <= int(k) <= hi)
+    arena = np.asarray(state["arena"])[new_backup]
+    bl = layout["bleaves"]
+    leaves = arena[bl.base:bl.base + cfg.n_leaves * cfg.leaf_words].reshape(
+        cfg.n_leaves, cfg.leaf_slots, sl.SLOT_WORDS)
+    got = sorted(int(k) for k in leaves[:, 1:, sl.KEY_LO].reshape(-1)
+                 if lo <= int(k) <= hi and k != 0xFFFFFFFF)
+    assert set(want) <= set(got), \
+        "re-replication must stream the dead partition to the new backup"
+
+
+# ---------------------------------------------------------------------------
+# Transactional migration: source-lock -> copy -> epoch flip
+# ---------------------------------------------------------------------------
+def test_migration_moves_partition_and_stale_clients_converge(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    pcfg = pl.PlacementConfig(N)
+    table = pl.initial_table(pcfg)
+    state = pl.install_local(state, layout, pcfg, table)
+    B = 4
+    k0 = keys_in_part(cfg, 0, N * B, seed=41).reshape(N, B, 1)
+    wk = jnp.stack([jnp.asarray(k0, jnp.uint32),
+                    jnp.zeros((N, B, 1), jnp.uint32)], -1)
+    wv = value_for(wk[..., 0])
+    state, _, res = tx_loop(
+        t, state, cfg, layout, read_keys=jnp.zeros((N, B, 0, 2), jnp.uint32),
+        write_keys=wk, write_values=wv, max_rounds=4, ptable=table, pcfg=pcfg)
+    assert bool(np.asarray(res.committed).all())
+
+    table2, state, stats, ok = pl.migrate_partition(
+        t, state, cfg, layout, pcfg, table, part=0, dst=2)
+    assert ok and int(table2.epoch) == int(table.epoch) + 1
+    assert int(pl.owner_of(table2, 0)) == 2
+    # every committed record was copied and is served at the new owner
+    out = pl.failover_lookup(t, state, cfg, layout, table2,
+                             jnp.asarray(k0[..., 0], jnp.uint32),
+                             jnp.zeros((N, B), jnp.uint32))
+    assert bool(np.asarray(out["found"]).all())
+    np.testing.assert_array_equal(np.asarray(out["value"]),
+                                  np.asarray(wv.reshape(N, B, sl.VALUE_WORDS)))
+    assert (np.asarray(out["node"]) == 2).all()
+    # no dangling migration locks anywhere
+    for n in range(N):
+        assert (slots_of(state, cfg, layout, n)[:, sl.LOCK] == 0).all()
+
+    # a stale client still converges: wrong-epoch abort, refresh, commit
+    wv2 = value_for(wk[..., 0] + jnp.uint32(5))
+    state, _, res2 = tx_loop(
+        t, state, cfg, layout, read_keys=jnp.zeros((N, B, 0, 2), jnp.uint32),
+        write_keys=wk, write_values=wv2, max_rounds=4, ptable=table,
+        pcfg=pcfg)
+    assert int(np.asarray(res2.round_abort_stale)[0]) == N * B
+    assert bool(np.asarray(res2.committed).all())
+
+
+def test_migration_aborts_cleanly_under_conflicting_lock(cfg, layout):
+    """The no-lost-write guarantee: a migration racing an in-flight client
+    lock fails its source-lock phase, releases everything it took, and leaves
+    the table unchanged — it never copies a half-committed partition."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    pcfg = pl.PlacementConfig(N)
+    table = pl.initial_table(pcfg)
+    state = pl.install_local(state, layout, pcfg, table)
+    keys = keys_in_part(cfg, 0, 4, seed=53)
+    h = ht.make_rpc_handler(cfg, layout)
+    kj = jnp.tile(jnp.asarray(keys[None], jnp.uint32), (N, 1))
+    only0 = jnp.zeros((N, 4), bool).at[0].set(True)
+    state, rep_, _, _ = R.rpc_call(
+        t, state, jnp.zeros((N, 4), jnp.int32),
+        ht.make_record(W.OP_INSERT, kj, jnp.zeros_like(kj),
+                       value=value_for(kj)), h, enabled=only0)
+    assert (np.asarray(rep_[0, :, 0]) == W.ST_OK).all()
+
+    # a client holds a lock on one key of the partition
+    tag = jnp.uint32(0x7E570001)
+    state, repl_, _, _ = R.rpc_call(
+        t, state, jnp.zeros((N, 1), jnp.int32),
+        ht.make_record(W.OP_LOCK, kj[:, :1], jnp.zeros((N, 1), jnp.uint32),
+                       aux=jnp.full((N, 1), tag)),
+        h, enabled=jnp.zeros((N, 1), bool).at[0].set(True))
+    assert int(np.asarray(repl_[0, 0, 0])) == W.ST_OK
+    lock_slot = np.asarray(repl_[0, 0, 1])
+
+    t2, state, _, ok = pl.migrate_partition(t, state, cfg, layout, pcfg,
+                                            table, part=0, dst=2)
+    assert not ok, "migration must abort while a client lock is in flight"
+    assert int(t2.epoch) == int(table.epoch), "an aborted migration flips nothing"
+    locks = slots_of(state, cfg, layout, 0)[:, sl.LOCK]
+    assert (locks == np.uint32(tag)).sum() == 1, \
+        "the client's lock survives; every migration lock is released"
+
+    # client unlocks; the retried migration goes through
+    state, _, _, _ = R.rpc_call(
+        t, state, jnp.zeros((N, 1), jnp.int32),
+        ht.make_record(W.OP_ABORT_UNLOCK, jnp.full((N, 1), tag),
+                       jnp.zeros((N, 1), jnp.uint32),
+                       aux=jnp.broadcast_to(jnp.asarray(lock_slot), (N, 1))),
+        h, enabled=jnp.zeros((N, 1), bool).at[0].set(True))
+    t3, state, _, ok = pl.migrate_partition(t, state, cfg, layout, pcfg,
+                                            table, part=0, dst=2)
+    assert ok and int(pl.owner_of(t3, 0)) == 2
+
+
+def test_migration_churn_loses_no_committed_write(cfg, layout):
+    """Property-style churn: alternate commit batches with partition
+    migrations (clients deliberately one epoch stale).  After every round the
+    union of committed writes must be readable, with its latest value,
+    through the CURRENT table."""
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    pcfg = pl.PlacementConfig(N)
+    table = pl.initial_table(pcfg)
+    state = pl.install_local(state, layout, pcfg, table)
+    rng = np.random.RandomState(67)
+    committed = {}
+    B = 4
+    stale_view = table
+    for rnd in range(3):
+        klo = rng.randint(0, 2**31, (N, B, 1)).astype(np.uint32)
+        wk = jnp.stack([jnp.asarray(klo), jnp.zeros((N, B, 1), jnp.uint32)],
+                       -1)
+        wv = value_for(jnp.asarray(klo) + jnp.uint32(rnd))
+        state, _, res = tx_loop(
+            t, state, cfg, layout,
+            read_keys=jnp.zeros((N, B, 0, 2), jnp.uint32),
+            write_keys=wk, write_values=wv, max_rounds=5, ptable=stale_view,
+            pcfg=pcfg)
+        assert bool(np.asarray(res.committed).all())
+        vals = np.asarray(wv).reshape(-1, sl.VALUE_WORDS)
+        for i, k in enumerate(klo.reshape(-1)):
+            committed[int(k)] = vals[i]
+
+        part = int(rng.randint(0, N))
+        dst = int(rng.randint(0, N))
+        table2, state, _, ok = pl.migrate_partition(
+            t, state, cfg, layout, pcfg, table, part=part, dst=dst)
+        assert ok, "no client lock is in flight between batches"
+        stale_view = table          # clients lag one epoch behind
+        table = table2
+
+        ks = np.asarray(sorted(committed), np.uint32).reshape(1, -1)
+        ks = np.tile(ks, (N, 1))
+        out = pl.failover_lookup(t, state, cfg, layout, table,
+                                 jnp.asarray(ks), jnp.zeros_like(
+                                     jnp.asarray(ks)))
+        assert bool(np.asarray(out["found"]).all()), \
+            f"round {rnd}: a committed key vanished after migration"
+        got = np.asarray(out["value"])[0]
+        want = np.stack([committed[int(k)] for k in ks[0]])
+        np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Dead-owner parking: writes park and are REPORTED, never misrouted
+# ---------------------------------------------------------------------------
+def test_dead_owner_parks_writes_until_repair(cfg, layout):
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    pcfg = pl.PlacementConfig(N, f=1)
+    table = pl.kill_node(pcfg, pl.initial_table(pcfg), 1)
+    state = pl.install_local(state, layout, pcfg, table)
+    B = 4
+    k1 = keys_in_part(cfg, 1, B, seed=71)        # owned by the dead node
+    k2 = keys_in_part(cfg, 2, B, seed=72)        # healthy partition
+    klo = jnp.asarray(np.stack([np.tile(k1, (N, 1)),
+                                np.tile(k2, (N, 1))], axis=-1), jnp.uint32)
+    wk = jnp.stack([klo, jnp.zeros_like(klo)], -1)        # (N, B, 2, 2)
+    wv = value_for(klo)
+    state, _, res = tx_loop(
+        t, state, cfg, layout, read_keys=jnp.zeros((N, B, 0, 2), jnp.uint32),
+        write_keys=wk, write_values=wv, max_rounds=3, ptable=table, pcfg=pcfg,
+        rep=repl.ReplicaConfig(N, 1))
+    r = np.asarray
+    assert not r(res.committed).any(), \
+        "a lane touching a dead-owner partition must not commit"
+    assert int(r(res.round_abort_overflow).sum()) > 0, \
+        "parked lanes surface as overflow (dropped), never silent"
+    # nothing was silently written to the backup
+    for k in k1:
+        assert find_copy(state, cfg, layout, 2, int(k)) is None
+
+
+# ---------------------------------------------------------------------------
+# Membership transition bookkeeping
+# ---------------------------------------------------------------------------
+def test_join_leave_kill_bump_epoch_and_drain_plan():
+    pcfg = pl.PlacementConfig(N, f=1)
+    table = pl.initial_table(pcfg)
+    t1 = pl.kill_node(pcfg, table, 3)
+    t2 = pl.join_node(pcfg, t1, 3)
+    t3 = pl.leave_node(pcfg, t2, 0)
+    assert [int(x.epoch) for x in (t1, t2, t3)] == [1, 2, 3]
+    assert bool(t2.alive[3]) and not bool(t3.alive[0])
+    plan = pl.drain_plan(pcfg, t2, 0)
+    assert len(plan) == 1 and plan[0][0] == 0
+    p, dst = plan[0]
+    assert dst not in set(int(c) for c in np.asarray(t2.copies)[p]), \
+        "the drain destination must not already hold a copy"
+
+
+def test_placement_config_validates():
+    with pytest.raises(ValueError):
+        pl.PlacementConfig(4, f=-1)
+    with pytest.raises(ValueError):
+        pl.PlacementConfig(4, f=4)
+    with pytest.raises(ValueError):
+        pl.PlacementConfig(8, f=4)        # f + 1 > MAX_COPIES
+    assert pl.PlacementConfig(4, f=3).n_copies == 4

@@ -356,3 +356,99 @@ def test_failover_lookup_matches_hybrid_when_all_alive(cfg, layout):
     np.testing.assert_array_equal(np.asarray(out["node"]), np.asarray(node))
     np.testing.assert_array_equal(np.asarray(out["version"]),
                                   np.asarray(version))
+
+
+# ---------------------------------------------------------------------------
+# Ordered index under failure: kill a primary, serve from the backup tree
+# ---------------------------------------------------------------------------
+def _btree_replicated_cluster(f=1, n_per_node=6, seed=47):
+    """A populated btree cluster whose every key was committed THROUGH the
+    replicated scan-tx path (OP_BT_BACKUP fan-out on the commit round)."""
+    from repro.core.datastructs import btree as bt
+    from repro.core.txloop import scan_loop
+    cfg = bt.BTreeConfig(n_nodes=N, n_leaves=32, leaf_width=4)
+    layout = bt.build_layout(cfg)
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    rng = np.random.RandomState(seed)
+    wk = jnp.asarray(rng.randint(0, 2**32, (N, n_per_node, 1),
+                                 dtype=np.uint32))
+    wv = value_for(wk)
+    state, _, res = scan_loop(
+        t, state, cfg, layout, scan_lo=wk[..., 0], scan_hi=wk[..., 0],
+        scan_enabled=jnp.zeros((N, n_per_node), bool), write_keys=wk,
+        write_values=wv, max_rounds=10, rep=repl.ReplicaConfig(N, f))
+    assert bool(np.asarray(res.committed).all())
+    return t, state, cfg, layout, wk[..., 0], wv
+
+
+def test_btree_primary_death_point_lookups_from_backup_tree():
+    """Kill a primary at f=1: every point lookup fails over to the ring
+    successor and is served from its full-range BACKUP tree (the RPC
+    fallback resolves the foreign-partition key — correct, never fast)."""
+    from repro.core import placement as pl
+    from repro.core.datastructs import btree as bt
+    t, state, cfg, layout, keys, wv = _btree_replicated_cluster()
+    dead = 1
+    alive = repl.kill_node(repl.all_alive(N), dead)
+    # scorch the dead node: any read still touching it would come back junk
+    state = dict(state, arena=state["arena"].at[dead].set(jnp.uint32(0xDEAD)))
+    table = pl.table_from_replica(repl.ReplicaConfig(N, 1), alive)
+    out = pl.failover_lookup(t, state, cfg, layout, table, keys,
+                             jnp.zeros_like(keys), ds=bt)
+    assert bool(np.asarray(out["found"]).all()), \
+        "every key must be served by a live copy"
+    np.testing.assert_array_equal(
+        np.asarray(out["value"]),
+        np.asarray(wv.reshape(N, -1, sl.VALUE_WORDS)))
+    home = np.asarray(bt.home_of(cfg, keys))
+    served = np.asarray(out["node"])
+    assert (served[home == dead] == (dead + 1) % N).all(), \
+        "dead-partition keys must be served by the ring successor"
+    assert (served[home != dead] == home[home != dead]).all()
+    assert not np.asarray(out["dead_route"]).any()
+
+
+def test_btree_primary_death_scans_from_backup_tree():
+    """Range scans over the dead partition are planned against the backup
+    tree's OWN separator directory (refresh_backup_meta) and served by
+    one-sided reads of its leaves; the survivors' primary fence chains stay
+    fully intact."""
+    from repro.core import onesided as osd
+    from repro.core.datastructs import btree as bt
+    from tests.test_btree import walk_leaves
+    t, state, cfg, layout, keys, wv = _btree_replicated_cluster(seed=53)
+    dead = 1
+    backup = (dead + 1) % N
+    state = dict(state, arena=state["arena"].at[dead].set(jnp.uint32(0xDEAD)))
+
+    meta_b, stats = bt.refresh_backup_meta(t, state, cfg, layout)
+    assert float(stats.round_trips) == 1.0, \
+        "the backup directory refresh is ONE one-sided read round"
+    nleaf = int(np.asarray(meta_b["nleaf"])[0, backup])
+    assert nleaf >= 1
+
+    # scan the dead node's whole partition out of the backup tree
+    lo, hi = (int(np.asarray(x)) for x in bt.partition_bounds(cfg, dead))
+    offs = jnp.asarray([np.asarray(bt.backup_leaf_offset(cfg, layout, i))
+                        for i in range(nleaf)], jnp.uint32)
+    dest = jnp.full((t.n_local, nleaf), backup, jnp.int32)
+    buf, ovf, _ = osd.remote_read(
+        t, state["arena"], dest,
+        jnp.broadcast_to(offs[None], (t.n_local, nleaf)),
+        length=cfg.leaf_words)
+    assert not bool(ovf.any())
+    p = bt.parse_leaf(cfg, buf[0])
+    ks = np.asarray(p["keys"])
+    live = np.asarray(p["live"])
+    got = sorted(int(k) for k in ks[live] if lo <= int(k) <= hi)
+    kflat = np.asarray(keys).reshape(-1)
+    want = sorted(int(k) for k in kflat if lo <= int(k) <= hi)
+    assert want, "the workload must land keys in the dead partition"
+    assert set(want) <= set(got), \
+        "the backup tree must serve every committed key of the dead range"
+
+    # the failover touched nothing: every survivor's fence chain still holds
+    for n in range(N):
+        if n != dead:
+            walk_leaves(state, cfg, layout, n)

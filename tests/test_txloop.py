@@ -189,8 +189,17 @@ def test_rpc_overflow_reports_dropped(cfg, layout):
     state = ht.init_cluster_state(cfg)
     B, cap = 6, 2
     rng = np.random.RandomState(6)
-    klo = jnp.asarray(rng.randint(0, 2**31, (N, B)), jnp.uint32)
-    khi = jnp.asarray(rng.randint(0, 2**31, (N, B)), jnp.uint32)
+    # keys are drawn from node 0's own partition: every node hammers the
+    # key's legitimate owner, so delivered ops succeed and ONLY capacity
+    # decides who is dropped (a non-owner would refuse with ST_WRONG_EPOCH
+    # — the placement layer's owner check, tested in test_placement.py)
+    pool = rng.randint(0, 2**31, (8 * N * B, 2)).astype(np.uint32)
+    part = np.asarray(ht.part_of(cfg, jnp.asarray(pool[:, 0]),
+                                 jnp.asarray(pool[:, 1])))
+    pool = pool[part == 0][:N * B]
+    assert len(pool) == N * B
+    klo = jnp.asarray(pool[:, 0].reshape(N, B))
+    khi = jnp.asarray(pool[:, 1].reshape(N, B))
     dest = jnp.zeros((N, B), jnp.int32)          # everyone hammers node 0
     h = ht.make_rpc_handler(cfg, layout)
     recs = ht.make_record(R.OP_INSERT, klo, khi, value=value_for(klo))
