@@ -19,6 +19,13 @@ Collects the protocol's headline numbers into a JSON snapshot:
     MUST stay equal to the point-lookup schedule's rounds; any increase
     fails), commit rate and modeled Mtx/node at 32 emulated nodes for the
     scan-heavy mix (5% threshold);
+  * ``telemetry`` — the flight recorder (core/telemetry.py): the traced
+    TATP smoke's committed-latency percentiles (``latency_us_p50`` /
+    ``latency_us_p99``, 5% threshold) and its commit rate; collect()
+    additionally asserts, BEFORE any comparison, that running the gate
+    workload with the recorder ON is bit-identical (commit mask, wire ops /
+    bytes, round trips) to running it with ``telemetry=None`` — the
+    recorder's zero-cost-when-disabled AND read-only-when-enabled invariants;
   * ``membership`` — the placement subsystem (membership_churn.py):
     ``round_trips_stable`` (the f=1 workload routed through an epoch-stable
     placement table — MUST equal the rep-only schedule; any increase fails),
@@ -74,6 +81,22 @@ def _tx_smoke():
         max_rounds=max_rounds))(state)
     rounds_attempted = int((np.asarray(res.round_attempts) > 0).sum())
 
+    # the flight recorder must only ever READ protocol values: the same
+    # workload with telemetry enabled is bit-identical (collect-time assert,
+    # fires before any baseline comparison)
+    from repro.core import telemetry as T
+    _, _, res_t, tel = jax.jit(lambda st: txl.tx_loop(
+        t, st, cfg, layout, read_keys=rk, write_keys=wk, write_values=wv,
+        max_rounds=max_rounds, telemetry=T.TelemetryConfig()))(state)
+    assert np.array_equal(np.asarray(res.committed),
+                          np.asarray(res_t.committed)) \
+        and float(res_t.round_trips) == float(res.round_trips) \
+        and float(res_t.metrics.wire.total_bytes) == \
+        float(res.metrics.wire.total_bytes), \
+        "telemetry=on must be bit-identical to telemetry=None"
+    assert int(tel.trace.dropped) == 0 and int(tel.trace.n) > 0, \
+        "the gate workload must fit the default trace buffer"
+
     # the same workload with one backup copy per record (f=1)
     from repro.core.replication import ReplicaConfig
     rep = ReplicaConfig(n_nodes, 1)
@@ -118,6 +141,8 @@ def collect() -> dict:
         dict(bytes_tx=f1["bytes_tx"], ops_tx=f1["ops_tx"]), 1,
         qn.ConnTable(n_nodes=96, threads=20, mode=mode)), 4)
         for mode in qn.MODES}
+    import fig6_tatp
+    treg, _ = fig6_tatp.traced_smoke()
     out = {
         "round_trips": tx["round_trips"],
         "rt_round": round(tx["rt_round"], 4),
@@ -136,6 +161,16 @@ def collect() -> dict:
         # that the fast-path scan costs exactly the point-lookup schedule
         # and that f=1 adds zero rounds to it
         "ordered": range_scan.gate_numbers(),
+        # the traced TATP smoke's committed-latency percentiles — the
+        # modeled latency distribution the flight recorder accumulates
+        # per lane (5% growth fails); trace health is asserted above
+        "telemetry": {
+            "latency_us_p50":
+                round(treg.get("tatp.latency_us.committed.p50"), 4),
+            "latency_us_p99":
+                round(treg.get("tatp.latency_us.committed.p99"), 4),
+            "commit_rate": round(treg.get("tatp.commit_rate"), 4),
+        },
         # membership_churn.gate_numbers() asserts that the epoch-stable
         # placement-routed schedule equals the rep-only one and that a table
         # refresh is ONE one-sided read; the snapshot then pins the recovery
@@ -207,6 +242,19 @@ def compare(pr: dict, base: dict) -> list[str]:
             fails.append(f"ordered.mops_node_32 regressed: "
                          f"{ob['mops_node_32']} -> {p} "
                          f"(<{TPUT_TOL:.0%} of baseline)")
+    tb = base.get("telemetry")
+    if tb is not None:
+        tp = pr.get("telemetry") or {}
+        for k in ("latency_us_p50", "latency_us_p99"):
+            p = tp.get(k)
+            if p is None or p > tb[k] * LAT_TOL:
+                fails.append(f"telemetry.{k} regressed: {tb[k]} -> {p} "
+                             f"(>{LAT_TOL:.0%} of baseline)")
+        p = tp.get("commit_rate")
+        if p is None or p < tb["commit_rate"]:
+            fails.append(f"telemetry.commit_rate dropped: "
+                         f"{tb['commit_rate']} -> {p} (any drop fails: "
+                         f"deterministic workload)")
     mb = base.get("membership")
     if mb is not None:
         mp = pr.get("membership") or {}

@@ -30,6 +30,12 @@ from repro.core import rpc as R
 from repro.core import slots as sl
 from repro.core.datastructs import hashtable as ht
 
+# THE percentile helper: every benchmark reports latency distributions
+# through this one summary ({p50, p90, p99, mean}) — never bare means, and
+# never a private reimplementation.  It lives next to the flight recorder
+# (core/telemetry.py) because the traced latency samples are produced there.
+from repro.core.telemetry import summarize  # noqa: F401  (re-export)
+
 
 # --- modeled fabric (CX4 Infiniband EDR) -------------------------------------
 # Calibration (documented in EXPERIMENTS.md §Fig4/5): a one-sided read

@@ -24,6 +24,7 @@ import numpy as np
 from common import (ModelFabric, csv_line, modeled_throughput_per_node,
                     populate, time_jit)
 from repro.core import slots as sl
+from repro.core import telemetry as T
 from repro.core import txloop as txl
 from repro.core.datastructs import hashtable as ht
 from repro.core.transport import SimTransport
@@ -36,7 +37,8 @@ MAX_ROUNDS = 4  # bounded retry (tx_loop); 1 reproduces single-shot
 
 
 def run_config(name, n_nodes, *, use_onesided: bool, oversub: bool,
-               lanes=LANES, seed=3, max_rounds=MAX_ROUNDS, fused=True):
+               lanes=LANES, seed=3, max_rounds=MAX_ROUNDS, fused=True,
+               telemetry=None):
     n_buckets = 1024 if oversub else 128
     cfg = ht.HashTableConfig(n_nodes=n_nodes, n_buckets=n_buckets,
                              bucket_width=1, n_overflow=SUBSCRIBERS_PER_NODE,
@@ -73,13 +75,18 @@ def run_config(name, n_nodes, *, use_onesided: bool, oversub: bool,
 
     @jax.jit
     def round_fn(state):
-        st, _, res = txl.tx_loop(
+        out = txl.tx_loop(
             t, state, cfg, layout, read_keys=rk, write_keys=wk,
             write_values=wvals, read_enabled=ren, write_enabled=wen,
-            use_onesided=use_onesided, max_rounds=max_rounds, fused=fused)
-        return st, res
+            use_onesided=use_onesided, max_rounds=max_rounds, fused=fused,
+            telemetry=telemetry)
+        if telemetry is not None:
+            st, _, res, tel = out
+            return st, res, tel
+        st, _, res = out
+        return st, res, None
 
-    (state, res), dt = time_jit(round_fn, state)
+    (state, res, tel), dt = time_jit(round_fn, state)
     n_tx = n_nodes * lanes
     committed = float(jnp.sum(res.committed)) / n_tx
     retries = int(jnp.sum(res.round_retries))
@@ -118,7 +125,46 @@ def run_config(name, n_nodes, *, use_onesided: bool, oversub: bool,
              f"msgs_tx={msg_tx:.1f};rt_round={rt_round:.2f};"
              f"retries={retries};"
              f"aborts_lock/val/ovf={ab_lock}/{ab_val}/{ab_ovf}")
+    if telemetry is not None:
+        return mtps, committed, rt_round, res, tel
     return mtps, committed, rt_round
+
+
+def traced_smoke(trace_path=None, metrics_path=None, *, n_nodes=4,
+                 registry=None):
+    """The TATP smoke with the flight recorder ON: one deterministic
+    oversubscribed run, exported as a Perfetto-loadable trace plus a flat
+    metrics.json (latency percentiles per abort-retry path, abort counters,
+    trace health).  The bench gate pins the p50/p99 committed-latency keys.
+
+    Returns (MetricsRegistry, trace-event document dict)."""
+    tcfg = T.TelemetryConfig()
+    mtps, committed, rt_round, res, tel = run_config(
+        "storm_oversub_traced", n_nodes, use_onesided=True, oversub=True,
+        telemetry=tcfg)
+    reg = registry if registry is not None else T.MetricsRegistry()
+    reg.set("tatp.commit_rate", committed)
+    reg.set("tatp.modeled_mtx_node", mtps)
+    reg.set("tatp.rt_round", rt_round)
+    reg.set("tatp.round_trips", float(res.round_trips))
+    reg.set("tatp.retries", float(jnp.sum(res.round_retries)))
+    reg.set("tatp.abort_lock", float(jnp.sum(res.round_abort_lock)))
+    reg.set("tatp.abort_validate", float(jnp.sum(res.round_abort_validate)))
+    reg.set("tatp.abort_overflow", float(jnp.sum(res.round_abort_overflow)))
+    reg.set("tatp.trace_events", int(tel.trace.n))
+    reg.set("tatp.trace_dropped", int(tel.trace.dropped))
+    lat = np.asarray(tel.lane_latency_us)
+    com = np.asarray(res.committed)
+    reg.observe("tatp.latency_us", lat[com])
+    for group, summ in T.latency_by_path(tel.lane_latency_us, res.committed,
+                                         res.commit_round).items():
+        for k, v in summ.items():
+            reg.set(f"tatp.latency_us.{group}.{k}", v)
+    doc = T.export_trace(tel.trace, config=tcfg, path=trace_path,
+                         label="tatp")
+    if metrics_path is not None:
+        reg.write(metrics_path)
+    return reg, doc
 
 
 def main(node_counts=(4, 8, 16)):

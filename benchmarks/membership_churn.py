@@ -41,6 +41,7 @@ import numpy as np
 
 from common import csv_line, make_tx_workload, time_jit
 from repro.core import placement as pl
+from repro.core import telemetry as T
 from repro.core import txloop as txl
 from repro.core.datastructs import hashtable as ht
 from repro.core.replication import ReplicaConfig
@@ -217,22 +218,48 @@ def join_and_rebalance():
                 epoch=int(table.epoch))
 
 
-def gate_numbers():
-    """Deterministic membership numbers for bench_gate.py.  Collect-time
-    structural asserts (schedule equality, one-read refresh, single-round
-    stale convergence) fire BEFORE any baseline comparison."""
+def fill_registry(reg: T.MetricsRegistry) -> T.MetricsRegistry:
+    """Publish the membership bill to a MetricsRegistry (the metrics.json
+    surface): refresh reads issued, re-replication bytes, the stale-retry
+    schedule and the epoch-stable baseline.  ``gate_numbers`` derives the
+    bench-gate keys FROM this registry, so the gated numbers and the
+    published ones can never diverge."""
     ss = steady_state()
     rf = refresh_cost()
     kl = kill_event()
     sm = stale_mix()
-    assert rf["round_trips"] == 1.0, \
+    reg.set("membership.round_trips_stable", ss["round_trips_stable"])
+    reg.set("membership.commit_rate_stable", ss["commit_rate_stable"])
+    reg.set("membership.wire_bytes_stable", ss["wire_bytes_stable"])
+    reg.incr("membership.refresh_reads_issued", rf["round_trips"])
+    reg.set("membership.refresh_round_trips", rf["round_trips"])
+    reg.set("membership.refresh_bytes", rf["bytes"])
+    reg.set("membership.rereplication_bytes", kl["rereplication_bytes"])
+    reg.incr("membership.rereplication_transfers", kl["transfers"])
+    reg.set("membership.stale_round_trips", sm["stale_round_trips"])
+    reg.incr("membership.stale_aborts_round0", sm["abort_stale_round0"])
+    reg.set("membership.stale_rounds_to_converge",
+            sm["stale_rounds_to_converge"])
+    return reg
+
+
+def gate_numbers(registry: T.MetricsRegistry | None = None):
+    """Deterministic membership numbers for bench_gate.py, derived from the
+    ``fill_registry`` counters.  Collect-time structural asserts (schedule
+    equality, one-read refresh, single-round stale convergence) fire BEFORE
+    any baseline comparison."""
+    reg = fill_registry(registry if registry is not None
+                        else T.MetricsRegistry())
+    assert reg.get("membership.refresh_round_trips") == 1.0, \
         "a table refresh is ONE one-sided read"
+    assert reg.get("membership.stale_rounds_to_converge") <= 2.0, \
+        "one refresh must resolve every stale route"
     return {
-        "round_trips_stable": ss["round_trips_stable"],
-        "commit_rate_stable": ss["commit_rate_stable"],
-        "refresh_round_trips": rf["round_trips"],
-        "rereplication_bytes": kl["rereplication_bytes"],
-        "stale_round_trips": sm["stale_round_trips"],
+        "round_trips_stable": reg.get("membership.round_trips_stable"),
+        "commit_rate_stable": reg.get("membership.commit_rate_stable"),
+        "refresh_round_trips": reg.get("membership.refresh_round_trips"),
+        "rereplication_bytes": reg.get("membership.rereplication_bytes"),
+        "stale_round_trips": reg.get("membership.stale_round_trips"),
     }
 
 

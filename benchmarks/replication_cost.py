@@ -34,6 +34,7 @@ import numpy as np
 from common import (csv_line, make_tx_workload, modeled_throughput_per_node,
                     time_jit)
 from repro.core import nic as qn
+from repro.core import telemetry as T
 from repro.core import replication as repl
 from repro.core import slots as sl
 from repro.core import txloop as txl
@@ -164,6 +165,30 @@ def failover_section(*, lanes: int):
              f"killed_node={dead};keys={found.size};rerouted={n_failover};"
              f"found_rate={found.mean():.3f};"
              f"ops={float(w.ops):.0f};round_trips={float(w.round_trips):.0f}")
+    return dict(failover_reads=float(w.ops),
+                failover_rerouted=n_failover,
+                failover_round_trips=float(w.round_trips),
+                found_rate=float(found.mean()))
+
+
+def fill_registry(reg: T.MetricsRegistry, *, lanes: int = 8,
+                  smoke: bool = True) -> T.MetricsRegistry:
+    """Publish the replication bill to a MetricsRegistry (the metrics.json
+    surface): per-f wire profile of the gate workload, plus the
+    failure-injection section's failover reads (every read served by a
+    surviving replica after a node death)."""
+    rows = sweep_f(lanes=lanes, smoke=smoke)
+    for f, row in rows.items():
+        reg.set(f"replication.round_trips_f{f}", row["round_trips"])
+        reg.set(f"replication.bytes_tx_f{f}", row["bytes_tx"])
+        reg.set(f"replication.ops_tx_f{f}", row["ops_tx"])
+        reg.set(f"replication.commit_rate_f{f}", row["commit_rate"])
+    fo = failover_section(lanes=lanes)
+    reg.incr("replication.failover_reads", fo["failover_reads"])
+    reg.incr("replication.failover_rerouted", fo["failover_rerouted"])
+    reg.set("replication.failover_round_trips", fo["failover_round_trips"])
+    reg.set("replication.failover_found_rate", fo["found_rate"])
+    return reg
 
 
 def main(*, smoke: bool = False):

@@ -3,10 +3,18 @@
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig4 fig6  # a subset
     PYTHONPATH=src python -m benchmarks.run --smoke    # CI: small node counts
+    PYTHONPATH=src python -m benchmarks.run --trace out.json   # + flight rec.
 
 CSV lines: name,us_per_call,derived.  The roofline section reads the
 dry-run artifacts under benchmarks/results/ (produced by
 ``python -m repro.launch.dryrun --all --mesh both``).
+
+``--trace out.json`` additionally runs the deterministic TATP smoke with the
+flight recorder enabled (core/telemetry.py) and writes two artifacts: the
+Perfetto-loadable trace-event document at the given path, and a flat
+``metrics.json`` next to it carrying the latency percentiles per
+abort-retry path plus the membership/replication counters.  Validate both
+with ``python benchmarks/check_trace.py out.json metrics.json``.
 """
 from __future__ import annotations
 
@@ -23,6 +31,13 @@ ALL = ["fig4", "fig5", "fig6", "table5", "fig7", "conn", "range",
 def main() -> None:
     args = sys.argv[1:]
     smoke = "--smoke" in args
+    trace_out = None
+    if "--trace" in args:
+        i = args.index("--trace")
+        if i + 1 >= len(args):
+            raise SystemExit("--trace needs an output path")
+        trace_out = args[i + 1]
+        args = args[:i] + args[i + 2:]
     want = [a for a in args if not a.startswith("--")] or ALL
     print("name,us_per_call,derived")
     if "fig4" in want:
@@ -76,6 +91,20 @@ def main() -> None:
             (results / "roofline.md").write_text(roofline.to_markdown(rows))
         else:
             print("roofline/SKIPPED,0,run repro.launch.dryrun first")
+    if trace_out is not None:
+        import fig6_tatp
+        import membership_churn
+        import replication_cost
+        from repro.core.telemetry import MetricsRegistry
+
+        reg = MetricsRegistry()
+        membership_churn.fill_registry(reg)
+        replication_cost.fill_registry(reg)
+        out = pathlib.Path(trace_out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        metrics = out.parent / "metrics.json"
+        fig6_tatp.traced_smoke(str(out), str(metrics), registry=reg)
+        print(f"# wrote {out} and {metrics} (validate with check_trace.py)")
 
 
 if __name__ == "__main__":

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 
 from repro.core import onesided as osd
 from repro.core import rpc as R
+from repro.core import telemetry as T
 from repro.core import wireproto as W
 from repro.core import slots as sl
 from repro.core.datastructs import hashtable as ht
@@ -64,7 +65,7 @@ class HybridMetrics:
 def onesided_probe(t: Transport, state, key_lo, key_hi, cfg, layout, *,
                    cache=None, use_onesided: bool = True,
                    capacity: Optional[int] = None, enabled=None, nic=None,
-                   ds=ht, ptable=None):
+                   ds=ht, ptable=None, telemetry=None):
     """Phase 1 of Algorithm 1: lookup_start + one-sided read + lookup_end,
     for any registered data structure (``ds=`` module; default hash table).
 
@@ -94,7 +95,8 @@ def onesided_probe(t: Transport, state, key_lo, key_hi, cfg, layout, *,
     if use_onesided:
         buf, ovf, s_read = osd.remote_read(
             t, state["arena"], node, off, length=ds.probe_words(cfg),
-            capacity=capacity, enabled=enabled, nic=nic)
+            capacity=capacity, enabled=enabled, nic=nic, telemetry=telemetry,
+            phase=T.PH_READ)
         pe = ds.probe_end(cfg, layout, buf, key_lo, key_hi, off, hit)
         success = pe["found"] & ~ovf & enabled
         resolved = pe["resolved"] & ~ovf & enabled
@@ -146,7 +148,7 @@ def update_lookup_cache(cfg, cache, key_lo, key_hi, node, slot_idx, found,
 def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg, layout, *,
                   cache=None, use_onesided: bool = True,
                   rpc_serial: bool = False, capacity: Optional[int] = None,
-                  enabled=None, nic=None, ds=ht, ptable=None):
+                  enabled=None, nic=None, ds=ht, ptable=None, telemetry=None):
     """Batched one-two-sided lookup (any registered data structure via
     ``ds=``; default hash table).
 
@@ -162,7 +164,8 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg, layout, *,
     """
     probe = onesided_probe(t, state, key_lo, key_hi, cfg, layout, cache=cache,
                            use_onesided=use_onesided, capacity=capacity,
-                           enabled=enabled, nic=nic, ds=ds, ptable=ptable)
+                           enabled=enabled, nic=nic, ds=ds, ptable=ptable,
+                           telemetry=telemetry)
 
     # ---- phase 2: write-based RPC for the failed lanes --------------------
     recs = ds.lookup_records(cfg, key_lo, key_hi)
@@ -170,7 +173,8 @@ def hybrid_lookup(t: Transport, state, key_lo, key_hi, cfg, layout, *,
                else ds.make_lookup_handler_vector(cfg, layout))
     state, replies, ovf2, s_rpc = R.rpc_call(
         t, state, probe["node"], recs, handler, capacity=capacity,
-        enabled=probe["need_rpc"], nic=nic)
+        enabled=probe["need_rpc"], nic=nic, telemetry=telemetry,
+        phase=T.PH_FALLBACK)
     mg = merge_rpc_fallback(probe, replies, ovf2)
 
     # ---- lookup_end caching duty ------------------------------------------

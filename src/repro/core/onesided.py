@@ -27,7 +27,7 @@ from repro.core.transport import Transport, route_by_dest, wire_for
 def remote_read(t: Transport, arenas, dest, offsets, *, length: int,
                 capacity: Optional[int] = None,
                 mode: rg.AddressMode | None = None, page_tables=None,
-                enabled=None, nic=None):
+                enabled=None, nic=None, telemetry=None, phase: int = 0):
     """Batched one-sided READ — a single-class fused round (see
     roundsched.fused_round; the owner side is translation + gather ONLY).
 
@@ -46,7 +46,7 @@ def remote_read(t: Transport, arenas, dest, offsets, *, length: int,
         t, {"arena": arenas},
         [rs.read_class(dest, offsets, length=length, enabled=enabled,
                        capacity=capacity, mode=mode, page_tables=page_tables)],
-        nic=nic)
+        nic=nic, telemetry=telemetry, phase=phase)
     return out, ovf, stats
 
 

@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.core import onesided as osd
 from repro.core import rpc as R
+from repro.core import telemetry as T
 from repro.core import slots as sl
 from repro.core import wireproto as W
 from repro.core.transport import Transport, WireStats, placement_dest
@@ -235,7 +236,8 @@ def decode_region(pcfg: PlacementConfig, words) -> PlacementTable:
 # Publication: refresh (one-sided read) and install (RPC broadcast / local)
 # ---------------------------------------------------------------------------
 def refresh_table(t: Transport, state, layout, pcfg: PlacementConfig,
-                  table: PlacementTable, *, enabled=None, nic=None):
+                  table: PlacementTable, *, enabled=None, nic=None,
+                  telemetry=None):
     """Refresh the client-cached table with ONE one-sided read of the
     coordinator-published routing region (the lowest live node per the
     CURRENT — possibly stale — table; a freshly-dead coordinator is caught
@@ -255,7 +257,8 @@ def refresh_table(t: Transport, state, layout, pcfg: PlacementConfig,
     if enabled is not None:
         en = jnp.broadcast_to(jnp.asarray(enabled, bool), (n_local, 1))
     buf, _, stats = osd.remote_read(t, state["arena"], dest, off,
-                                    length=length, enabled=en, nic=nic)
+                                    length=length, enabled=en, nic=nic,
+                                    telemetry=telemetry, phase=T.PH_REFRESH)
     # every SimTransport client reads identical coordinator bytes -> decode
     # one lane into the one shared table
     return decode_region(pcfg, buf[0, 0]), stats

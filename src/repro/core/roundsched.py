@@ -58,8 +58,8 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import regions as rg
-from repro.core.transport import (Transport, pick_replies, route_by_dest,
-                                  wire_for_classes)
+from repro.core.transport import (Transport, per_dest_wire, pick_replies,
+                                  route_by_dest, wire_for_classes)
 # Transport-level "request never delivered" status stamped into reply word 0
 # of overflowed/parked RPC lanes (registered with every other status in
 # core/wireproto.py; rpc.py re-exports it too).
@@ -123,7 +123,8 @@ def _pad_words(x, width):
 
 
 def fused_round(t: Transport, state, classes: Sequence[dict], *,
-                arena_key: str = "arena", nic=None):
+                arena_key: str = "arena", nic=None, telemetry=None,
+                phase: int = 0):
     """Run one fused exchange round carrying several traffic classes.
 
     state: pytree with leading node axis; read classes gather from
@@ -140,6 +141,12 @@ def fused_round(t: Transport, state, classes: Sequence[dict], *,
     Overflowed/parked rpc lanes carry ST_DROPPED in reply word 0
     (never aliasing ST_OK or a handler-returned status); overflowed/parked
     read lanes read back zeros.
+
+    ``telemetry`` (an optional :class:`repro.core.telemetry.Recorder`)
+    appends ONE flight-recorder event for this round — phase tag, class
+    count, the WireStats snapshot, per-destination message/byte counts —
+    into the recorder's TraceBuffer.  Recording only READS round values:
+    ``telemetry=None`` (the default) is bit-identical.
     """
     n_dst = t.n_nodes
     specs = []
@@ -170,6 +177,7 @@ def fused_round(t: Transport, state, classes: Sequence[dict], *,
                                  [s["W"] for s in specs],
                                  [s["R"] for s in specs], nic=nic)
         results = [(_dropped_replies(s), s["ovf"]) for s in specs]
+        _record_round(telemetry, phase, specs, stats)
         return state, results, stats
 
     w_max = max(s["W"] for s in specs)
@@ -250,7 +258,19 @@ def fused_round(t: Transport, state, classes: Sequence[dict], *,
     stats = wire_for_classes([s["mask"] for s in specs],
                              [s["W"] for s in specs],
                              [s["R"] for s in specs], nic=nic)
+    _record_round(telemetry, phase, specs, stats)
     return state, results, stats
+
+
+def _record_round(telemetry, phase, specs, stats):
+    """Append this round's flight-recorder event (no-op when disabled)."""
+    if telemetry is None:
+        return
+    pd_msgs, pd_bytes = per_dest_wire([s["mask"] for s in specs],
+                                      [s["W"] for s in specs],
+                                      [s["R"] for s in specs])
+    telemetry.record(phase, stats, n_classes=len(specs),
+                     per_dest_msgs=pd_msgs, per_dest_bytes=pd_bytes)
 
 
 def _dropped_replies(s):

@@ -53,7 +53,8 @@ class Handler:
 
 @partial(jax.named_call, name="storm_rpc")
 def rpc_call(t: Transport, state, dest, records, handler: Handler, *,
-             capacity: Optional[int] = None, enabled=None, nic=None):
+             capacity: Optional[int] = None, enabled=None, nic=None,
+             telemetry=None, phase: int = 0):
     """Batched write-based RPC round (one round trip for B lanes/node) — a
     single-class fused round (see roundsched.fused_round).
 
@@ -76,5 +77,6 @@ def rpc_call(t: Transport, state, dest, records, handler: Handler, *,
     state, ((out, ovf),), stats = rs.fused_round(
         t, state,
         [rs.rpc_class(dest, records, handler, enabled=enabled,
-                      capacity=capacity)], nic=nic)
+                      capacity=capacity)], nic=nic, telemetry=telemetry,
+        phase=phase)
     return state, out, ovf, stats

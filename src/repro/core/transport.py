@@ -228,17 +228,15 @@ class WireStats:
 
     @staticmethod
     def zero():
-        z = jnp.zeros((), jnp.float32)
-        return WireStats(z, z, z, z, z, z, z)
+        # field-driven so the NEXT added field is zeroed automatically instead
+        # of silently breaking a positional constructor (regression-tested by
+        # tests/test_telemetry.py::test_wirestats_zero_roundtrips_every_field)
+        return WireStats(**{f.name: jnp.zeros((), jnp.float32)
+                            for f in dataclasses.fields(WireStats)})
 
     def __add__(self, o):
-        return WireStats(self.round_trips + o.round_trips,
-                         self.messages + o.messages,
-                         self.ops + o.ops,
-                         self.req_bytes + o.req_bytes,
-                         self.reply_bytes + o.reply_bytes,
-                         self.nic_hit_ops + o.nic_hit_ops,
-                         self.nic_penalty_us + o.nic_penalty_us)
+        return WireStats(**{f.name: getattr(self, f.name) + getattr(o, f.name)
+                            for f in dataclasses.fields(WireStats)})
 
     @property
     def total_bytes(self):
@@ -342,3 +340,37 @@ def wire_for_classes(masks, req_words, reply_words, header_words: int = 1,
         nic_hit_ops=hit_ops,
         nic_penalty_us=penalty_us,
     )
+
+
+def per_dest_wire(masks, req_words, reply_words, header_words: int = 1):
+    """Per-DESTINATION view of :func:`wire_for_classes` for one fused round.
+
+    masks: list of live-cell masks, each (N_src, n_dst, C_k).  Returns
+    ``(msgs, bytes)`` — two (n_dst,) float32 vectors counting the coalesced
+    wire messages addressed to / replied by each destination and their total
+    bytes (both directions), with the same coalescing rules as the scalar
+    accounting: summing either vector over destinations reproduces the
+    round's ``WireStats.messages`` / ``total_bytes`` exactly (asserted by
+    tests/test_telemetry.py).  Consumed by the flight recorder's per-dest
+    event-row tails (core/telemetry.py).
+    """
+    f32 = jnp.float32
+    n_dst = masks[0].shape[-2]
+    zero = jnp.zeros((n_dst,), f32)
+    live = [jnp.sum(m.astype(f32), axis=(0, -1)) for m in masks]   # (n_dst,)
+    pair_live = None
+    reply_pair_live = None
+    for m, rw in zip(masks, reply_words):
+        a = jnp.any(m, axis=-1)                                    # (N, n_dst)
+        pair_live = a if pair_live is None else (pair_live | a)
+        if rw > 0:
+            reply_pair_live = a if reply_pair_live is None else (reply_pair_live | a)
+    pairs = zero if pair_live is None else jnp.sum(pair_live.astype(f32), axis=0)
+    reply_pairs = (zero if reply_pair_live is None
+                   else jnp.sum(reply_pair_live.astype(f32), axis=0))
+    req_bytes = sum((l * 4.0 * w for l, w in zip(live, req_words)), zero)
+    reply_bytes = sum((l * 4.0 * w for l, w in zip(live, reply_words)), zero)
+    msgs = pairs + reply_pairs
+    byts = (req_bytes + reply_bytes + pairs * 4.0 * header_words
+            + reply_pairs * 4.0 * header_words)
+    return msgs, byts

@@ -67,6 +67,7 @@ from repro.core import regions as rg
 from repro.core import replication as repl
 from repro.core import roundsched as rs
 from repro.core import rpc as R
+from repro.core import telemetry as T
 from repro.core import wireproto as W
 from repro.core import slots as sl
 from repro.core.datastructs import btree as bt
@@ -170,7 +171,7 @@ def _validate_from_bytes(read_ctx, vbuf, vovf):
 def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                      read_keys, read_enabled, cache=None,
                      use_onesided: bool = True, capacity: Optional[int] = None,
-                     nic=None, ptable=None):
+                     nic=None, ptable=None, telemetry=None):
     """EXECUTE phase, read half: one-two-sided lookups of the read set.
 
     read_keys: (N, B, Rd, 2); read_enabled: (N, B, Rd) bool.
@@ -184,7 +185,7 @@ def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
     state, cache, found, rvals, rvers, rnode, rslot, rovf, m = hy.hybrid_lookup(
         t, state, rk_lo, rk_hi, cfg, layout, cache=cache,
         use_onesided=use_onesided, rpc_serial=False, capacity=capacity,
-        enabled=en, nic=nic, ptable=ptable)
+        enabled=en, nic=nic, ptable=ptable, telemetry=telemetry)
     return state, cache, dict(
         key_lo=rk_lo, key_hi=rk_hi, enabled=en, found=found, values=rvals,
         versions=rvers, node=rnode, slot=rslot, overflow=rovf, metrics=m)
@@ -192,7 +193,8 @@ def execute_read_set(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
 
 def lock_write_set(t: Transport, state, cfg: ht.HashTableConfig, layout,
                    serial_h, *, write_keys, write_enabled,
-                   capacity: Optional[int] = None, nic=None, ptable=None):
+                   capacity: Optional[int] = None, nic=None, ptable=None,
+                   telemetry=None):
     """EXECUTE phase, write half: LOCK + read-for-update the write set.
 
     write_keys: (N, B, Wr, 2); write_enabled: (N, B, Wr) bool.
@@ -202,7 +204,7 @@ def lock_write_set(t: Transport, state, cfg: ht.HashTableConfig, layout,
                                    write_enabled=write_enabled, ptable=ptable)
     state, lrep, lovf, s_lock = R.rpc_call(
         t, state, lk["node"], lock_recs, serial_h, capacity=capacity,
-        enabled=lk["enabled"], nic=nic)
+        enabled=lk["enabled"], nic=nic, telemetry=telemetry, phase=T.PH_LOCK)
     lctx = _parse_lock_replies(lk, lrep, lovf, N, B, Wr)
     lctx["wire"] = s_lock
     return state, lctx
@@ -210,7 +212,7 @@ def lock_write_set(t: Transport, state, cfg: ht.HashTableConfig, layout,
 
 def validate_read_set(t: Transport, state, layout, read_ctx, *,
                       capacity: Optional[int] = None, nic=None,
-                      offset_of=None):
+                      offset_of=None, telemetry=None):
     """VALIDATE phase: one-sided re-read of every read-set slot version.
 
     ``offset_of(layout, slot_idx)`` maps a read-set slot index to its arena
@@ -227,7 +229,8 @@ def validate_read_set(t: Transport, state, layout, read_ctx, *,
     voff = offset_of(layout, read_ctx["slot"])
     vbuf, vovf, s_val = osd.remote_read(
         t, state["arena"], read_ctx["node"], voff, length=sl.SLOT_WORDS,
-        capacity=capacity, enabled=issued, nic=nic)
+        capacity=capacity, enabled=issued, nic=nic, telemetry=telemetry,
+        phase=T.PH_VALIDATE)
     vctx = _validate_from_bytes(read_ctx, vbuf, vovf)
     vctx["wire"] = s_val
     return vctx
@@ -253,7 +256,7 @@ def _backup_dest(lock_ctx, rep, i, ptable):
 
 def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
                     write_values, capacity: Optional[int] = None, nic=None,
-                    rep=None, ptable=None):
+                    rep=None, ptable=None, telemetry=None):
     """COMMIT / ABORT phase: lanes that hold locks either install their values
     (version += 2, unlock) or roll back.  commit_lane: (N, B) bool;
     write_values: anything reshapeable to (N, B*Wr, VALUE_WORDS).
@@ -310,7 +313,9 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
             classes.append(rs.rpc_class(
                 _backup_dest(lock_ctx, rep, i, ptable), bk_recs, serial_h,
                 enabled=bk_en, capacity=capacity))
-    state, results, s_cm = rs.fused_round(t, state, classes, nic=nic)
+    state, results, s_cm = rs.fused_round(t, state, classes, nic=nic,
+                                          telemetry=telemetry,
+                                          phase=T.PH_COMMIT)
     overflow = results[0][1] & lock_ctx["lock_ok"]
     for brep, bovf in results[1:]:
         overflow = overflow | ((bovf | (brep[..., 0] == W.ST_NO_SPACE))
@@ -324,7 +329,8 @@ def commit_or_abort(t: Transport, state, serial_h, lock_ctx, *, commit_lane,
 def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
                        write_values, rctx, lctx, vctx, read_wire,
                        onesided_success, rpc_fallback, total,
-                       capacity, nic=None, rep=None, ptable=None):
+                       capacity, nic=None, rep=None, ptable=None,
+                       telemetry=None):
     lane_locks_ok = jnp.all(
         (lctx["lock_ok"] | ~lctx["enabled"]).reshape(N, B, Wr), axis=-1)
     lane_valid = jnp.all(
@@ -338,7 +344,7 @@ def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
     state, cctx = commit_or_abort(
         t, state, serial_h, lctx, commit_lane=commit_lane,
         write_values=write_values, capacity=capacity, nic=nic, rep=rep,
-        ptable=ptable)
+        ptable=ptable, telemetry=telemetry)
 
     has_writes = jnp.any(write_enabled, axis=-1)
     # commit RPCs provably never overflow (see commit_or_abort); the gate is
@@ -390,7 +396,7 @@ def _decide_and_finish(t, state, serial_h, *, N, B, Rd, Wr, write_enabled,
 def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
                             write_keys, write_values, write_enabled,
                             read_enabled, cache, use_onesided, capacity,
-                            nic=None, rep=None, ptable=None):
+                            nic=None, rep=None, ptable=None, telemetry=None):
     N, B, Rd = read_keys.shape[:3]
     Wr = write_keys.shape[2]
     serial_h = ht.make_rpc_handler(cfg, layout)
@@ -401,7 +407,8 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
     # ---- round 1: one-sided read of the read set --------------------------
     probe = hy.onesided_probe(t, state, rk_lo, rk_hi, cfg, layout, cache=cache,
                               use_onesided=use_onesided, capacity=capacity,
-                              enabled=ren, nic=nic, ptable=ptable)
+                              enabled=ren, nic=nic, ptable=ptable,
+                              telemetry=telemetry)
 
     # ---- round 2: read-set RPC fallback ∥ LOCK ∥ validate(one-sided hits) -
     # The fallback is independent of LOCK (different key sets, the lookup is
@@ -426,7 +433,8 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
         classes.append(rs.read_class(
             probe["node"], ht.slot_idx_offset(layout, probe["slot_idx"]),
             length=sl.SLOT_WORDS, enabled=ren & probe["success"]))
-    state, results, s2 = rs.fused_round(t, state, classes, nic=nic)
+    state, results, s2 = rs.fused_round(t, state, classes, nic=nic,
+                                        telemetry=telemetry, phase=T.PH_LOCK)
     lookup_rep, lookup_ovf = results[0]
     lrep, lovf = results[1]
 
@@ -446,14 +454,15 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
         v2buf, _, s3 = osd.remote_read(
             t, state["arena"], probe["node"],
             ht.slot_idx_offset(layout, mg["slot_idx"]), length=sl.SLOT_WORDS,
-            enabled=ren & mg["rpc_ok"], nic=nic)
+            enabled=ren & mg["rpc_ok"], nic=nic, telemetry=telemetry,
+            phase=T.PH_VALIDATE)
         vbuf = jnp.where(probe["success"][..., None], v1buf, v2buf)
         # without a capacity bound neither validate sub-round can overflow
         vctx = _validate_from_bytes(rctx, vbuf, jnp.zeros((N, B * Rd), bool))
         vctx["wire"] = s3
     else:
         vctx = validate_read_set(t, state, layout, rctx, capacity=capacity,
-                                 nic=nic)
+                                 nic=nic, telemetry=telemetry)
 
     # the lock round's wire is fused into s2; attribute the whole fused round
     # to the lock slot of the accounting so totals stay exact
@@ -466,7 +475,8 @@ def _run_transactions_fused(t: Transport, state, cfg, layout, *, read_keys,
         onesided_success=jnp.sum(probe["success"].astype(jnp.float32)),
         rpc_fallback=jnp.sum(probe["need_rpc"].astype(jnp.float32)),
         total=jnp.sum(ren.astype(jnp.float32)),
-        capacity=capacity, nic=nic, rep=rep, ptable=ptable)
+        capacity=capacity, nic=nic, rep=rep, ptable=ptable,
+        telemetry=telemetry)
     return state, cache, res
 
 
@@ -474,7 +484,7 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                      read_keys, write_keys, write_values, write_enabled=None,
                      read_enabled=None, cache=None, use_onesided: bool = True,
                      capacity: Optional[int] = None, fused: bool = True,
-                     nic=None, rep=None, ptable=None):
+                     nic=None, rep=None, ptable=None, telemetry=None):
     """Execute a batch of transactions, one per lane (single shot — aborted
     lanes report their cause and stop; see txloop.tx_loop for bounded retry).
 
@@ -521,7 +531,8 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             t, state, cfg, layout, read_keys=read_keys, write_keys=write_keys,
             write_values=write_values, write_enabled=write_enabled,
             read_enabled=read_enabled, cache=cache, use_onesided=use_onesided,
-            capacity=capacity, nic=nic, rep=rep, ptable=ptable)
+            capacity=capacity, nic=nic, rep=rep, ptable=ptable,
+            telemetry=telemetry)
 
     serial_h = ht.make_rpc_handler(cfg, layout)
 
@@ -529,25 +540,26 @@ def run_transactions(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
     state, cache, rctx = execute_read_set(
         t, state, cfg, layout, read_keys=read_keys, read_enabled=read_enabled,
         cache=cache, use_onesided=use_onesided, capacity=capacity, nic=nic,
-        ptable=ptable)
+        ptable=ptable, telemetry=telemetry)
     m = rctx["metrics"]
 
     # ---------------- EXECUTE: lock + read-for-update the write set --------
     state, lctx = lock_write_set(
         t, state, cfg, layout, serial_h, write_keys=write_keys,
         write_enabled=write_enabled, capacity=capacity, nic=nic,
-        ptable=ptable)
+        ptable=ptable, telemetry=telemetry)
 
     # ---------------- VALIDATE: one-sided re-read of read-set versions -----
     vctx = validate_read_set(t, state, layout, rctx, capacity=capacity,
-                             nic=nic)
+                             nic=nic, telemetry=telemetry)
 
     state, res = _decide_and_finish(
         t, state, serial_h, N=N, B=B, Rd=Rd, Wr=Wr,
         write_enabled=write_enabled, write_values=write_values,
         rctx=rctx, lctx=lctx, vctx=vctx, read_wire=m.wire,
         onesided_success=m.onesided_success, rpc_fallback=m.rpc_fallback,
-        total=m.total, capacity=capacity, nic=nic, rep=rep, ptable=ptable)
+        total=m.total, capacity=capacity, nic=nic, rep=rep, ptable=ptable,
+        telemetry=telemetry)
     return state, cache, res
 
 
@@ -635,7 +647,7 @@ def _bt_leaf_offset_of(layout, slot_idx):
 def _bt_commit_or_abort(t: Transport, state, serial_h, lock_ctx, *,
                         commit_lane, write_values,
                         capacity: Optional[int] = None, nic=None, rep=None,
-                        ptable=None):
+                        ptable=None, telemetry=None):
     """COMMIT/ABORT for btree write sets.  Record layout: key in key_lo, the
     lock TAG in the (otherwise unused) key_hi word, the locked leaf's header
     slot in aux — the owner verifies the exact tag and installs the upsert
@@ -665,7 +677,9 @@ def _bt_commit_or_abort(t: Transport, state, serial_h, lock_ctx, *,
             classes.append(rs.rpc_class(
                 _backup_dest(lock_ctx, rep, i, ptable), bk_recs, serial_h,
                 enabled=bk_en, capacity=capacity))
-    state, results, s_cm = rs.fused_round(t, state, classes, nic=nic)
+    state, results, s_cm = rs.fused_round(t, state, classes, nic=nic,
+                                          telemetry=telemetry,
+                                          phase=T.PH_COMMIT)
     overflow = results[0][1] & lock_ctx["lock_ok"]
     for brep, bovf in results[1:]:
         bst = brep[..., 0]
@@ -702,7 +716,7 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
                           write_values=None, write_enabled=None,
                           scan_enabled=None, capacity: Optional[int] = None,
                           fused: bool = True, nic=None, rep=None,
-                          ptable=None):
+                          ptable=None, telemetry=None):
     """Execute a batch of range-scan transactions over the ordered index,
     one per lane (single shot; see txloop.scan_loop for bounded retry).
 
@@ -750,7 +764,8 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
     # ---- round 1: one-sided reads of the planned leaves -------------------
     buf, ovf1, s1 = osd.remote_read(
         t, state["arena"], dest, bt.leaf_offset(cfg, layout, pleaf),
-        length=cfg.leaf_words, capacity=capacity, enabled=en_f, nic=nic)
+        length=cfg.leaf_words, capacity=capacity, enabled=en_f, nic=nic,
+        telemetry=telemetry, phase=T.PH_READ)
     p1 = bt.parse_leaf(cfg, buf)
     # a position is resolved one-sided iff the image is stable and its
     # immutable low fence matches the plan (stale separators can only MISS
@@ -776,7 +791,9 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
             classes.append(rs.read_class(
                 dest, _bt_leaf_offset_of(layout, bt.header_slot(cfg, pleaf)),
                 length=sl.SLOT_WORDS, enabled=pos_ok))
-        state, results, s2 = rs.fused_round(t, state, classes, nic=nic)
+        state, results, s2 = rs.fused_round(t, state, classes, nic=nic,
+                                            telemetry=telemetry,
+                                            phase=T.PH_LOCK)
         scan_rep, scan_ovf = results[0]
         lrep, lovf = results[1]
         s_fallback = None
@@ -784,10 +801,11 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
         # ---- reference rounds 2 and 3: fallback, then LOCK ----------------
         state, scan_rep, scan_ovf, s_fallback = R.rpc_call(
             t, state, dest, scan_recs, scan_h, capacity=capacity,
-            enabled=need, nic=nic)
+            enabled=need, nic=nic, telemetry=telemetry, phase=T.PH_FALLBACK)
         state, lrep, lovf, s2 = R.rpc_call(
             t, state, lk["node"], lock_recs, serial_h, capacity=capacity,
-            enabled=lk["enabled"], nic=nic)
+            enabled=lk["enabled"], nic=nic, telemetry=telemetry,
+            phase=T.PH_LOCK)
     lctx = _parse_lock_replies(lk, lrep, lovf, N, B, Wr)
 
     # merge the authoritative fallback leaf images over the one-sided reads
@@ -805,13 +823,15 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
         v1 = results[2][0]
         v2, _, s3 = osd.remote_read(
             t, state["arena"], dest, _bt_leaf_offset_of(layout, mslot),
-            length=sl.SLOT_WORDS, enabled=rpc_ok, nic=nic)
+            length=sl.SLOT_WORDS, enabled=rpc_ok, nic=nic,
+            telemetry=telemetry, phase=T.PH_VALIDATE)
         vbuf = jnp.where(pos_ok[..., None], v1, v2)
         vctx = _validate_from_bytes(rctx, vbuf, jnp.zeros((N, B * S), bool))
         vctx["wire"] = s3
     else:
         vctx = validate_read_set(t, state, layout, rctx, capacity=capacity,
-                                 nic=nic, offset_of=_bt_leaf_offset_of)
+                                 nic=nic, offset_of=_bt_leaf_offset_of,
+                                 telemetry=telemetry)
     read_wire = s1 if s_fallback is None else s1 + s_fallback
     lctx["wire"] = s2
 
@@ -830,7 +850,7 @@ def run_scan_transactions(t: Transport, state, cfg: bt.BTreeConfig, layout, *,
     state, cctx = _bt_commit_or_abort(
         t, state, serial_h, lctx, commit_lane=commit_lane,
         write_values=write_values, capacity=capacity, nic=nic, rep=rep,
-        ptable=ptable)
+        ptable=ptable, telemetry=telemetry)
 
     has_writes = jnp.any(write_enabled, axis=-1)
     commit_delivered = ~jnp.any(cctx["overflow"].reshape(N, B, Wr), axis=-1)

@@ -34,6 +34,7 @@ from jax import lax
 from repro.core import hybrid as hy
 from repro.core import placement as pl
 from repro.core import slots as sl
+from repro.core import telemetry as T
 from repro.core import tx as txm
 from repro.core.datastructs import hashtable as ht
 from repro.core.transport import Transport
@@ -68,7 +69,8 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             read_keys, write_keys, write_values, read_enabled=None,
             write_enabled=None, cache=None, use_onesided: bool = True,
             capacity: Optional[int] = None, max_rounds: int = 4, key=None,
-            fused: bool = True, nic=None, rep=None, ptable=None, pcfg=None):
+            fused: bool = True, nic=None, rep=None, ptable=None, pcfg=None,
+            telemetry: Optional[T.TelemetryConfig] = None):
     """Run a batch of transactions to convergence (bounded by max_rounds).
 
     Arguments mirror tx.run_transactions; additionally:
@@ -95,8 +97,14 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                   Epoch-stable rounds never refresh — the read is
                   enabled-gated off, so the steady-state round-trip schedule
                   is EXACTLY the pre-placement one (bench-gated).
+      telemetry:  optional telemetry.TelemetryConfig — thread a flight
+                  recorder through every exchange round (one event per fused
+                  round + one summary per protocol round) and accumulate the
+                  modeled per-lane latency.  ``None`` (default) is
+                  bit-identical and round-identical to a recorder-free build.
 
-    Returns (state, cache, TxLoopResult).
+    Returns (state, cache, TxLoopResult) — plus a ``telemetry.TelemetryOut``
+    as a fourth element when ``telemetry`` is enabled.
     """
     N, B, Rd = read_keys.shape[:3]
     if read_enabled is None:
@@ -108,11 +116,16 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
     use_pl = ptable is not None
     if use_pl and pcfg is None:
         raise ValueError("tx_loop: ptable requires pcfg (PlacementConfig)")
+    use_tel = telemetry is not None
     ident = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None], (N, B))
 
     def body(carry, rnd):
         state, cache, ptab, stale_in, done, commit_round, rfound, rvals, \
-            key = carry
+            key, tb, lat = carry
+        rec = T.Recorder(telemetry, tb) if use_tel else None
+        if use_tel:
+            rec.set_round(rnd)
+            n0 = rec.buf.n
         key, sub = jax.random.split(key)
         perm = jax.vmap(lambda k: jax.random.permutation(k, B))(
             jax.random.split(sub, N)).astype(jnp.int32)
@@ -131,7 +144,8 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         if use_pl:
             want = (rnd > 0) & stale_in
             ptab_new, s_r = pl.refresh_table(t, state, layout, pcfg, ptab,
-                                             enabled=want, nic=nic)
+                                             enabled=want, nic=nic,
+                                             telemetry=rec)
             ptab = jax.tree.map(
                 lambda new, old: jnp.where(want, new, old), ptab_new, ptab)
             s_ref = jax.tree.map(
@@ -145,7 +159,7 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
             write_enabled=p(write_enabled) & act_p[..., None],
             cache=cache, use_onesided=use_onesided, capacity=capacity,
             fused=fused, nic=nic, rep=rep,
-            ptable=ptab if use_pl else None)
+            ptable=ptab if use_pl else None, telemetry=rec)
         # fully-masked (parked) lanes report committed=True — gate on active
         newly = u(res.committed) & active
         done = done | newly
@@ -167,8 +181,19 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
                                      m.total, m.wire + s_ref),
             round_trips=res.round_trips + s_ref.round_trips,
         )
+        if use_tel:
+            # every lane still live this round accumulates the round's
+            # modeled latency; the summary row carries the abort vector
+            lat = lat + rec.round_cost_us(n0) * active.astype(jnp.float32)
+            rec.summary(committed=stats["committed"],
+                        attempts=stats["attempts"],
+                        abort_lock=stats["abort_lock"],
+                        abort_validate=stats["abort_validate"],
+                        abort_overflow=stats["abort_overflow"],
+                        abort_stale=stats["abort_stale"])
+            tb = rec.buf
         return (state, cache, ptab, stale_out, done, commit_round, rfound,
-                rvals, key), stats
+                rvals, key, tb, lat), stats
 
     init = (
         state, cache,
@@ -179,12 +204,15 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         jnp.zeros(read_enabled.shape, bool),
         jnp.zeros(read_enabled.shape + (sl.VALUE_WORDS,), jnp.uint32),
         key,
+        (T.make_buffer(t.n_nodes, T.loop_capacity(telemetry, max_rounds))
+         if use_tel else jnp.zeros(())),
+        jnp.zeros((N, B), jnp.float32) if use_tel else jnp.zeros(()),
     )
-    (state, cache, _, _, done, commit_round, rfound, rvals, _), ys = lax.scan(
-        body, init, jnp.arange(max_rounds))
+    (state, cache, _, _, done, commit_round, rfound, rvals, _, tb,
+     lat), ys = lax.scan(body, init, jnp.arange(max_rounds))
 
     metrics = jax.tree.map(lambda x: jnp.sum(x, axis=0), ys["metrics"])
-    return state, cache, TxLoopResult(
+    result = TxLoopResult(
         committed=done,
         commit_round=commit_round,
         read_found=rfound,
@@ -199,6 +227,10 @@ def tx_loop(t: Transport, state, cfg: ht.HashTableConfig, layout, *,
         metrics=metrics,
         round_trips=jnp.sum(ys["round_trips"]),
     )
+    if use_tel:
+        return state, cache, result, T.TelemetryOut(trace=tb,
+                                                    lane_latency_us=lat)
+    return state, cache, result
 
 
 # ===========================================================================
@@ -240,7 +272,8 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
               scan_enabled=None, write_enabled=None,
               capacity: Optional[int] = None, max_rounds: int = 4, key=None,
               fused: bool = True, nic=None, rep=None, refresh: bool = True,
-              ptable=None, pcfg=None):
+              ptable=None, pcfg=None,
+              telemetry: Optional[T.TelemetryConfig] = None):
     """Run a batch of range-scan transactions to convergence.
 
     Arguments mirror tx.run_scan_transactions (cfg is a btree.BTreeConfig);
@@ -255,7 +288,10 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
                   stale-route aborts refreshes it first (enabled-gated read,
                   zero wire on epoch-stable rounds — same idiom as the
                   separator-directory refresh above).
-    Returns (state, meta, ScanLoopResult)."""
+      telemetry:  optional telemetry.TelemetryConfig — same flight recorder
+                  as tx_loop's (``None`` = bit-identical, round-identical).
+    Returns (state, meta, ScanLoopResult) — plus a ``telemetry.TelemetryOut``
+    as a fourth element when ``telemetry`` is enabled."""
     from repro.core.datastructs import btree as bt
 
     N, B = scan_lo.shape
@@ -273,15 +309,34 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
     use_pl = ptable is not None
     if use_pl and pcfg is None:
         raise ValueError("scan_loop: ptable requires pcfg (PlacementConfig)")
+    use_tel = telemetry is not None
+    tb0 = (T.make_buffer(t.n_nodes, T.loop_capacity(telemetry, max_rounds))
+           if use_tel else jnp.zeros(()))
     init_wire = hy.WireStats.zero()
     if meta is None:
         meta, s0 = bt.refresh_meta(t, state, cfg, layout, nic=nic)
         init_wire = init_wire + s0
+        if use_tel:
+            # up-front directory fetch: one event stamped "round -1" (per-dest
+            # tails: the refresh is a uniform all-to-all, scalar split evenly)
+            rec0 = T.Recorder(telemetry, tb0)
+            rec0.set_round(-1)
+            nd = t.n_nodes
+            rec0.record(
+                T.PH_REFRESH, s0,
+                per_dest_msgs=jnp.full((nd,), s0.messages / nd),
+                per_dest_bytes=jnp.full(
+                    (nd,), (s0.req_bytes + s0.reply_bytes) / nd))
+            tb0 = rec0.buf
     ident = jnp.broadcast_to(jnp.arange(B, dtype=jnp.int32)[None], (N, B))
 
     def body(carry, rnd):
         (state, meta, ptab, stale_in, done, trunc, commit_round, skeys, svals,
-         smask, key) = carry
+         smask, key, tb, lat) = carry
+        rec = T.Recorder(telemetry, tb) if use_tel else None
+        if use_tel:
+            rec.set_round(rnd)
+            n0 = rec.buf.n
         key, sub = jax.random.split(key)
         perm = jax.vmap(lambda k: jax.random.permutation(k, B))(
             jax.random.split(sub, N)).astype(jnp.int32)
@@ -300,12 +355,25 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
                 lambda new, old: jnp.where(use, new, old), meta_new, meta)
             s_ref = jax.tree.map(
                 lambda x: jnp.where(use, x, jnp.zeros_like(x)), s_r)
+            if use_tel:
+                # the directory read itself is issued unconditionally but
+                # ACCOUNTED only on retry rounds — record the gated view so
+                # the trace matches the wire accounting exactly; the refresh
+                # is a uniform all-to-all (every node reads every node), so
+                # the per-dest tails are the scalar split evenly
+                nd = t.n_nodes
+                rec.record(
+                    T.PH_REFRESH, s_ref,
+                    per_dest_msgs=jnp.full((nd,), s_ref.messages / nd),
+                    per_dest_bytes=jnp.full(
+                        (nd,), (s_ref.req_bytes + s_ref.reply_bytes) / nd))
         if use_pl:
             # placement-table refresh, gated exactly like tx_loop's: only a
             # retry round entered with stale-route aborts pays the read
             want = (rnd > 0) & stale_in
             ptab_new, s_p = pl.refresh_table(t, state, layout, pcfg, ptab,
-                                             enabled=want, nic=nic)
+                                             enabled=want, nic=nic,
+                                             telemetry=rec)
             ptab = jax.tree.map(
                 lambda new, old: jnp.where(want, new, old), ptab_new, ptab)
             s_ref = s_ref + jax.tree.map(
@@ -318,7 +386,7 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
             scan_enabled=p(scan_enabled) & act_p,
             write_enabled=p(write_enabled) & act_p[..., None],
             capacity=capacity, fused=fused, nic=nic, rep=rep,
-            ptable=ptab if use_pl else None)
+            ptable=ptab if use_pl else None, telemetry=rec)
         newly = u(res.committed) & active
         newly_trunc = u(res.truncated) & active
         done = done | newly | newly_trunc           # truncation cannot retry
@@ -343,8 +411,17 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
                                      m.total, m.wire + s_ref),
             round_trips=res.round_trips + s_ref.round_trips,
         )
+        if use_tel:
+            lat = lat + rec.round_cost_us(n0) * active.astype(jnp.float32)
+            rec.summary(committed=stats["committed"],
+                        attempts=stats["attempts"],
+                        abort_lock=stats["abort_lock"],
+                        abort_validate=stats["abort_validate"],
+                        abort_overflow=stats["abort_overflow"],
+                        abort_stale=stats["abort_stale"])
+            tb = rec.buf
         return (state, meta, ptab, stale_out, done, trunc, commit_round,
-                skeys, svals, smask, key), stats
+                skeys, svals, smask, key, tb, lat), stats
 
     init = (
         state, meta,
@@ -357,14 +434,16 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
         jnp.zeros((N, B, S, LW, sl.VALUE_WORDS), jnp.uint32),
         jnp.zeros((N, B, S, LW), bool),
         key,
+        tb0,
+        jnp.zeros((N, B), jnp.float32) if use_tel else jnp.zeros(()),
     )
     (state, meta, _, _, done, trunc, commit_round, skeys, svals, smask,
-     _), ys = lax.scan(body, init, jnp.arange(max_rounds))
+     _, tb, lat), ys = lax.scan(body, init, jnp.arange(max_rounds))
 
     metrics = jax.tree.map(lambda x: jnp.sum(x, axis=0), ys["metrics"])
     metrics = hy.HybridMetrics(metrics.onesided_success, metrics.rpc_fallback,
                                metrics.total, metrics.wire + init_wire)
-    return state, meta, ScanLoopResult(
+    result = ScanLoopResult(
         committed=done & ~trunc,
         commit_round=commit_round,
         truncated=trunc,
@@ -379,3 +458,7 @@ def scan_loop(t: Transport, state, cfg, layout, *, scan_lo, scan_hi,
         metrics=metrics,
         round_trips=jnp.sum(ys["round_trips"]) + init_wire.round_trips,
     )
+    if use_tel:
+        return state, meta, result, T.TelemetryOut(trace=tb,
+                                                   lane_latency_us=lat)
+    return state, meta, result

@@ -1,0 +1,222 @@
+"""Flight-recorder telemetry (core/telemetry.py).
+
+The load-bearing property: ``telemetry=None`` is bit-identical to a
+recorder-free build, and ``telemetry=on`` only ever READS protocol values —
+committed state, abort causes and WireStats must be bit-identical either
+way, including under send-queue back-pressure and replication fan-out.
+Plus: the WireStats field-driven zero()/__add__ regression, the per-dest
+wire tails' exact reconciliation with the scalar accounting, drop-on-full
+buffer saturation, and the export layers.
+"""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import rpc as R
+from repro.core import telemetry as T
+from repro.core import transport as tp
+from repro.core import txloop as txl
+from repro.core import wireproto as W
+from repro.core.datastructs import btree as bt
+from repro.core.datastructs import hashtable as ht
+from repro.core.replication import ReplicaConfig
+from repro.core.transport import SimTransport, WireStats
+from repro.testing.workloads import distinct_uint32, value_for, zipf_write_keys
+
+N = 4
+
+
+# ---------------------------------------------------------------------------
+# WireStats: field-driven zero()/__add__ (regression for the 7-positional-
+# zeros construction that silently misassigned any newly added field)
+# ---------------------------------------------------------------------------
+def test_wirestats_zero_add_roundtrip_every_field():
+    fields = dataclasses.fields(WireStats)
+    z = WireStats.zero() + WireStats.zero()
+    for f in fields:
+        assert float(getattr(z, f.name)) == 0.0, f"zero()+zero() leaked {f.name}"
+    # distinct value per field: addition must round-trip each one by NAME
+    w = WireStats(**{f.name: jnp.float32(i + 1.0)
+                     for i, f in enumerate(fields)})
+    s = w + WireStats.zero()
+    for i, f in enumerate(fields):
+        assert float(getattr(s, f.name)) == i + 1.0, \
+            f"zero() + w misassigned {f.name}"
+    d = w + w
+    for i, f in enumerate(fields):
+        assert float(getattr(d, f.name)) == 2.0 * (i + 1.0)
+
+
+def test_per_dest_wire_reconciles_with_scalar_accounting():
+    rng = np.random.RandomState(3)
+    n_src, n_dst = 4, 5
+    masks = [jnp.asarray(rng.rand(n_src, n_dst, c) < 0.4)
+             for c in (3, 2)]
+    req_w, rep_w = [4, 7], [2, 0]
+    msgs, byts = tp.per_dest_wire(masks, req_w, rep_w)
+    assert msgs.shape == (n_dst,) and byts.shape == (n_dst,)
+    scalar = tp.wire_for_classes(masks, req_w, rep_w)
+    assert float(jnp.sum(msgs)) == float(scalar.messages)
+    assert float(jnp.sum(byts)) == float(scalar.total_bytes)
+
+
+# ---------------------------------------------------------------------------
+# tx_loop / scan_loop equivalence suite: telemetry on vs None bit-identical
+# ---------------------------------------------------------------------------
+def _ht_cluster(seed=1, B=8):
+    cfg = ht.HashTableConfig(n_nodes=N, n_buckets=64, bucket_width=2,
+                             n_overflow=64, max_chain=6)
+    layout = ht.build_layout(cfg)
+    t = SimTransport(N)
+    state = ht.init_cluster_state(cfg)
+    hot, klo, khi = zipf_write_keys(N, B, seed=seed)
+    h = ht.make_rpc_handler(cfg, layout)
+    kl = jnp.tile(hot[None], (N, 1))
+    kh = jnp.zeros((N, hot.shape[0]), jnp.uint32)
+    node, _, _ = ht.lookup_start(cfg, layout, kl, kh)
+    state, rep, _, _ = R.rpc_call(
+        t, state, node, ht.make_record(R.OP_INSERT, kl, kh,
+                                       value=value_for(kl)), h)
+    assert np.all(np.asarray(rep[..., 0]) == R.ST_OK)
+    rk = jnp.zeros((N, B, 0, 2), jnp.uint32)
+    wk = jnp.stack([klo, khi], -1)
+    wv = value_for(klo + jnp.uint32(5))
+    return cfg, layout, t, state, rk, wk, wv
+
+
+def _assert_equiv(off, on):
+    for a, b in zip(jax.tree.leaves(off), jax.tree.leaves(on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("capacity,rep_f", [(None, 0), (2, 0), (None, 1)],
+                         ids=["plain", "backpressure", "f1"])
+def test_tx_loop_telemetry_equivalence(capacity, rep_f):
+    cfg, layout, t, state, rk, wk, wv = _ht_cluster()
+    rep = ReplicaConfig(N, rep_f) if rep_f else None
+    kw = dict(read_keys=rk, write_keys=wk, write_values=wv, max_rounds=5,
+              capacity=capacity, rep=rep)
+    s0, c0, r0 = txl.tx_loop(t, state, cfg, layout, **kw)
+    s1, c1, r1, tel = txl.tx_loop(t, state, cfg, layout, **kw,
+                                  telemetry=T.TelemetryConfig())
+    # committed state, abort causes and WireStats all bit-identical
+    _assert_equiv((s0, r0), (s1, r1))
+    assert int(tel.trace.n) > 0 and int(tel.trace.dropped) == 0
+    lat = np.asarray(tel.lane_latency_us)
+    assert lat.shape == np.asarray(r1.committed).shape
+    assert np.isfinite(lat).all() and (lat > 0).all()
+
+
+def _bt_cluster(seed=17, B=6):
+    cfg = bt.BTreeConfig(n_nodes=N, n_leaves=32, leaf_width=4,
+                         max_scan_leaves=4)
+    layout = bt.build_layout(cfg)
+    t = SimTransport(N)
+    state = bt.init_cluster_state(cfg)
+    rng = np.random.RandomState(seed)
+    allk = np.sort(distinct_uint32(rng, N * 12).astype(np.uint64))
+    keys = jnp.asarray(allk.reshape(N, 12), jnp.uint32)
+    h = bt.make_rpc_handler(cfg, layout)
+    state, rep, _, _ = R.rpc_call(
+        t, state, bt.home_of(cfg, keys),
+        bt.make_record(W.OP_BT_INSERT, keys, jnp.zeros_like(keys),
+                       value=value_for(keys)), h)
+    assert (np.asarray(rep[..., 0]) == W.ST_OK).all()
+    lo_i = rng.randint(0, N * 12 - 6, size=(N, B))
+    lo = jnp.asarray(allk[lo_i], jnp.uint32)
+    hi = jnp.asarray(allk[lo_i + 5], jnp.uint32)
+    wk = jnp.asarray(allk[rng.randint(0, N * 12, size=(N, B, 1))], jnp.uint32)
+    wv = value_for(wk + jnp.uint32(9))
+    return cfg, layout, t, state, lo, hi, wk, wv
+
+
+def test_scan_loop_telemetry_equivalence():
+    cfg, layout, t, state, lo, hi, wk, wv = _bt_cluster()
+    kw = dict(scan_lo=lo, scan_hi=hi, write_keys=wk, write_values=wv,
+              max_rounds=3)
+    s0, m0, r0 = txl.scan_loop(t, state, cfg, layout, **kw)
+    s1, m1, r1, tel = txl.scan_loop(t, state, cfg, layout, **kw,
+                                    telemetry=T.TelemetryConfig())
+    _assert_equiv((s0, m0, r0), (s1, m1, r1))
+    ev = T.events(tel.trace)
+    # the up-front directory fetch is stamped round -1
+    assert int((ev[:, T.EV_ROUND] < 0).sum()) == 1
+
+
+# ---------------------------------------------------------------------------
+# Trace content: schema invariants, per-dest reconciliation, saturation
+# ---------------------------------------------------------------------------
+def test_trace_rows_reconcile_and_price():
+    cfg, layout, t, state, rk, wk, wv = _ht_cluster()
+    _, _, res, tel = txl.tx_loop(t, state, cfg, layout, read_keys=rk,
+                                 write_keys=wk, write_values=wv, max_rounds=4,
+                                 telemetry=T.TelemetryConfig())
+    ev = T.events(tel.trace)
+    assert ev.shape[1] == T.EV_WORDS + 2 * N
+    phases = set(int(r[T.EV_PHASE]) for r in ev)
+    assert {T.PH_READ, T.PH_LOCK, T.PH_COMMIT, T.PH_SUMMARY} <= phases
+    # per-row: the per-dest msgs tail sums to the scalar column exactly
+    np.testing.assert_allclose(ev[:, T.EV_WORDS:T.EV_WORDS + N].sum(1),
+                               ev[:, T.EV_MSGS], rtol=1e-6)
+    # ...and totals match the loop's aggregated WireStats
+    assert ev[:, T.EV_MSGS].sum() == pytest.approx(
+        float(res.metrics.wire.messages))
+    assert ev[:, T.EV_WORDS + N:].sum() == pytest.approx(
+        float(res.metrics.wire.total_bytes))
+    # summary rows carry the abort vector the loop reports
+    summ = ev[ev[:, T.EV_PHASE] == T.PH_SUMMARY]
+    assert summ[:, T.EV_COMMITTED].sum() == pytest.approx(
+        float(jnp.sum(res.round_committed)))
+    assert summ[:, T.EV_AB_LOCK].sum() == pytest.approx(
+        float(jnp.sum(res.round_abort_lock)))
+
+
+def test_trace_buffer_saturates_without_error():
+    cfg, layout, t, state, rk, wk, wv = _ht_cluster()
+    s0, _, r0 = txl.tx_loop(t, state, cfg, layout, read_keys=rk,
+                            write_keys=wk, write_values=wv, max_rounds=4)
+    s1, _, r1, tel = txl.tx_loop(t, state, cfg, layout, read_keys=rk,
+                                 write_keys=wk, write_values=wv, max_rounds=4,
+                                 telemetry=T.TelemetryConfig(capacity=3))
+    # a full buffer drops events — it never perturbs the protocol
+    _assert_equiv((s0, r0), (s1, r1))
+    assert int(tel.trace.n) == 3 and int(tel.trace.dropped) > 0
+
+
+def test_export_trace_and_summaries():
+    cfg, layout, t, state, rk, wk, wv = _ht_cluster()
+    _, _, res, tel = txl.tx_loop(t, state, cfg, layout, read_keys=rk,
+                                 write_keys=wk, write_values=wv, max_rounds=4,
+                                 telemetry=T.TelemetryConfig())
+    doc = T.export_trace(tel.trace)
+    json.dumps(doc)                       # Perfetto-loadable == valid JSON
+    kinds = {e["ph"] for e in doc["traceEvents"]}
+    assert kinds == {"M", "X", "C"}
+    assert doc["otherData"]["dropped"] == 0
+    ts = [e["ts"] for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert ts == sorted(ts), "modeled timeline must be monotone"
+    s = T.summarize([1.0, 2.0, 3.0, 4.0])
+    assert s["p50"] == pytest.approx(2.5) and s["mean"] == pytest.approx(2.5)
+    assert s["p50"] <= s["p90"] <= s["p99"]
+    assert all(np.isnan(v) for v in T.summarize([]).values())
+    paths = T.latency_by_path(tel.lane_latency_us, res.committed,
+                              res.commit_round)
+    assert "committed" in paths
+    for grp in paths.values():
+        assert grp["p50"] <= grp["p99"]
+
+
+def test_metrics_registry():
+    reg = T.MetricsRegistry()
+    reg.incr("a.count")
+    reg.incr("a.count", 2.5)
+    reg.set("b", 7)
+    reg.observe("lat_us", [1.0, 9.0])
+    d = reg.as_dict()
+    assert d["a.count"] == 3.5 and d["b"] == 7.0
+    assert d["lat_us.p50"] == pytest.approx(5.0)
+    assert reg.get("missing", 1.25) == 1.25
